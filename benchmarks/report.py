@@ -1,0 +1,112 @@
+"""Render EXPERIMENTS.md §Dry-run / §Roofline tables from results/dryrun.
+
+    PYTHONPATH=src python -m benchmarks.report [--dir results/dryrun]
+"""
+
+import argparse
+import json
+from pathlib import Path
+
+
+def fmt_bytes(b):
+    if b is None:
+        return "-"
+    for unit in ("B", "KB", "MB", "GB", "TB"):
+        if abs(b) < 1024:
+            return f"{b:.1f}{unit}"
+        b /= 1024
+    return f"{b:.1f}PB"
+
+
+def fmt_s(x):
+    if x is None:
+        return "-"
+    return f"{x*1e3:.2f}" if x < 10 else f"{x*1e3:.0f}"
+
+
+def load(dir_):
+    recs = []
+    for p in sorted(Path(dir_).glob("*.json")):
+        try:
+            recs.append(json.loads(p.read_text()))
+        except Exception:
+            pass
+    return recs
+
+
+def roofline_table(recs, mesh="single"):
+    rows = []
+    head = ("| cell | FLOPs/dev | bytes/dev | coll bytes/dev | compute ms |"
+            " memory ms | coll ms | dominant | useful | frac |")
+    sep = "|" + "---|" * 10
+    rows.append(head)
+    rows.append(sep)
+    for r in recs:
+        if r.get("mesh") != mesh or "error" in r:
+            continue
+        if "skipped" in r:
+            rows.append(f"| {r['arch']} × {r['shape']} | — | — | — | — | — |"
+                        f" — | skipped | — | — |")
+            continue
+        coll = r.get("collectives", {})
+        cb = sum(v for k, v in coll.items()
+                 if k in ("all-gather", "all-reduce", "reduce-scatter",
+                          "all-to-all", "collective-permute"))
+        dom = r.get("dominant", "?")
+        dom_s = {"compute": r.get("compute_s"), "memory": r.get("memory_s"),
+                 "collective": r.get("collective_s")}.get(dom)
+        tot = (r.get("compute_s") or 0)
+        frac = (r.get("compute_s") / dom_s) if dom_s else None
+        ur = r.get("useful_ratio")
+        rows.append(
+            f"| {r['arch']} × {r['shape']} | {r.get('flops_per_device',0):.3g}"
+            f" | {fmt_bytes(r.get('bytes_per_device'))}"
+            f" | {fmt_bytes(cb)}"
+            f" | {fmt_s(r.get('compute_s'))} | {fmt_s(r.get('memory_s'))}"
+            f" | {fmt_s(r.get('collective_s'))} | {dom}"
+            f" | {f'{ur:.2f}' if ur else '-'}"
+            f" | {f'{frac:.2f}' if frac else '-'} |")
+    return "\n".join(rows)
+
+
+def dryrun_table(recs):
+    rows = ["| cell | mesh | devices | compile s | args/dev | temps/dev |"
+            " collectives (#) | status |", "|" + "---|" * 8]
+    for r in recs:
+        if "skipped" in r:
+            rows.append(f"| {r['arch']} × {r['shape']} | {r['mesh']} | - |"
+                        f" - | - | - | - | SKIP ({r['skipped'][:40]}…) |")
+            continue
+        if "error" in r:
+            rows.append(f"| {r['arch']} × {r['shape']} | {r['mesh']} | - |"
+                        f" - | - | - | - | FAIL {r['error'][:60]} |")
+            continue
+        ma = r.get("memory_analysis", {})
+        rows.append(
+            f"| {r['arch']} × {r['shape']} | {r['mesh']} | {r['n_devices']}"
+            f" | {r.get('compile_s', 0):.0f}"
+            f" | {fmt_bytes(ma.get('argument_size_in_bytes'))}"
+            f" | {fmt_bytes(ma.get('temp_size_in_bytes'))}"
+            f" | {r.get('collectives', {}).get('count', '-')}"
+            f" | OK |")
+    return "\n".join(rows)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="results/dryrun")
+    ap.add_argument("--section", default="all",
+                    choices=["all", "roofline", "dryrun"])
+    args = ap.parse_args()
+    recs = load(args.dir)
+    if args.section in ("all", "dryrun"):
+        print("### Dry-run status (all cells)\n")
+        print(dryrun_table(recs))
+        print()
+    if args.section in ("all", "roofline"):
+        print("### Roofline (single-pod, per device)\n")
+        print(roofline_table(recs, "single"))
+
+
+if __name__ == "__main__":
+    main()

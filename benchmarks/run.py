@@ -1,0 +1,189 @@
+"""Benchmark harness — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.  Paper mapping:
+
+- fig11_d1_versions     : Basic vs Anticipation vs budget sweep for D1
+- fig12_step_breakdown  : per-stage DDMS times (order/gradient/extract/
+                          D0/D2/D1), strong-scaling shape
+- fig13_strong_scaling  : DDMS blocks 1..8, fixed size (efficiency)
+- fig13_weak_scaling    : size grows with block count
+- fig14_dms_vs_ddms     : single-node DMS vs DDMS(4 blocks)
+- fig15_vs_dipha        : DDMS vs boundary-matrix reduction (the DIPHA
+                          algorithm core, clearing-optimized)
+- gradient_throughput   : lower-star gradient vertices/s (jnp jit + Pallas)
+- lm_train_step         : smoke-model tokens/s (framework side)
+
+Sizes are scaled to CPU-minutes; the ratios (speedups, efficiencies,
+round counts) are the observables the paper's figures report.  The 512-chip
+numbers live in EXPERIMENTS.md §Dry-run/§Roofline (compiled artifacts, not
+wall clock).
+"""
+
+import time
+
+import numpy as np
+
+from repro.core.ddms import compute_ddms_sim
+from repro.core.dms import compute_dms
+from repro.core.grid import Grid, vertex_order
+from repro.core.reduction import compute_oracle
+from repro.fields import make_field
+
+
+def _row(name, us, derived=""):
+    print(f"{name},{us:.1f},{derived}", flush=True)
+
+
+def _time(fn, reps=1):
+    t0 = time.perf_counter()
+    out = None
+    for _ in range(reps):
+        out = fn()
+    return (time.perf_counter() - t0) / reps * 1e6, out
+
+
+DIMS = (16, 16, 16)
+
+
+def fig11_d1_versions():
+    f = make_field("backpack", DIMS, seed=1)
+    g = Grid.of(*DIMS)
+    for name, kw in [("basic", dict(anticipation=False)),
+                     ("anticipation_b1", dict(budget=1)),
+                     ("anticipation_b16", dict(budget=16)),
+                     ("anticipation_auto", dict())]:
+        us, res = _time(lambda kw=kw: compute_ddms_sim(
+            g, f, n_blocks=4, gradient_backend="jax", **kw))
+        st = res.stats
+        _row(f"fig11_{name}", us,
+             f"d1_rounds={st.get('d1_rounds')};"
+             f"token_hops={st.get('d1_token_hops')};"
+             f"expansions={st.get('d1_expansions')}")
+
+
+def fig12_step_breakdown():
+    f = make_field("backpack", DIMS, seed=1)
+    g = Grid.of(*DIMS)
+    res = compute_ddms_sim(g, f, n_blocks=4, gradient_backend="jax")
+    stages = ("order", "gradient", "extract_sort", "d0", "d_top", "d1")
+    tot = sum(res.stats[k] for k in stages)
+    for k in stages:
+        _row(f"fig12_{k}", res.stats[k] * 1e6,
+             f"frac={res.stats[k] / tot:.2f}")
+
+
+def fig13_strong_scaling():
+    f = make_field("wavelet", DIMS, seed=2)
+    g = Grid.of(*DIMS)
+    base = None
+    for nb in (1, 2, 4, 8):
+        us, res = _time(lambda nb=nb: compute_ddms_sim(
+            g, f, n_blocks=nb, gradient_backend="jax"))
+        base = base or us
+        _row(f"fig13_strong_nb{nb}", us,
+             f"rel={base / us:.2f};d1_rounds={res.stats.get('d1_rounds')}")
+
+
+def fig13_weak_scaling():
+    for nb, nz in ((1, 8), (2, 16), (4, 32)):
+        dims = (12, 12, nz)
+        f = make_field("magnetic", dims, seed=3)
+        g = Grid.of(*dims)
+        us, res = _time(lambda g=g, f=f, nb=nb: compute_ddms_sim(
+            g, f, n_blocks=nb, gradient_backend="jax"))
+        _row(f"fig13_weak_nb{nb}", us,
+             f"nv={g.nv};ncrit={res.stats['n_critical']}")
+
+
+def fig14_dms_vs_ddms():
+    for name in ("wavelet", "random", "isabel"):
+        f = make_field(name, DIMS, seed=4)
+        g = Grid.of(*DIMS)
+        us_dms, _ = _time(lambda f=f, g=g: compute_dms(
+            g, f, gradient_backend="jax"))
+        us_ddms, _ = _time(lambda f=f, g=g: compute_ddms_sim(
+            g, f, n_blocks=4, gradient_backend="jax"))
+        _row(f"fig14_{name}", us_ddms,
+             f"dms_us={us_dms:.0f};overhead={us_ddms / us_dms:.2f}")
+
+
+def fig15_vs_dipha():
+    dims = (8, 8, 8)  # reduction is the bottleneck; the point is the gap
+    for name in ("wavelet", "random"):
+        f = make_field(name, dims, seed=5)
+        g = Grid.of(*dims)
+        us_red, _ = _time(lambda f=f, g=g: compute_oracle(g, f, twist=True))
+        us_ddms, _ = _time(lambda f=f, g=g: compute_ddms_sim(
+            g, f, n_blocks=4, gradient_backend="jax"))
+        _row(f"fig15_{name}", us_ddms,
+             f"dipha_like_us={us_red:.0f};speedup={us_red / us_ddms:.1f}x")
+
+
+def gradient_throughput():
+    import jax
+    import jax.numpy as jnp
+    from repro.kernels import ops
+    dims = (32, 32, 32)
+    f = make_field("random", dims, seed=6)
+    g = Grid.of(*dims)
+    o = jnp.asarray(np.asarray(vertex_order(f.astype(np.float64))))
+
+    def fn():
+        return jax.block_until_ready(
+            ops.lower_star_gradient(g, o, backend="jax"))
+
+    fn()  # compile
+    us, _ = _time(fn, reps=3)
+    _row(f"gradient_jax_{dims[0]}cubed", us,
+         f"vertices_per_s={g.nv / (us / 1e6):.0f}")
+
+    dims_p = (16, 16, 8)
+    gp = Grid.of(*dims_p)
+    fp = make_field("random", dims_p, seed=6)
+    op_ = jnp.asarray(np.asarray(vertex_order(fp.astype(np.float64))))
+
+    def fnp():
+        return jax.block_until_ready(
+            ops.lower_star_gradient(gp, op_, backend="pallas"))
+
+    fnp()
+    us, _ = _time(fnp)
+    _row("gradient_pallas_interp_16x16x8", us,
+         f"vertices_per_s={gp.nv / (us / 1e6):.0f};interpret_mode=1")
+
+
+def lm_train_step():
+    import jax
+    from repro.configs import smoke_config
+    from repro.data.pipeline import DataConfig, batch_at
+    from repro.models import transformer as T
+    from repro.train.optimizer import OptConfig, init_opt_state
+    from repro.train.train_step import StepConfig, make_train_step
+    cfg = smoke_config("minitron-4b")
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    opt = init_opt_state(params)
+    dc = DataConfig(cfg.vocab, batch=8, seq=64)
+    step = jax.jit(make_train_step(cfg, OptConfig(),
+                                   StepConfig(remat=False)))
+    b = batch_at(dc, 0)
+    params, opt, _ = step(params, opt, b)  # compile
+    us, _ = _time(lambda: jax.block_until_ready(
+        step(params, opt, batch_at(dc, 1))[2]["loss"]), reps=3)
+    _row("lm_train_step_smoke", us,
+         f"tokens_per_s={8 * 64 / (us / 1e6):.0f}")
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    fig11_d1_versions()
+    fig12_step_breakdown()
+    fig13_strong_scaling()
+    fig13_weak_scaling()
+    fig14_dms_vs_ddms()
+    fig15_vs_dipha()
+    gradient_throughput()
+    lm_train_step()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,96 @@
+"""Inject generated tables + perf log into EXPERIMENTS.md.
+
+    PYTHONPATH=src python scripts/finalize_experiments.py
+"""
+
+import io
+import json
+import re
+import sys
+from contextlib import redirect_stdout
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+from benchmarks.report import dryrun_table, load, roofline_table  # noqa
+
+
+def perf_log(recs):
+    """Render the §Perf hypothesis->change->measure table from tagged
+    variants vs their baselines."""
+    # baselines = files with exactly arch__shape__mesh (no tag part)
+    by_key = {}
+    base_dir = Path("results/dryrun")
+    for p in base_dir.glob("*.json"):
+        if len(p.stem.split("__")) != 3:
+            continue
+        try:
+            r = json.loads(p.read_text())
+        except Exception:
+            continue
+        if "error" in r or "skipped" in r:
+            continue
+        by_key[(r["arch"], r["shape"], r["mesh"])] = r
+    rows = []
+    for p in sorted(list(base_dir.glob("*__*__single__*.json"))
+                    + list(base_dir.glob("*__*__multi__*.json"))):
+        try:
+            r = json.loads(p.read_text())
+        except Exception:
+            continue
+        if "error" in r:
+            rows.append(f"- `{p.stem}` FAILED: {r['error'][:100]}")
+            continue
+        tag = p.stem.split("__")[-1]
+        base = by_key.get((r["arch"], r["shape"],
+                           p.stem.split("__")[2]))
+        if base is None:
+            continue
+
+        def d(k):
+            b, v = base.get(k), r.get(k)
+            if not b or v is None:
+                return "-"
+            return f"{b:.3g} -> {v:.3g} ({v/b:.2f}x)"
+
+        cb = lambda rr: sum(v for k, v in rr.get("collectives", {}).items()
+                            if k != "count")
+        cbs = f"{cb(base):.3g} -> {cb(r):.3g}" \
+            f" ({cb(r)/max(cb(base),1):.2f}x)"
+        rows.append(
+            f"**{r['arch']} × {r['shape']} [{tag}]**  \n"
+            f"  flops/dev: {d('flops_per_device')}; "
+            f"bytes/dev: {d('bytes_per_device')}; "
+            f"collective bytes: {cbs}; "
+            f"useful: {base.get('useful_ratio', 0) or 0:.3f} -> "
+            f"{r.get('useful_ratio', 0) or 0:.3f}\n")
+    return "\n".join(rows) if rows else "(variants pending)"
+
+
+def main():
+    recs = load("results/dryrun")
+    exp = Path("EXPERIMENTS.md").read_text()
+
+    buf = dryrun_table(recs)
+    exp = re.sub(r"<!-- DRYRUN_TABLE -->.*?(?=\n## )",
+                 "<!-- DRYRUN_TABLE -->\n\n" + buf + "\n\n", exp,
+                 flags=re.S) if "<!-- DRYRUN_TABLE -->" in exp else exp
+    roof = roofline_table(recs, "single")
+    exp = re.sub(r"<!-- ROOFLINE_TABLE -->.*?(?=\n### Reading)",
+                 "<!-- ROOFLINE_TABLE -->\n\n" + roof + "\n\n", exp,
+                 flags=re.S) if "<!-- ROOFLINE_TABLE -->" in exp else exp
+    pl = perf_log(recs)
+    exp = re.sub(r"<!-- PERF_LOG -->.*?(?=\n## §Perf — paper)",
+                 "<!-- PERF_LOG -->\n\n" + pl + "\n\n", exp, flags=re.S) \
+        if "<!-- PERF_LOG -->" in exp else exp
+    Path("EXPERIMENTS.md").write_text(exp)
+    print("EXPERIMENTS.md updated:",
+          len([r for r in recs if "error" not in r and "skipped" not in r]),
+          "ok cells,",
+          len([r for r in recs if "skipped" in r]), "skipped,",
+          len([r for r in recs if "error" in r]), "failed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,9 @@
+# repro: Distributed Discrete Morse Sandwich in JAX + multi-pod LM substrate.
+#
+# 64-bit mode is mandatory: simplex ids of production-scale fields (the
+# paper's 6-billion-vertex example) exceed int32, and the distributed sort
+# packs (float32 bits, gid) into one int64 key.  Model code specifies dtypes
+# explicitly everywhere, so enabling x64 does not change numerics there.
+import jax as _jax
+
+_jax.config.update("jax_enable_x64", True)

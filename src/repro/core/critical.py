@@ -1,0 +1,57 @@
+"""Critical simplex extraction & sort (paper Sec. III, step 'Extract & sort').
+
+Also computes dense *simplex ranks*: the position of every valid k-simplex in
+the global lexicographic order (its filtration order within dimension k).
+Ranks are what every later stage compares — they are the distributed
+equivalent of DMS's "global simplex order" and are produced here once so that
+all subsequent comparisons are O(1) integer compares.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict
+
+import numpy as np
+
+from .grid import Grid
+from .gradient import GradientField
+
+
+def simplex_ranks(grid: Grid, k: int, order: np.ndarray) -> np.ndarray:
+    """Dense (sid_space,) array: rank of each valid k-simplex in the global
+    lexicographic order of dimension k; -1 for invalid sids."""
+    space = grid.sid_space(k)
+    sids = np.arange(space, dtype=np.int64)
+    valid = np.asarray(grid.simplex_valid(k, sids))
+    vs = sids[valid]
+    keys = np.asarray(grid.simplex_key(k, vs, order))  # (n, k+1) desc
+    perm = np.lexsort(tuple(keys[:, c] for c in range(keys.shape[1] - 1, -1, -1)))
+    ranks = np.full(space, -1, dtype=np.int64)
+    ranks[vs[perm]] = np.arange(len(vs), dtype=np.int64)
+    return ranks
+
+
+@dataclass
+class CriticalInfo:
+    """Sorted critical simplices + global ranks per dimension."""
+
+    grid: Grid
+    order: np.ndarray
+    crit_sids: Dict[int, np.ndarray]   # sorted by rank, ascending
+    ranks: Dict[int, np.ndarray]       # dense rank arrays (valid sims only)
+
+    def max_vertex_order(self, k: int, sids: np.ndarray) -> np.ndarray:
+        mv = np.asarray(self.grid.simplex_max_vertex(k, sids, self.order))
+        return self.order[mv]
+
+
+def extract_critical(grid: Grid, gf: GradientField,
+                     order: np.ndarray) -> CriticalInfo:
+    crit_sids: Dict[int, np.ndarray] = {}
+    ranks: Dict[int, np.ndarray] = {}
+    for k in range(grid.dim + 1):
+        ranks[k] = simplex_ranks(grid, k, order)
+        cs = gf.critical_sids(k)
+        crit_sids[k] = cs[np.argsort(ranks[k][cs])]
+    return CriticalInfo(grid, order, crit_sids, ranks)

@@ -1,0 +1,99 @@
+"""Persistence diagram containers and comparison utilities.
+
+Diagrams are compared in *order space*: each pair (birth simplex, death
+simplex) maps to the point (O(max vertex of birth), O(max vertex of death)).
+Zero-persistence points (equal coordinates) sit on the diagonal and are
+dropped before comparison — this is the invariant the paper itself validates
+(DDMS output vs DMS vs DIPHA, Sec. VI), since diagonal points carry no
+topological signal.  Essential (infinite) classes are compared as
+(dim, O(max vertex)) multisets; their counts are the Betti numbers.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+from .grid import Grid
+
+
+@dataclass
+class Diagram:
+    """Persistence pairs per homology dimension, as simplex ids."""
+
+    grid: Grid
+    order: np.ndarray
+    # pairs[p] = array (n,2): (birth sid of dim p, death sid of dim p+1)
+    pairs: Dict[int, np.ndarray] = field(default_factory=dict)
+    # essential[p] = array (n,) of birth sids (infinite persistence)
+    essential: Dict[int, np.ndarray] = field(default_factory=dict)
+
+    def points_order(self, p: int, drop_diagonal: bool = True) -> np.ndarray:
+        """(n,2) points (birth order, death order) for dimension p."""
+        pr = self.pairs.get(p)
+        if pr is None or len(pr) == 0:
+            return np.zeros((0, 2), dtype=np.int64)
+        b = np.asarray(self.grid.simplex_max_vertex(p, pr[:, 0], self.order))
+        d = np.asarray(self.grid.simplex_max_vertex(p + 1, pr[:, 1], self.order))
+        ob, od = self.order[b], self.order[d]
+        pts = np.stack([ob, od], axis=1)
+        if drop_diagonal:
+            pts = pts[pts[:, 0] != pts[:, 1]]
+        return pts
+
+    def points_value(self, p: int, f: np.ndarray) -> np.ndarray:
+        """(n,2) points (birth f-value, death f-value) for dimension p
+        (f(sigma) = highest vertex value, paper Sec. II-E)."""
+        pr = self.pairs.get(p)
+        if pr is None or len(pr) == 0:
+            return np.zeros((0, 2), dtype=f.dtype)
+        fr = f.reshape(-1)
+        b = np.asarray(self.grid.simplex_max_vertex(p, pr[:, 0], self.order))
+        d = np.asarray(self.grid.simplex_max_vertex(p + 1, pr[:, 1], self.order))
+        return np.stack([fr[b], fr[d]], axis=1)
+
+    def essential_orders(self, p: int) -> np.ndarray:
+        es = self.essential.get(p)
+        if es is None or len(es) == 0:
+            return np.zeros((0,), dtype=np.int64)
+        v = np.asarray(self.grid.simplex_max_vertex(p, es, self.order))
+        return np.sort(self.order[v])
+
+    def betti(self) -> Dict[int, int]:
+        return {p: len(self.essential.get(p, ())) for p in range(self.grid.dim + 1)}
+
+
+def _sorted_rows(a: np.ndarray) -> np.ndarray:
+    if len(a) == 0:
+        return a.reshape(0, 2)
+    idx = np.lexsort((a[:, 1], a[:, 0]))
+    return a[idx]
+
+
+def same_offdiagonal(d1: Diagram, d2: Diagram, dims=None) -> bool:
+    dims = dims if dims is not None else range(d1.grid.dim)
+    for p in dims:
+        a = _sorted_rows(d1.points_order(p))
+        b = _sorted_rows(d2.points_order(p))
+        if a.shape != b.shape or not np.array_equal(a, b):
+            return False
+    return True
+
+
+def diff_report(d1: Diagram, d2: Diagram, names=("A", "B")) -> str:
+    out = []
+    for p in range(d1.grid.dim):
+        a = _sorted_rows(d1.points_order(p))
+        b = _sorted_rows(d2.points_order(p))
+        sa = {tuple(r) for r in a}
+        sb = {tuple(r) for r in b}
+        if sa != sb:
+            out.append(f"D{p}: only {names[0]}: {sorted(sa - sb)}; "
+                       f"only {names[1]}: {sorted(sb - sa)}")
+    for p in range(d1.grid.dim + 1):
+        ea, eb = list(d1.essential_orders(p)), list(d2.essential_orders(p))
+        if ea != eb:
+            out.append(f"essential[{p}]: {names[0]}={ea} {names[1]}={eb}")
+    return "\n".join(out) if out else "diagrams equal"

@@ -1,0 +1,86 @@
+"""Extremum graph construction (paper Sec. IV, Fig. 5/7).
+
+For D0: nodes are critical 1-saddles and the minima their unstable sets reach;
+triplets (sigma, t0, t1).  For D_{d-1} the *dual* graph is built from critical
+(d-1)-saddles and the critical d-simplices (maxima) their stable sets reach,
+with the virtual extremum OMEGA standing for the compactified boundary.
+
+Both reduce to the same pairing problem in a common *processing space*:
+saddles are processed oldest-first and the younger extremum representative
+dies (elder rule).  For D0 the processing key is the global order; for
+D_{d-1} it is the reversed order (superlevel sets), under which OMEGA is the
+oldest node (key -inf): it is inserted "at +inf" and can never die.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Tuple
+
+import numpy as np
+
+from .critical import CriticalInfo
+from .gradient import GradientField
+from .grid import Grid
+from .tracing import (OMEGA, resolve_doubling, tet_successors,
+                      vertex_successors)
+
+
+@dataclass
+class ExtremumGraph:
+    """Triplets sorted by processing order (oldest saddle first).
+
+    saddles:   (n,) saddle sids
+    t0, t1:    (n,) extremum node ids (sids, or OMEGA)
+    ext_key:   dense map extremum sid -> processing birth key (younger =
+               larger); OMEGA is handled symbolically by the pairing.
+    """
+
+    saddles: np.ndarray
+    t0: np.ndarray
+    t1: np.ndarray
+    ext_key: np.ndarray
+
+
+def build_d0_graph(grid: Grid, gf: GradientField,
+                   ci: CriticalInfo) -> ExtremumGraph:
+    sig = ci.crit_sids[1]  # ascending rank == ascending processing order
+    succ = vertex_successors(grid, gf)
+    term = resolve_doubling(succ)
+    verts = np.asarray(grid.simplex_vertices(1, sig)) if len(sig) else \
+        np.zeros((0, 2), np.int64)
+    t0 = term[verts[:, 0]] if len(sig) else np.zeros(0, np.int64)
+    t1 = term[verts[:, 1]] if len(sig) else np.zeros(0, np.int64)
+    keep = t0 != t1
+    return ExtremumGraph(sig[keep], t0[keep], t1[keep],
+                         ci.order.astype(np.int64))
+
+
+def build_dual_graph(grid: Grid, gf: GradientField, ci: CriticalInfo,
+                     saddles: np.ndarray) -> ExtremumGraph:
+    """Graph for D_{d-1}: ``saddles`` are the critical (d-1)-simplices to
+    process (all of them in 3-D; the D0-unpaired ones in 2-D)."""
+    d = grid.dim
+    succ = tet_successors(grid, gf)
+    term = resolve_doubling(succ)
+    # processing order: *descending* saddle rank (superlevel sweep)
+    sig = saddles[np.argsort(-ci.ranks[d - 1][saddles])]
+    cof = (np.asarray(grid.simplex_cofaces(d - 1, sig)) if len(sig)
+           else np.zeros((0, 2), np.int64))
+    # a (d-1)-simplex has at most 2 cofacets (a manifold dual edge), but the
+    # generic 3-D tables may scatter them across any column: compact them.
+    t = np.full((len(sig), 2), OMEGA, dtype=np.int64)
+    cnt = np.zeros(len(sig), dtype=np.int64)
+    for i in range(cof.shape[1] if len(sig) else 0):
+        cc = cof[:, i]
+        ok = cc >= 0
+        assert not (ok & (cnt >= 2)).any(), "non-manifold cofacet count"
+        put0 = ok & (cnt == 0)
+        put1 = ok & (cnt == 1)
+        t[put0, 0] = term[cc[put0]]
+        t[put1, 1] = term[cc[put1]]
+        cnt += ok
+    keep = t[:, 0] != t[:, 1]
+    # processing key: reversed rank (younger in superlevel = smaller rank)
+    key = -ci.ranks[d]
+    return ExtremumGraph(sig[keep], t[keep, 0], t[keep, 1], key)

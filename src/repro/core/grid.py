@@ -1,0 +1,385 @@
+"""Implicit Freudenthal (Kuhn) triangulation of regular grids (1-D, 2-D, 3-D).
+
+This is the TTK-style *implicit triangulation* (paper Sec. II-A/II-B): a regular
+grid of shape ``dims`` is decomposed into simplices without ever materializing
+them.  Every simplex is identified by a dense integer id
+
+    sid = base_vertex_id * T_k + type_index
+
+where ``T_k`` is the number of simplex *types* of dimension ``k`` (1, 7, 12, 6
+for k = 0..3) and the base vertex is the lexicographically smallest vertex of
+the simplex.  Some (base, type) combinations fall outside the grid; they are
+*invalid* and masked everywhere.  This dense id space wastes a constant factor
+but makes every incidence query a table lookup + index arithmetic — exactly
+what vectorizes on TPU (and what a Pallas kernel wants).
+
+Tables built at import time (all tiny numpy constants):
+
+- ``VERTS[k]``   (T_k, k+1, 3)  cumulative vertex offsets from the base vertex.
+- ``SPAN[k]``    (T_k, 3)       total offset (last row of VERTS).
+- ``FACES[k]``   (T_k, k+1, 4)  (face_type, dx, dy, dz): face j of a type-t
+                  k-simplex is the (k-1)-simplex of type ``face_type`` based at
+                  ``base + (dx,dy,dz)`` (face j drops vertex j).
+- ``COFACES[k]`` (T_k, NCOF_k, 4) (coface_type, dx, dy, dz) padded with -1:
+                  cofaces (dim k+1) of a type-t k-simplex are based at
+                  ``base + (dx,dy,dz)``.
+- ``STAR[k]``    (S_k, 4)       (type, dx, dy, dz): the k-simplices incident to
+                  a vertex v are based at ``v - (dx,dy,dz)``; row r has v as
+                  vertex index ``r % (k+1)``.  S_1, S_2, S_3 = 14, 36, 24.
+- ``OTHERS[k]``  (S_k, k, 3)    offsets (relative to v) of the *other* vertices
+                  of star row r.
+- ``STAR_FACES[k]`` (S_k, k)    local star-row indices (into STAR[k-1]) of the
+                  faces of star row r that still contain v.
+- ``STAR_COFACES[k]`` (S_k, NSC_k) local star-row indices (into STAR[k+1]) of
+                  the cofaces of star row r (all contain v), padded with -1.
+
+The same 3-D tables serve 1-D and 2-D grids: types whose span exceeds the grid
+extent are invalid everywhere (an axis of size 1 simply never hosts a span).
+"""
+
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+# --------------------------------------------------------------------------
+# Type tables
+# --------------------------------------------------------------------------
+
+_NONZERO = [np.array(b, dtype=np.int8) for b in itertools.product((0, 1), repeat=3)
+            if any(b)]
+
+
+def _build_types() -> Dict[int, np.ndarray]:
+    """VERTS[k]: (T_k, k+1, 3) cumulative vertex offsets for each type."""
+    verts: Dict[int, np.ndarray] = {0: np.zeros((1, 1, 3), dtype=np.int8)}
+    for k in (1, 2, 3):
+        chains: List[np.ndarray] = []
+        for parts in itertools.product(_NONZERO, repeat=k):
+            tot = np.sum(parts, axis=0)
+            if tot.max() > 1:  # parts must have disjoint supports
+                continue
+            cum = np.zeros((k + 1, 3), dtype=np.int8)
+            for i, p in enumerate(parts):
+                cum[i + 1] = cum[i] + p
+            chains.append(cum)
+        verts[k] = np.stack(chains)
+    return verts
+
+
+VERTS: Dict[int, np.ndarray] = _build_types()
+NTYPES: Dict[int, int] = {k: v.shape[0] for k, v in VERTS.items()}  # {0:1,1:7,2:12,3:6}
+SPAN: Dict[int, np.ndarray] = {k: VERTS[k][:, -1, :].copy() for k in VERTS}
+MAXDIM = 3
+
+_TYPE_LOOKUP: Dict[int, Dict[bytes, int]] = {
+    k: {VERTS[k][t].tobytes(): t for t in range(NTYPES[k])} for k in VERTS
+}
+
+
+def _build_faces() -> Dict[int, np.ndarray]:
+    faces: Dict[int, np.ndarray] = {}
+    for k in (1, 2, 3):
+        out = np.zeros((NTYPES[k], k + 1, 4), dtype=np.int8)
+        for t in range(NTYPES[k]):
+            chain = VERTS[k][t]
+            for j in range(k + 1):
+                sub = np.delete(chain, j, axis=0)
+                shift = sub[0].copy()
+                rel = (sub - sub[0]).astype(np.int8)
+                ft = _TYPE_LOOKUP[k - 1][rel.tobytes()]
+                out[t, j, 0] = ft
+                out[t, j, 1:] = shift
+        faces[k] = out
+    return faces
+
+
+FACES: Dict[int, np.ndarray] = _build_faces()
+
+
+def _build_cofaces() -> Dict[int, np.ndarray]:
+    cof: Dict[int, np.ndarray] = {}
+    for k in (0, 1, 2):
+        lists: List[List[Tuple[int, int, int, int]]] = [[] for _ in range(NTYPES[k])]
+        for ct in range(NTYPES[k + 1]):
+            for j in range(k + 2):
+                ft = int(FACES[k + 1][ct, j, 0])
+                shift = FACES[k + 1][ct, j, 1:]
+                # coface of (ft, b) is (ct, b - shift)
+                lists[ft].append((ct, -int(shift[0]), -int(shift[1]), -int(shift[2])))
+        ncof = max(len(l) for l in lists)
+        out = np.full((NTYPES[k], ncof, 4), -1, dtype=np.int8)
+        for ft, l in enumerate(lists):
+            for i, entry in enumerate(l):
+                out[ft, i] = entry
+        cof[k] = out
+    return cof
+
+
+COFACES: Dict[int, np.ndarray] = _build_cofaces()
+NCOF: Dict[int, int] = {k: v.shape[1] for k, v in COFACES.items()}
+
+
+def _build_star() -> Tuple[Dict[int, np.ndarray], Dict[int, np.ndarray]]:
+    star: Dict[int, np.ndarray] = {}
+    others: Dict[int, np.ndarray] = {}
+    for k in (0, 1, 2, 3):
+        rows = []
+        oth = []
+        for t in range(NTYPES[k]):
+            for j in range(k + 1):
+                shift = VERTS[k][t][j]
+                rows.append((t, int(shift[0]), int(shift[1]), int(shift[2])))
+                o = np.delete(VERTS[k][t], j, axis=0) - shift
+                oth.append(o.astype(np.int8))
+        star[k] = np.array(rows, dtype=np.int8)
+        others[k] = (np.stack(oth) if k > 0
+                     else np.zeros((1, 0, 3), dtype=np.int8))
+    return star, others
+
+
+STAR, OTHERS = _build_star()
+NSTAR: Dict[int, int] = {k: STAR[k].shape[0] for k in STAR}  # {0:1,1:14,2:36,3:24}
+
+
+def _build_star_faces() -> Dict[int, np.ndarray]:
+    """STAR_FACES[k][r] = local rows (into STAR[k-1]) of faces of star row r
+    that contain v.  Star row r corresponds to (t = r // (k+1), j = r % (k+1))."""
+    sf: Dict[int, np.ndarray] = {}
+    for k in (1, 2, 3):
+        out = np.full((NSTAR[k], k), -1, dtype=np.int8)
+        for r in range(NSTAR[k]):
+            t, j = divmod(r, k + 1)
+            shift = VERTS[k][t][j]  # simplex base = v - shift
+            m = 0
+            for fj in range(k + 1):
+                if fj == j:
+                    continue  # dropping v itself -> face without v
+                ft = int(FACES[k][t, fj, 0])
+                fshift = FACES[k][t, fj, 1:]
+                # face base = (v - shift) + fshift ; star row of face must have
+                # VERTS[k-1][ft][j'] == shift - fshift (v's offset inside face)
+                want = (shift - fshift).astype(np.int8)
+                jj = None
+                for cand in range(k):
+                    if np.array_equal(VERTS[k - 1][ft][cand], want):
+                        jj = cand
+                        break
+                assert jj is not None, (k, r, fj)
+                out[r, m] = ft * k + jj
+                m += 1
+            assert m == k
+        sf[k] = out
+    return sf
+
+
+STAR_FACES: Dict[int, np.ndarray] = _build_star_faces()
+
+
+def _build_star_cofaces() -> Dict[int, np.ndarray]:
+    sc: Dict[int, np.ndarray] = {}
+    for k in (0, 1, 2):
+        lists: List[List[int]] = [[] for _ in range(NSTAR[k])]
+        for r in range(NSTAR[k + 1]):
+            for m in range(k + 1):
+                fr = int(STAR_FACES[k + 1][r, m])
+                lists[fr].append(r)
+        n = max(len(l) for l in lists)
+        out = np.full((NSTAR[k], n), -1, dtype=np.int8)
+        for fr, l in enumerate(lists):
+            out[fr, : len(l)] = l
+        sc[k] = out
+    return sc
+
+
+STAR_COFACES: Dict[int, np.ndarray] = _build_star_cofaces()
+
+# --------------------------------------------------------------------------
+# Grid object
+# --------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class Grid:
+    """A regular grid with implicit Freudenthal triangulation.
+
+    ``dims`` is the vertex count per axis, canonicalized to length 3 with
+    trailing 1s.  ``dim`` is the complex dimension (number of axes > 1 among
+    the leading axes).
+    """
+
+    dims: Tuple[int, int, int]
+
+    @staticmethod
+    def of(*dims: int) -> "Grid":
+        d = tuple(int(x) for x in dims)
+        assert 1 <= len(d) <= 3 and all(x >= 1 for x in d)
+        while len(d) < 3:
+            d = d + (1,)
+        return Grid(d)
+
+    # -- basic counts ------------------------------------------------------
+    @property
+    def nv(self) -> int:
+        return int(np.prod(self.dims))
+
+    @property
+    def dim(self) -> int:
+        return int(sum(1 for x in self.dims if x > 1))
+
+    @property
+    def strides(self) -> Tuple[int, int, int]:
+        nx, ny, _ = self.dims
+        return (1, nx, nx * ny)
+
+    def n_simplices(self, k: int) -> int:
+        """Number of *valid* k-simplices."""
+        dims = np.array(self.dims)
+        cnt = np.prod(np.maximum(dims[None, :] - SPAN[k], 0), axis=1)
+        return int(cnt.sum())
+
+    def sid_space(self, k: int) -> int:
+        """Size of the dense id space for dimension k (includes invalid)."""
+        return self.nv * NTYPES[k]
+
+    # -- coordinates (xp-generic: works with numpy or jax.numpy) -----------
+    def vid_to_xyz(self, vid, xp=np):
+        nx, ny, _ = self.dims
+        x = vid % nx
+        y = (vid // nx) % ny
+        z = vid // (nx * ny)
+        return x, y, z
+
+    def xyz_to_vid(self, x, y, z):
+        nx, ny, _ = self.dims
+        return x + nx * (y + ny * z)
+
+    def in_bounds(self, x, y, z):
+        nx, ny, nz = self.dims
+        return (x >= 0) & (x < nx) & (y >= 0) & (y < ny) & (z >= 0) & (z < nz)
+
+    # -- simplex queries ----------------------------------------------------
+    def simplex_base_type(self, k: int, sid, xp=np):
+        return sid // NTYPES[k], sid % NTYPES[k]
+
+    def simplex_valid(self, k: int, sid, xp=np):
+        base, t = self.simplex_base_type(k, sid, xp)
+        x, y, z = self.vid_to_xyz(base, xp)
+        span = xp.asarray(SPAN[k])
+        sx, sy, sz = span[t, 0], span[t, 1], span[t, 2]
+        nx, ny, nz = self.dims
+        ok = (x + sx <= nx - 1) & (y + sy <= ny - 1) & (z + sz <= nz - 1)
+        return ok & (sid >= 0)
+
+    def simplex_vertices(self, k: int, sid, xp=np):
+        """(..., k+1) vertex ids of each simplex (undefined where invalid)."""
+        base, t = self.simplex_base_type(k, sid, xp)
+        x, y, z = self.vid_to_xyz(base, xp)
+        verts = xp.asarray(VERTS[k])  # (T,k+1,3)
+        off = verts[t]  # (...,k+1,3)
+        vx = x[..., None] + off[..., 0]
+        vy = y[..., None] + off[..., 1]
+        vz = z[..., None] + off[..., 2]
+        return self.xyz_to_vid(vx, vy, vz)
+
+    def simplex_faces(self, k: int, sid, xp=np):
+        """(..., k+1) sids of the faces of each k-simplex."""
+        base, t = self.simplex_base_type(k, sid, xp)
+        x, y, z = self.vid_to_xyz(base, xp)
+        tab = xp.asarray(FACES[k])  # (T,k+1,4)
+        e = tab[t]  # (...,k+1,4)
+        fb = self.xyz_to_vid(x[..., None] + e[..., 1], y[..., None] + e[..., 2],
+                             z[..., None] + e[..., 3])
+        return fb * NTYPES[k - 1] + e[..., 0]
+
+    def simplex_cofaces(self, k: int, sid, xp=np):
+        """(..., NCOF_k) sids of cofaces (−1 where padded/out of grid)."""
+        base, t = self.simplex_base_type(k, sid, xp)
+        x, y, z = self.vid_to_xyz(base, xp)
+        tab = xp.asarray(COFACES[k])  # (T,NCOF,4)
+        e = tab[t]
+        cx = x[..., None] + e[..., 1]
+        cy = y[..., None] + e[..., 2]
+        cz = z[..., None] + e[..., 3]
+        ct = e[..., 0]
+        cb = self.xyz_to_vid(cx, cy, cz)
+        csid = cb * NTYPES[k + 1] + ct
+        pad = ct < 0
+        # validity: base in bounds AND span fits
+        valid = ~pad & self.in_bounds(cx, cy, cz)
+        span = xp.asarray(SPAN[k + 1])
+        st = span[xp.where(pad, 0, ct)]
+        nx, ny, nz = self.dims
+        valid = valid & (cx + st[..., 0] <= nx - 1) & (cy + st[..., 1] <= ny - 1) \
+            & (cz + st[..., 2] <= nz - 1)
+        return xp.where(valid, csid, -1)
+
+    def star_sids(self, k: int, v, xp=np):
+        """(..., S_k) sids of the k-simplices of star(v); -1 where invalid."""
+        x, y, z = self.vid_to_xyz(v, xp)
+        tab = xp.asarray(STAR[k])  # (S,4)
+        bx = x[..., None] - tab[:, 1]
+        by = y[..., None] - tab[:, 2]
+        bz = z[..., None] - tab[:, 3]
+        t = tab[:, 0]
+        base = self.xyz_to_vid(bx, by, bz)
+        sid = base * NTYPES[k] + t
+        span = xp.asarray(SPAN[k])[t]
+        nx, ny, nz = self.dims
+        valid = self.in_bounds(bx, by, bz) \
+            & (bx + span[:, 0] <= nx - 1) & (by + span[:, 1] <= ny - 1) \
+            & (bz + span[:, 2] <= nz - 1)
+        return xp.where(valid, sid, -1)
+
+    def star_other_vertices(self, k: int, v, xp=np):
+        """(..., S_k, k) the other vertex ids of star row r at vertex v, and a
+        validity mask (..., S_k)."""
+        x, y, z = self.vid_to_xyz(v, xp)
+        oth = xp.asarray(OTHERS[k])  # (S,k,3)
+        ox = x[..., None, None] + oth[..., 0]
+        oy = y[..., None, None] + oth[..., 1]
+        oz = z[..., None, None] + oth[..., 2]
+        vids = self.xyz_to_vid(ox, oy, oz)
+        valid = self.in_bounds(ox, oy, oz).all(axis=-1) if k > 0 else \
+            xp.ones(vids.shape[:-1], bool)
+        return vids, valid
+
+    # -- enumeration helpers (numpy only; used by oracles/tests) ------------
+    def all_valid_sids(self, k: int) -> np.ndarray:
+        sid = np.arange(self.sid_space(k), dtype=np.int64)
+        return sid[np.asarray(self.simplex_valid(k, sid))]
+
+    def simplex_key(self, k: int, sid, order, xp=np):
+        """(..., k+1) vertex orders sorted descending — the lexicographic
+        comparison key (paper Sec. II-A)."""
+        v = self.simplex_vertices(k, sid, xp)
+        o = order[v]
+        return -xp.sort(-o, axis=-1)
+
+    # -- filtration values ---------------------------------------------------
+    def simplex_max_vertex(self, k: int, sid, order, xp=np):
+        v = self.simplex_vertices(k, sid, xp)
+        o = order[v]
+        return xp.take_along_axis(v, xp.argmax(o, axis=-1)[..., None],
+                                  axis=-1)[..., 0]
+
+
+def vertex_order(f: np.ndarray, xp=np):
+    """Global injective vertex order: rank by (f, vid) ascending.
+
+    This is the single-process reference of the paper's *Array
+    Preconditioning* (Sec. III); the distributed version lives in
+    ``repro.core.order``.
+    """
+    f = f.reshape(-1)
+    n = f.shape[0]
+    perm = xp.argsort(f, kind="stable") if xp is np else xp.argsort(f, stable=True)
+    order = xp.zeros(n, dtype=xp.int64)
+    if xp is np:
+        order[perm] = np.arange(n, dtype=np.int64)
+    else:
+        order = order.at[perm].set(xp.arange(n, dtype=xp.int64))
+    return order

@@ -1,0 +1,66 @@
+"""PairExtremaSaddles (paper Alg. 1) — sequential reference.
+
+Processes extremum-graph triplets oldest-saddle-first with a Union-Find over
+extremum nodes; the younger representative dies at the saddle and the older
+becomes the component representative (elder rule), with DMS's arc collapse
+(the traversed endpoint is also re-pointed at the surviving representative).
+
+The distributed self-correcting version (paper Alg. 4) lives in
+``repro.core.ddms``; this sequential version is both the single-node DMS path
+and the correctness oracle for it.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+from .extremum_graph import ExtremumGraph
+from .tracing import OMEGA
+
+
+@dataclass
+class ExtremaPairs:
+    # (saddle sid, extremum sid) — the extremum that dies at the saddle
+    pairs: List[Tuple[int, int]]
+    # extremum sids never paired (essential classes; OMEGA excluded)
+    unpaired: List[int]
+
+
+def pair_extrema_saddles(g: ExtremumGraph) -> ExtremaPairs:
+    rep: Dict[int, int] = {}
+
+    def find(t: int) -> int:
+        path = []
+        while rep.get(t, t) != t:
+            path.append(t)
+            t = rep[t]
+        for p in path:
+            rep[p] = t
+        return t
+
+    def key(t: int) -> Tuple[int, int]:
+        # OMEGA is the oldest node: key -inf (compared as tuple)
+        return (0, 0) if t == OMEGA else (1, int(g.ext_key[t]) + 1)
+
+    pairs: List[Tuple[int, int]] = []
+    seen: set = set()
+    for i in range(len(g.saddles)):
+        s, t0, t1 = int(g.saddles[i]), int(g.t0[i]), int(g.t1[i])
+        seen.add(t0)
+        seen.add(t1)
+        r0, r1 = find(t0), find(t1)
+        if r0 == r1:
+            continue
+        if key(r0) < key(r1):
+            r0, r1 = r1, r0
+            t0, t1 = t1, t0
+        assert r0 != OMEGA
+        pairs.append((s, r0))
+        rep[r0] = r1
+        rep[t0] = r1  # arc collapse (path compression, paper Alg. 1 l.10)
+    paired = {e for _, e in pairs}
+    unpaired = sorted(t for t in seen if t != OMEGA and t not in paired)
+    return ExtremaPairs(pairs, unpaired)

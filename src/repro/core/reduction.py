@@ -1,0 +1,157 @@
+"""Boundary-matrix reduction oracle (the algorithm behind DIPHA / PHAT).
+
+This is the textbook persistence algorithm (paper Sec. II-G): build the
+lexicographic filtration of the Freudenthal complex, reduce the boundary
+matrix with left-to-right column additions over Z/2, read pairs off the
+pivots.  It is exact and used as the ground-truth oracle for DMS/DDMS — the
+same role DIPHA plays for DMS in the paper's correctness checks (Sec. VI).
+
+Only meant for small grids (tests, benchmarks at reduced size): complexity is
+O(n^3) worst case.  A twist-optimized variant (``clearing`` — Bauer et al.,
+"Clear and Compress") is provided as ``reduce_twist`` and used by the
+benchmark harness as the DIPHA-like distributed baseline's compute core.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from .grid import Grid, NTYPES, vertex_order
+
+
+@dataclass
+class Filtration:
+    """Explicit lexicographic filtration of a small grid complex."""
+
+    grid: Grid
+    order: np.ndarray              # (nv,) vertex order
+    sims: List[Tuple[int, int]]    # filtration position -> (dim, sid)
+    pos: Dict[Tuple[int, int], int]  # (dim, sid) -> filtration position
+
+    @property
+    def n(self) -> int:
+        return len(self.sims)
+
+
+def build_filtration(grid: Grid, f: np.ndarray) -> Filtration:
+    order = vertex_order(np.asarray(f))
+    entries = []
+    for k in range(grid.dim + 1):
+        sids = grid.all_valid_sids(k)
+        keys = grid.simplex_key(k, sids, order)  # (n,k+1) desc
+        pad = np.full((keys.shape[0], 4 - keys.shape[1]), -1, dtype=np.int64)
+        keys4 = np.concatenate([keys, pad], axis=1)
+        for i, sid in enumerate(sids):
+            entries.append((tuple(keys4[i]), k, int(sid)))
+    entries.sort()
+    sims = [(k, sid) for _, k, sid in entries]
+    pos = {(k, sid): i for i, (k, sid) in enumerate(sims)}
+    return Filtration(grid, order, sims, pos)
+
+
+def _boundary_cols(filt: Filtration) -> List[List[int]]:
+    cols: List[List[int]] = []
+    g = filt.grid
+    for k, sid in filt.sims:
+        if k == 0:
+            cols.append([])
+            continue
+        faces = np.asarray(g.simplex_faces(k, np.array([sid], dtype=np.int64)))[0]
+        col = sorted(filt.pos[(k - 1, int(fs))] for fs in faces)
+        cols.append(col)
+    return cols
+
+
+def _add_mod2(a: List[int], b: List[int]) -> List[int]:
+    """Symmetric difference of two sorted index lists."""
+    out: List[int] = []
+    i = j = 0
+    while i < len(a) and j < len(b):
+        if a[i] == b[j]:
+            i += 1
+            j += 1
+        elif a[i] < b[j]:
+            out.append(a[i])
+            i += 1
+        else:
+            out.append(b[j])
+            j += 1
+    out.extend(a[i:])
+    out.extend(b[j:])
+    return out
+
+
+def reduce_standard(cols: List[List[int]]) -> Dict[int, int]:
+    """Standard left-to-right reduction. Returns {birth_pos: death_pos}."""
+    low_to_col: Dict[int, int] = {}
+    cols = [list(c) for c in cols]
+    for j in range(len(cols)):
+        while cols[j]:
+            low = cols[j][-1]
+            if low not in low_to_col:
+                low_to_col[low] = j
+                break
+            cols[j] = _add_mod2(cols[j], cols[low_to_col[low]])
+    return {low: j for low, j in low_to_col.items()}
+
+
+def reduce_twist(cols: List[List[int]], dims: List[int],
+                 maxdim: int) -> Dict[int, int]:
+    """Reduction with the *clearing* optimization: process dimensions from
+    high to low; once (b, d) is found, column b is cleared (it is a cycle).
+    This mirrors the 'Clear and Compress' strategy DIPHA builds on."""
+    low_to_col: Dict[int, int] = {}
+    cols = [list(c) for c in cols]
+    cleared = set()
+    for k in range(maxdim, 0, -1):
+        for j in range(len(cols)):
+            if dims[j] != k or j in cleared:
+                continue
+            while cols[j]:
+                low = cols[j][-1]
+                if low not in low_to_col:
+                    low_to_col[low] = j
+                    cleared.add(low)
+                    cols[low] = []
+                    break
+                cols[j] = _add_mod2(cols[j], cols[low_to_col[low]])
+    return {low: j for low, j in low_to_col.items()}
+
+
+@dataclass
+class DiagramOracle:
+    """Canonical persistence pairing of the lexicographic filtration."""
+
+    # per-dimension list of (birth_sid, death_sid) — death is a (dim+1)-simplex
+    pairs: Dict[int, List[Tuple[int, int]]]
+    # per-dimension list of essential birth sids (infinite persistence)
+    essential: Dict[int, List[int]]
+    filt: Filtration
+
+    def betti(self) -> Dict[int, int]:
+        return {k: len(v) for k, v in self.essential.items()}
+
+
+def compute_oracle(grid: Grid, f: np.ndarray, twist: bool = True) -> DiagramOracle:
+    filt = build_filtration(grid, f)
+    cols = _boundary_cols(filt)
+    dims = [k for k, _ in filt.sims]
+    red = (reduce_twist(cols, dims, grid.dim) if twist
+           else reduce_standard(cols))
+    paired = set()
+    pairs: Dict[int, List[Tuple[int, int]]] = {k: [] for k in range(grid.dim + 1)}
+    for b, d in red.items():
+        kb, sb = filt.sims[b]
+        kd, sd = filt.sims[d]
+        assert kd == kb + 1
+        pairs[kb].append((sb, sd))
+        paired.add(b)
+        paired.add(d)
+    essential: Dict[int, List[int]] = {k: [] for k in range(grid.dim + 1)}
+    for i, (k, sid) in enumerate(filt.sims):
+        if i not in paired:
+            essential[k].append(sid)
+    return DiagramOracle(pairs, essential, filt)

@@ -1,0 +1,88 @@
+"""Saddle-saddle pairs (D1, paper Sec. II-F Alg. 2/3 — sequential reference).
+
+Homologous propagation: for each unpaired critical 2-simplex sigma (ascending
+filtration order), expand the boundary 1-cycle ``B`` — initially the three
+edges of sigma — by repeatedly taking its highest edge tau and
+
+- tau paired with a triangle t in the gradient  ->  B ^= boundary(t);
+- tau critical & unpaired                        ->  emit pair (tau, sigma);
+- tau critical & already paired to sigma' < sigma -> B ^= stored boundary
+  of sigma' (merge).
+
+Because simplices are processed in ascending order, the steal branch of
+Alg. 3 (sigma' > sigma) never triggers here; it exists only in the
+parallel/distributed versions (Nigmetov-style self-correction), implemented
+in ``repro.core.ddms``.
+
+A 1-cycle's highest edge is always *positive* (it created the cycle), so tau
+can never be an edge that died in D0 (critical, D0-paired) nor an edge paired
+with a vertex — both are deaths of components.  This invariant is asserted.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Set, Tuple
+
+import numpy as np
+
+from .critical import CriticalInfo
+from .gradient import GradientField
+from .grid import Grid
+
+
+@dataclass
+class SaddleSaddlePairs:
+    pairs: List[Tuple[int, int]]      # (edge sid birth, triangle sid death)
+    unpaired_edges: List[int]         # essential H1 generators
+    unpaired_triangles: List[int]     # essential H2 feed (empty on a box)
+    # iteration statistics (drives the paper's Fig. 11-style benchmarks)
+    expansions: int = 0
+
+
+def _tri_boundary(grid: Grid, tri: int) -> Set[int]:
+    f = np.asarray(grid.simplex_faces(2, np.array([tri], dtype=np.int64)))[0]
+    return {int(x) for x in f}
+
+
+def pair_saddle_saddle_seq(grid: Grid, gf: GradientField, ci: CriticalInfo,
+                           c1: np.ndarray, c2: np.ndarray) -> SaddleSaddlePairs:
+    """c1: unpaired critical edges; c2: unpaired critical triangles
+    (both as sid arrays)."""
+    erank = ci.ranks[1]
+    trank = ci.ranks[2]
+    c1_set = {int(x) for x in c1}
+    order_c2 = c2[np.argsort(trank[c2])]
+    pair_of_edge: Dict[int, int] = {}
+    boundary: Dict[int, Set[int]] = {}
+    pairs: List[Tuple[int, int]] = []
+    unpaired_tri: List[int] = []
+    expansions = 0
+
+    for s in order_c2:
+        s = int(s)
+        B = _tri_boundary(grid, s)
+        while B:
+            tau = max(B, key=lambda e: erank[e])
+            up = int(gf.pair_up[1][tau])
+            if up >= 0:
+                # non-critical positive edge: expand with its 2-chain step
+                B ^= _tri_boundary(grid, up)
+                expansions += 1
+            elif tau in pair_of_edge:
+                s2 = pair_of_edge[tau]
+                assert trank[s2] < trank[s], "ascending order violated"
+                B ^= boundary[s2]
+                expansions += 1
+            else:
+                assert tau in c1_set, \
+                    "propagation reached a negative edge (D0 death)"
+                pair_of_edge[tau] = s
+                boundary[s] = B
+                pairs.append((tau, s))
+                break
+        else:
+            unpaired_tri.append(s)  # boundary vanished: essential 2-class
+    unpaired_edges = sorted(c1_set - set(pair_of_edge))
+    return SaddleSaddlePairs([(e, t) for e, t in pairs], unpaired_edges,
+                             unpaired_tri, expansions)

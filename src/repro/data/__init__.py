@@ -1,0 +1,3 @@
+# Deterministic-seekable data pipeline (LM token batches) — restartable by
+# construction: batch(step) is a pure function, so checkpoint/restart replays
+# the exact stream.

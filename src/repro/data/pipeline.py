@@ -1,0 +1,37 @@
+"""Deterministic-seekable synthetic LM data.
+
+``batch_at(step)`` is a pure function of (seed, step): restarts replay the
+exact token stream with no iterator state to checkpoint — the property the
+fault-tolerance tests assert.  The generator produces Zipf-ish token draws
+with shifted-window labels, which is enough signal for loss-goes-down
+integration tests.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass(frozen=True)
+class DataConfig:
+    vocab: int
+    batch: int
+    seq: int
+    seed: int = 0
+
+
+def batch_at(cfg: DataConfig, step: int):
+    key = jax.random.fold_in(jax.random.PRNGKey(cfg.seed), step)
+    # Zipf-ish marginal over the vocab via exponential transform
+    u = jax.random.uniform(key, (cfg.batch, cfg.seq + 1), minval=1e-6)
+    z = jnp.clip((u ** (-0.5) - 1.0) * cfg.vocab / 40.0, 0,
+                 cfg.vocab - 1).astype(jnp.int32)
+    return {"tokens": z[:, :-1], "labels": z[:, 1:]}
+
+
+def host_batch_at(cfg: DataConfig, step: int):
+    return {k: np.asarray(v) for k, v in batch_at(cfg, step).items()}

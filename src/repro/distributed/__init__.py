@@ -1,0 +1,2 @@
+# Distributed DDMS building blocks: block decomposition, distributed order,
+# self-correcting extremum-saddle pairing rounds, token-based D1 rounds.

@@ -1,0 +1,131 @@
+"""Distributed global vertex order — the paper's *Array Preconditioning*
+(Sec. III), built on a sample sort (the role psort plays for DDMS/DIPHA).
+
+Runs inside ``shard_map``: each device owns a z-slab of the field.
+
+  1. sort locally by (value, gid);
+  2. regular-sample splitters, all_gather, select global quantile splitters;
+  3. bucket by splitter, fixed-capacity all_to_all exchange;
+  4. local sort of received keys; global rank = exclusive-scan of bucket
+     counts (psum) + local position;
+  5. route ranks back to the owning device (second all_to_all) and restore
+     original layout.
+
+Fixed-capacity discipline: buckets are padded to ``cap = slack * n_local /
+n_blocks`` entries; an overflow flag is returned (never silent).  For i.i.d.
+fields slack=2 is ample; adversarial inputs should raise slack.
+
+The *rank-free* alternative (beyond-paper, see DESIGN.md / EXPERIMENTS.md
+§Perf): persistence only ever needs comparisons, and (value, gid) keys are
+already globally comparable — ``rankfree_keys`` converts f to monotone
+sortable int64 keys with zero communication.  DDMS needs dense ranks only to
+keep downstream keys narrow; the §Perf hillclimb quantifies the trade.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def rankfree_keys(f, gids):
+    """Monotone int64 keys equivalent to the global order, no comm.
+
+    float32 f -> sortable int32 (sign-fold) -> key = (asint << 32) | gid32
+    (valid for nv < 2^32; for larger grids widen to two lanes)."""
+    fi = _sortable(f).astype(jnp.int64)
+    return (fi << 32) | gids.astype(jnp.int64)
+
+
+def _sortable(f):
+    """Monotone float32 -> int64 map (IEEE754 sign-magnitude fold)."""
+    fi = jax.lax.bitcast_convert_type(
+        f.astype(jnp.float32), jnp.int32).astype(jnp.int64)
+    return jnp.where(fi < 0, -(fi + 2 ** 31), fi)
+
+
+def sample_sort_ranks(f_local, gid_local, axis_name, n_blocks: int,
+                      slack: float = 2.0):
+    """Global dense ranks of (f, gid) keys.  Returns (ranks_local, overflow).
+
+    Must be called inside shard_map with ``axis_name`` spanning n_blocks.
+    """
+    n_local = f_local.shape[0]
+    cap = int(np.ceil(slack * n_local / n_blocks)) * n_blocks
+    key = (_sortable(f_local).astype(jnp.int64) << 32) \
+        | gid_local.astype(jnp.int64)
+
+    # 1. local sort
+    skey = jnp.sort(key)
+
+    # 2. splitters: n_blocks-1 regular samples per device
+    samp_idx = (jnp.arange(1, n_blocks) * n_local) // n_blocks
+    samples = skey[samp_idx]
+    all_samples = jax.lax.all_gather(samples, axis_name).reshape(-1)
+    all_samples = jnp.sort(all_samples)
+    m = all_samples.shape[0]
+    spl_idx = (jnp.arange(1, n_blocks) * m) // n_blocks
+    splitters = all_samples[spl_idx]                     # (n_blocks-1,)
+
+    # 3. bucketize + fixed-capacity all_to_all
+    bucket = jnp.searchsorted(splitters, skey, side="right")  # (n_local,)
+    # position of each element within its bucket
+    one_hot = bucket[:, None] == jnp.arange(n_blocks)[None, :]
+    within = (jnp.cumsum(one_hot, axis=0) - 1)[
+        jnp.arange(n_local), bucket]                     # (n_local,)
+    counts = one_hot.sum(0)                              # (n_blocks,)
+    percap = cap // n_blocks
+    overflow = (counts > percap).any()
+    # keys can be negative (negative floats): carry validity explicitly
+    send = jnp.zeros((n_blocks, percap + 1, 2), jnp.int64)
+    slot = jnp.where(within < percap, within, percap)
+    send = send.at[bucket, slot, 0].set(skey)
+    send = send.at[bucket, slot, 1].set(1)
+    recv = jax.lax.all_to_all(send[:, :percap], axis_name, split_axis=0,
+                              concat_axis=0, tiled=False)
+    recv = recv.reshape(-1, 2)                           # (cap, 2)
+
+    # 4. local sort of received + global offset
+    valid = recv[:, 1] == 1
+    rk = jnp.sort(jnp.where(valid, recv[:, 0],
+                            jnp.iinfo(jnp.int64).max))
+    n_here = valid.sum()
+    # exclusive scan of bucket sizes across devices
+    sizes = jax.lax.all_gather(n_here, axis_name)        # (n_blocks,)
+    me = jax.lax.axis_index(axis_name)
+    offset = jnp.where(jnp.arange(n_blocks) < me, sizes, 0).sum()
+    ranks_here = offset + jnp.arange(cap, dtype=jnp.int64)
+
+    # 5. route (gid, rank) back to owners; owner = gid // n_local (z-slab)
+    gid_back = rk & jnp.int64(0xFFFFFFFF)
+    owner = jnp.where(jnp.arange(cap) < n_here, gid_back // n_local,
+                      jnp.int64(0))
+    oh = owner[:, None] == jnp.arange(n_blocks)[None, :]
+    oh = oh & (jnp.arange(cap) < n_here)[:, None]
+    within2 = (jnp.cumsum(oh, axis=0) - 1)[jnp.arange(cap), owner]
+    counts2 = oh.sum(0)
+    overflow = overflow | (counts2 > percap).any()
+    payload = jnp.stack([gid_back, ranks_here], axis=1)  # (cap,2)
+    # percap+1: last slot is a dump for padding entries (slot2 must never
+    # wrap to a real slot)
+    send2 = jnp.full((n_blocks, percap + 1, 2), jnp.int64(-1))
+    valid2 = jnp.arange(cap) < n_here
+    slot2 = jnp.where(valid2 & (within2 >= 0) & (within2 < percap),
+                      within2, percap)
+    send2 = send2.at[owner, slot2].set(
+        jnp.where(valid2[:, None], payload, jnp.int64(-1)))
+    recv2 = jax.lax.all_to_all(send2[:, :percap], axis_name, split_axis=0,
+                               concat_axis=0, tiled=False)
+    recv2 = recv2.reshape(-1, 2)
+
+    ok = recv2[:, 0] >= 0
+    local_idx = jnp.where(ok, recv2[:, 0] % n_local, n_local)
+    ranks = jnp.zeros(n_local + 1, dtype=jnp.int64).at[local_idx].set(
+        jnp.where(ok, recv2[:, 1], 0))[:n_local]
+    # overflow anywhere is overflow everywhere (never silent)
+    overflow = jax.lax.psum(overflow.astype(jnp.int32), axis_name) > 0
+    return ranks, overflow

@@ -1,0 +1,139 @@
+"""Self-correcting distributed extremum-saddle pairing (paper Sec. IV-C,
+Alg. 4) — round-synchronous SPMD formulation.
+
+The paper's protocol is asynchronous: each MPI rank processes its triplets
+optimistically, ships (sigma, r0, r1) messages across ranks, detects wrong
+pairings by *saddle comparison* and triggers recomputations, cycling until no
+messages fly.  Two ingredients make it self-correcting:
+
+1. representatives carry the *assigning saddle*, so a find() can ignore
+   assignments that would not yet exist in the sequential schedule
+   ("age-filtered find");
+2. wrong pairings are detected by comparing saddle ages and repaired.
+
+On TPU there are no asynchronous per-rank schedules — every device runs the
+same program.  We therefore recast the protocol as the fixpoint of a *pure
+round function* with exactly those two ingredients:
+
+  round(state):
+    for every triplet (sigma, t0, t1) **in parallel**:
+        r_i = age-filtered find of t_i   (follow rep links only while their
+                                          assigner is older than sigma)
+        propose (die = younger of r0/r1, live = older) if r0 != r1
+    rebuild state: per extremum, the oldest proposing saddle wins
+                   (rep[die] = live tagged with sigma; pair[die] = sigma);
+                   all other state is discarded (bulk correction).
+
+Induction over saddle age shows the k oldest saddles' outcomes are exact
+after k rounds and never regress (an older, correct proposal always beats a
+younger, speculative one), so the fixpoint equals the sequential Alg. 1
+result; in practice the number of rounds tracks the depth of the merge
+forest, not the saddle count.  Wrong speculative pairings appear and are
+corrected across rounds exactly as in the paper — but deterministically.
+
+The arrays here are global; under ``shard_map`` (see ``repro.core.ddms``)
+triplets are sharded by saddle owner, rep/pair state by extremum owner, and
+the find hops and proposal routing become collectives.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+from repro.core.extremum_graph import ExtremumGraph
+from repro.core.pairing import ExtremaPairs
+from repro.core.tracing import OMEGA
+
+NOKEY = np.int64(np.iinfo(np.int64).max)  # "unassigned" representative tag
+
+
+@dataclass
+class RoundStats:
+    rounds: int = 0
+    proposals: int = 0
+    corrections: int = 0  # proposals overturned in later rounds
+
+
+def _compact_nodes(t0: np.ndarray, t1: np.ndarray):
+    """Map extremum ids (+ OMEGA) to compact [0, NE]; OMEGA -> NE."""
+    nodes = np.unique(np.concatenate([t0, t1]))
+    nodes = nodes[nodes != OMEGA]
+    idx = {int(n): i for i, n in enumerate(nodes)}
+    ne = len(nodes)
+
+    def remap(a: np.ndarray) -> np.ndarray:
+        out = np.empty(len(a), dtype=np.int64)
+        for i, x in enumerate(a):
+            out[i] = ne if int(x) == OMEGA else idx[int(x)]
+        return out
+
+    return nodes, remap(t0), remap(t1), ne
+
+
+def pairing_fixpoint(g: ExtremumGraph,
+                     collect_stats: bool = False
+                     ) -> Tuple[ExtremaPairs, RoundStats]:
+    """Fixpoint of the round function; returns the same result as the
+    sequential ``pair_extrema_saddles``."""
+    n = len(g.saddles)
+    stats = RoundStats()
+    if n == 0:
+        return ExtremaPairs([], []), stats
+
+    nodes, c0, c1, ne = _compact_nodes(g.t0, g.t1)
+    # saddle keys: triplets arrive sorted oldest-first -> rank is the key
+    skey = np.arange(n, dtype=np.int64)
+    # extremum birth keys in processing space (larger = younger = dies);
+    # OMEGA (slot ne) is the oldest possible node
+    ekey = np.concatenate([g.ext_key[nodes],
+                           [np.int64(-(2 ** 62))]]).astype(np.int64)
+
+    rep = np.arange(ne + 1, dtype=np.int64)
+    repkey = np.full(ne + 1, NOKEY, dtype=np.int64)
+    pair = np.full(ne + 1, -1, dtype=np.int64)
+
+    while True:
+        stats.rounds += 1
+        # --- age-filtered find, all triplets in parallel ----------------
+        cur = np.stack([c0, c1], axis=1)  # (n,2)
+        while True:
+            rk = repkey[cur]
+            step = rk < skey[:, None]
+            if not step.any():
+                break
+            cur = np.where(step, rep[cur], cur)
+        r0, r1 = cur[:, 0], cur[:, 1]
+
+        # --- proposals ---------------------------------------------------
+        prop = r0 != r1
+        die = np.where(ekey[r0] >= ekey[r1], r0, r1)
+        live = np.where(ekey[r0] >= ekey[r1], r1, r0)
+        # --- rebuild: oldest saddle wins per extremum --------------------
+        new_rep = np.arange(ne + 1, dtype=np.int64)
+        new_repkey = np.full(ne + 1, NOKEY, dtype=np.int64)
+        new_pair = np.full(ne + 1, -1, dtype=np.int64)
+        order = np.argsort(skey[prop], kind="stable")[::-1]  # youngest first
+        idx = np.nonzero(prop)[0][order]
+        # youngest first + overwrite => oldest ends up winning
+        new_rep[die[idx]] = live[idx]
+        new_repkey[die[idx]] = skey[idx]
+        new_pair[die[idx]] = idx
+        if collect_stats:
+            stats.proposals += int(prop.sum())
+            changed = (new_pair != pair) & (pair >= 0)
+            stats.corrections += int(changed.sum())
+        if (np.array_equal(new_rep, rep) and np.array_equal(new_pair, pair)
+                and np.array_equal(new_repkey, repkey)):
+            break
+        rep, repkey, pair = new_rep, new_repkey, new_pair
+
+    pairs: List[Tuple[int, int]] = []
+    for e in range(ne):
+        if pair[e] >= 0:
+            pairs.append((int(g.saddles[pair[e]]), int(nodes[e])))
+    paired = {e for _, e in pairs}
+    unpaired = sorted(int(x) for x in nodes if int(x) not in paired)
+    return ExtremaPairs(pairs, unpaired), stats

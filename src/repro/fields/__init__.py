@@ -1,0 +1,1 @@
+from .generators import make_field, FIELDS  # noqa: F401

@@ -1,0 +1,106 @@
+"""Scalar-field generators mirroring the paper's 8 benchmark datasets
+(Sec. VI-A), at configurable resolution.  Each returns a flat (nv,) float32
+array in the grid's vid order (x fastest).
+
+- elevation : monotone ramp — pathological single-pair case
+- wavelet   : smooth symmetric separable cosines — best-case load balance
+- random    : i.i.d. noise — worst case (most pairs, spatially uniform)
+- isabel    : few smooth large-scale blobs (hurricane-like)
+- backpack  : spatially imbalanced noise (features concentrated in a corner)
+- magnetic  : multi-scale noisy (reconnection-like; most pairs overall)
+- truss     : periodic lattice with defects (rich symmetric topology)
+- pressure  : band-limited turbulence-like noise
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Dict
+
+import numpy as np
+
+from repro.core.grid import Grid
+
+
+def _coords(g: Grid):
+    nx, ny, nz = g.dims
+    v = np.arange(g.nv)
+    x = (v % nx) / max(nx - 1, 1)
+    y = ((v // nx) % ny) / max(ny - 1, 1)
+    z = (v // (nx * ny)) / max(nz - 1, 1)
+    return x, y, z
+
+
+def elevation(g: Grid, rng):
+    x, y, z = _coords(g)
+    return (x + 10 * y + 100 * z).astype(np.float32)
+
+
+def wavelet(g: Grid, rng):
+    x, y, z = _coords(g)
+    r2 = (x - .5) ** 2 + (y - .5) ** 2 + (z - .5) ** 2
+    f = np.cos(12 * x) * np.cos(10 * y) * np.cos(8 * z) * np.exp(-2 * r2)
+    return f.astype(np.float32)
+
+
+def random(g: Grid, rng):
+    return rng.standard_normal(g.nv).astype(np.float32)
+
+
+def isabel(g: Grid, rng):
+    x, y, z = _coords(g)
+    f = np.zeros(g.nv)
+    for _ in range(4):
+        cx, cy, cz = rng.uniform(0.2, 0.8, 3)
+        s = rng.uniform(0.08, 0.25)
+        a = rng.uniform(0.5, 1.5)
+        f += a * np.exp(-((x - cx) ** 2 + (y - cy) ** 2 + (z - cz) ** 2)
+                        / (2 * s * s))
+    return (f + 0.01 * rng.standard_normal(g.nv)).astype(np.float32)
+
+
+def backpack(g: Grid, rng):
+    x, y, z = _coords(g)
+    noise = rng.standard_normal(g.nv)
+    weight = np.exp(-4 * ((x - 0.15) ** 2 + (y - 0.2) ** 2 + z ** 2))
+    return (noise * weight + 0.5 * x).astype(np.float32)
+
+
+def magnetic(g: Grid, rng):
+    x, y, z = _coords(g)
+    f = np.sin(20 * x) * np.sin(18 * y) * np.sin(16 * z)
+    f = f + 0.8 * rng.standard_normal(g.nv)
+    return f.astype(np.float32)
+
+
+def truss(g: Grid, rng):
+    x, y, z = _coords(g)
+    f = np.sin(8 * np.pi * x) ** 2 + np.sin(8 * np.pi * y) ** 2 \
+        + np.sin(8 * np.pi * z) ** 2
+    defects = 0.2 * rng.standard_normal(g.nv) * (rng.random(g.nv) < 0.02)
+    return (f + defects).astype(np.float32)
+
+
+def pressure(g: Grid, rng):
+    nx, ny, nz = g.dims
+    white = rng.standard_normal((nz, ny, nx))
+    spec = np.fft.rfftn(white)
+    kz = np.fft.fftfreq(nz)[:, None, None]
+    ky = np.fft.fftfreq(ny)[None, :, None]
+    kx = np.fft.rfftfreq(nx)[None, None, :]
+    k = np.sqrt(kx * kx + ky * ky + kz * kz) + 1e-6
+    spec = spec * (k ** (-5.0 / 6.0)) * (k < 0.4)
+    f = np.fft.irfftn(spec, s=(nz, ny, nx))
+    return f.reshape(-1).astype(np.float32)
+
+
+FIELDS: Dict[str, Callable] = {
+    "elevation": elevation, "wavelet": wavelet, "random": random,
+    "isabel": isabel, "backpack": backpack, "magnetic": magnetic,
+    "truss": truss, "pressure": pressure,
+}
+
+
+def make_field(name: str, dims, seed: int = 0) -> np.ndarray:
+    g = Grid.of(*dims)
+    rng = np.random.default_rng(seed)
+    return FIELDS[name](g, rng)

@@ -1,0 +1,149 @@
+"""Pallas TPU kernel for the lower-star discrete gradient.
+
+TARGET: TPU v5e.  The kernel tiles the vertex axis; each block loads a
+(TILE, 27) neighbor-order window plus the (TILE,) vertex orders into VMEM and
+runs the branchless ProcessLowerStars pairing entirely on-chip:
+
+- the stencil gather (HBM-bound) happens *outside* as a pre-pass (im2col
+  style), so the kernel's BlockSpec tiling is exact — no halo logic;
+- priority queues become masked lexicographic argmins over the 74-row packed
+  star table (VPU reductions along the row axis);
+- all scatter-style updates are one-hot selects (no dynamic stores), which
+  lowers cleanly to the TPU vector unit.
+
+Working set per block (TILE=256): 256×27×4 B (nbrs) + 256×74×3×4 B (keys)
++ a few 256×74 masks ≈ 0.4 MB — comfortably inside the 16 MB VMEM with room
+for double buffering.  TILE is a multiple of 128 to align the lane dimension.
+
+Validated in ``interpret=True`` mode on CPU against ``ref.py`` (which is in
+turn validated against the literal priority-queue reference).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from repro.core import gradient as GR
+from repro.core import grid as G
+from . import ref as REF
+
+R = REF.R
+EDGE_ROWS = REF.EDGE_ROWS
+NOT_L, AVAIL, TAIL, HEAD, CRIT = (GR.NOT_L, GR.AVAIL, GR.TAIL, GR.HEAD,
+                                  GR.CRIT)
+
+
+def _onehot_set(arr, idx, value, active):
+    """arr (n,R); set arr[i, idx[i]] = value where active[i] (no-op else)."""
+    oh = (jnp.arange(arr.shape[-1])[None, :] == idx[:, None]) & active[:, None]
+    return jnp.where(oh, jnp.asarray(value, arr.dtype), arr)
+
+
+def _lower_star_kernel(nbrs_ref, ov_ref, oth_ref, fid_ref, status_ref,
+                       partner_ref, vstat_ref, vpart_ref):
+    nbrs = nbrs_ref[...]          # (TILE, 27)
+    ov = ov_ref[...]              # (TILE, 1)
+    ov = ov[:, 0]
+    n = nbrs.shape[0]
+    idt = nbrs.dtype
+    inf = jnp.asarray(np.iinfo(np.dtype(idt.name)).max, idt)
+    oth = oth_ref[...]            # (74, 3) packed star tables (SMEM-sized)
+    fid = fid_ref[...]
+
+    vals = jnp.where(oth >= 0, nbrs[:, jnp.maximum(oth, 0)],
+                     jnp.asarray(-1, idt))
+    real = oth >= 0
+    in_l = (((~real) | (vals >= 0)) & ((~real) | (vals < ov[:, None, None]))
+            ).all(-1)
+    keys = REF.sort3_desc(vals)
+
+    status = jnp.where(in_l, jnp.int8(AVAIL), jnp.int8(NOT_L))  # (TILE,R)
+    partner = jnp.full((n, R), -1, jnp.int32)
+    rows = jnp.arange(R)
+
+    has_edge = ((status == AVAIL) & (rows[None, :] < EDGE_ROWS)).any(-1)
+    delta = REF.lexmin(keys, (status == AVAIL) & (rows[None, :] < EDGE_ROWS),
+                       inf)
+    vstat = jnp.where(has_edge, jnp.int8(TAIL), jnp.int8(CRIT))
+    vpart = jnp.where(has_edge, delta, -1).astype(jnp.int32)
+    status = _onehot_set(status, delta, HEAD, has_edge)
+    partner = _onehot_set(partner, delta, -2, has_edge)
+
+    def cond(carry):
+        return ~carry[2].all()
+
+    def body(carry):
+        status, partner, _ = carry
+        avail = status == AVAIL
+        fa = (fid >= 0) & avail[:, jnp.maximum(fid, 0)]
+        nuf = fa.sum(-1)
+        m1 = avail & (nuf == 1)
+        any1 = m1.any(-1)
+        alpha = REF.lexmin(keys, m1, inf)
+        fa_a = jnp.take_along_axis(fa, alpha[:, None, None], axis=1)[:, 0]
+        fid_a = fid[alpha]
+        face = jnp.take_along_axis(
+            fid_a, jnp.argmax(fa_a, -1)[:, None], axis=-1)[:, 0]
+        m0 = avail & (nuf == 0)
+        any0 = m0.any(-1)
+        gamma = REF.lexmin(keys, m0, inf)
+        do1 = any1
+        do0 = (~any1) & any0
+        status = _onehot_set(status, alpha, HEAD, do1)
+        status = _onehot_set(status, face, TAIL, do1)
+        status = _onehot_set(status, gamma, CRIT, do0)
+        partner = jnp.where(
+            ((rows[None, :] == alpha[:, None]) & do1[:, None]),
+            face[:, None].astype(jnp.int32), partner)
+        partner = jnp.where(
+            ((rows[None, :] == face[:, None]) & do1[:, None]),
+            alpha[:, None].astype(jnp.int32), partner)
+        done = ~(any1 | any0)
+        return status, partner, done
+
+    status, partner, _ = jax.lax.while_loop(
+        cond, body, (status, partner, jnp.zeros(n, bool)))
+    status_ref[...] = status
+    partner_ref[...] = partner
+    vstat_ref[...] = vstat[:, None]
+    vpart_ref[...] = vpart[:, None]
+
+
+@functools.partial(jax.jit, static_argnames=("tile", "interpret"))
+def lower_star_gradient_pallas(nbrs, ov, tile: int = 256,
+                               interpret: bool = True):
+    """Pallas-tiled lower-star gradient.  nbrs (n,27), ov (n,)."""
+    n = nbrs.shape[0]
+    npad = -(-n // tile) * tile
+    nbrs_p = jnp.pad(nbrs, ((0, npad - n), (0, 0)), constant_values=-1)
+    ov_p = jnp.pad(ov, (0, npad - n))[:, None]
+    grid_ = (npad // tile,)
+    status, partner, vstat, vpart = pl.pallas_call(
+        _lower_star_kernel,
+        grid=grid_,
+        in_specs=[
+            pl.BlockSpec((tile, 27), lambda i: (i, 0)),
+            pl.BlockSpec((tile, 1), lambda i: (i, 0)),
+            pl.BlockSpec((R, 3), lambda i: (0, 0)),
+            pl.BlockSpec((R, 3), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((tile, R), lambda i: (i, 0)),
+            pl.BlockSpec((tile, R), lambda i: (i, 0)),
+            pl.BlockSpec((tile, 1), lambda i: (i, 0)),
+            pl.BlockSpec((tile, 1), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((npad, R), jnp.int8),
+            jax.ShapeDtypeStruct((npad, R), jnp.int32),
+            jax.ShapeDtypeStruct((npad, 1), jnp.int8),
+            jax.ShapeDtypeStruct((npad, 1), jnp.int32),
+        ],
+        interpret=interpret,
+    )(nbrs_p, ov_p, jnp.asarray(REF.OTH), jnp.asarray(REF.FID))
+    return (status[:n], partner[:n], vstat[:n, 0], vpart[:n, 0])

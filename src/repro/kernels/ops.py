@@ -1,0 +1,37 @@
+"""jit'd wrappers around the gradient kernels.
+
+``backend``:
+- ``"jax"``     — pure-jnp oracle (ref.py), jit-compiled; default on CPU.
+- ``"pallas"``  — Pallas kernel, interpret mode on CPU (TPU target).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import gradient as GR
+from repro.core.grid import Grid
+from . import ref as REF
+from .lower_star import lower_star_gradient_pallas
+
+_jnp_jit = jax.jit(REF.lower_star_gradient_jnp)
+
+
+def neighbor_orders_jnp(grid: Grid, order):
+    return GR.neighbor_orders(grid, jnp.asarray(order), xp=jnp)
+
+
+def lower_star_gradient(grid: Grid, order, backend: str = "jax",
+                        tile: int = 256):
+    """Compute per-vertex packed gradient rows for the whole grid."""
+    order = jnp.asarray(order)
+    nbrs = neighbor_orders_jnp(grid, order)
+    if backend == "jax":
+        return _jnp_jit(nbrs, order)
+    if backend == "pallas":
+        return lower_star_gradient_pallas(nbrs, order, tile=tile,
+                                          interpret=True)
+    raise ValueError(f"unknown backend {backend!r}")

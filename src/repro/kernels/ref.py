@@ -1,0 +1,118 @@
+"""Pure-jnp oracle for the lower-star gradient kernel.
+
+The masked-recomputation form of ProcessLowerStars (see
+``repro.core.gradient`` module doc for the equivalence argument with the
+literal priority-queue algorithm).  All vertices advance in lock-step inside
+one ``lax.while_loop``; a per-vertex ``done`` mask retires finished lanes.
+Priority queues become masked lexicographic argmins — branchless and
+lane-parallel, i.e. the exact program a TPU VPU wants to run.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import gradient as GR
+from repro.core import grid as G
+
+R = GR.NROWS                     # 74 packed star rows
+EDGE_ROWS = G.NSTAR[1]           # rows [0, 14) are edges
+OTH = np.asarray(GR.PACKED["others"], dtype=np.int32)   # (74,3), -1 pad
+FID = np.asarray(GR.PACKED["fid"], dtype=np.int32)      # (74,3), -1 pad
+
+NOT_L, AVAIL, TAIL, HEAD, CRIT = GR.NOT_L, GR.AVAIL, GR.TAIL, GR.HEAD, GR.CRIT
+
+
+def sort3_desc(vals):
+    """Descending 3-element sorting network along the last axis."""
+    a, b, c = vals[..., 0], vals[..., 1], vals[..., 2]
+    a, b = jnp.maximum(a, b), jnp.minimum(a, b)
+    a, c = jnp.maximum(a, c), jnp.minimum(a, c)
+    b, c = jnp.maximum(b, c), jnp.minimum(b, c)
+    return jnp.stack([a, b, c], axis=-1)
+
+
+def lexmin(keys, mask, inf):
+    """Index of the lexicographically smallest key row under ``mask``.
+
+    keys: (..., R, 3); mask: (..., R).  Returns (...,) int32 (0 if empty)."""
+    m = mask
+    for c in range(3):
+        kc = jnp.where(m, keys[..., c], inf)
+        mn = kc.min(axis=-1, keepdims=True)
+        m = m & (kc == mn)
+    return jnp.argmax(m, axis=-1).astype(jnp.int32)
+
+
+def lower_star_gradient_jnp(nbrs, ov):
+    """Gradient pairing for a batch of vertices.
+
+    nbrs: (n, 27) neighbor orders (-1 outside grid); ov: (n,) vertex order.
+    Returns (status (n,74) int8, partner (n,74) int32, vstat (n,) int8,
+    vpart (n,) int32).  partner == -2 marks the edge paired with the vertex.
+    """
+    n = nbrs.shape[0]
+    idt = nbrs.dtype
+    inf = jnp.asarray(np.iinfo(np.dtype(idt.name)).max, idt)
+    oth = jnp.asarray(OTH)
+    fid = jnp.asarray(FID)
+
+    vals = jnp.where(oth >= 0, nbrs[:, jnp.maximum(oth, 0)],
+                     jnp.asarray(-1, idt))                    # (n,74,3)
+    real = oth >= 0
+    ok = (~real) | (vals >= 0)
+    lower = (~real) | (vals < ov[:, None, None])
+    in_l = (ok & lower).all(-1)                               # (n,74)
+    keys = sort3_desc(vals)                                   # (n,74,3)
+
+    status = jnp.where(in_l, jnp.int8(AVAIL), jnp.int8(NOT_L))
+    status = jnp.pad(status, ((0, 0), (0, 1)))                # dump col = R
+    partner = jnp.full((n, R + 1), -1, jnp.int32)
+
+    rows = jnp.arange(R)
+    rr = jnp.arange(n)
+    has_edge = (status[:, :EDGE_ROWS] == AVAIL).any(-1)
+    delta = lexmin(keys, (status[:, :R] == AVAIL) & (rows < EDGE_ROWS), inf)
+    vstat = jnp.where(has_edge, jnp.int8(TAIL), jnp.int8(CRIT))
+    vpart = jnp.where(has_edge, delta, -1).astype(jnp.int32)
+    di = jnp.where(has_edge, delta, R)
+    status = status.at[rr, di].set(jnp.int8(HEAD))
+    partner = partner.at[rr, di].set(-2)
+
+    def cond(carry):
+        return ~carry[2].all()
+
+    def body(carry):
+        status, partner, _ = carry
+        st = status[:, :R]
+        avail = st == AVAIL
+        fa = (fid >= 0) & avail[:, jnp.maximum(fid, 0)]       # (n,74,3)
+        nuf = fa.sum(-1)
+        m1 = avail & (nuf == 1)
+        any1 = m1.any(-1)
+        alpha = lexmin(keys, m1, inf)
+        fa_a = jnp.take_along_axis(fa, alpha[:, None, None], axis=1)[:, 0]
+        fid_a = fid[alpha]                                     # (n,3)
+        face = jnp.take_along_axis(
+            fid_a, jnp.argmax(fa_a, -1)[:, None], axis=-1)[:, 0]
+        m0 = avail & (nuf == 0)
+        any0 = m0.any(-1)
+        gamma = lexmin(keys, m0, inf)
+        do1 = any1
+        do0 = (~any1) & any0
+        ia = jnp.where(do1, alpha, R)
+        ifc = jnp.where(do1, face, R)
+        ig = jnp.where(do0, gamma, R)
+        status = status.at[rr, ia].set(jnp.int8(HEAD))
+        status = status.at[rr, ifc].set(jnp.int8(TAIL))
+        status = status.at[rr, ig].set(jnp.int8(CRIT))
+        partner = partner.at[rr, ia].set(face.astype(jnp.int32))
+        partner = partner.at[rr, ifc].set(alpha.astype(jnp.int32))
+        done = ~(any1 | any0)
+        return status, partner, done
+
+    status, partner, _ = jax.lax.while_loop(
+        cond, body, (status, partner, jnp.zeros(n, bool)))
+    return status[:, :R], partner[:, :R], vstat, vpart

@@ -1,0 +1,45 @@
+"""Production meshes.
+
+Functions, not module-level constants: importing this module never touches
+jax device state.  The dry-run forces 512 host devices *before* any jax
+import (see dryrun.py); real deployments get real TPU meshes from the same
+entry points.
+"""
+
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """(data=16, model=16) single pod; (pod=2, data=16, model=16) two pods."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = int(np.prod(shape))
+    devs = jax.devices()
+    if len(devs) == n:
+        return jax.make_mesh(shape, axes)
+    assert len(devs) >= n, (
+        f"need {n} devices, have {len(devs)} — the dry-run must set "
+        "XLA_FLAGS=--xla_force_host_platform_device_count before jax init")
+    return jax.make_mesh(shape, axes, devices=devs[:n])
+
+
+def make_field_mesh(*, multi_pod: bool = False):
+    """z-slab mesh for DDMS field decomposition: 256 or 2x256 blocks.
+    The z axis shards over every mesh axis (the ICI ring)."""
+    if multi_pod:
+        shape, axes = (2, 256), ("pod", "data")
+    else:
+        shape, axes = (256,), ("data",)
+    n = int(np.prod(shape))
+    devs = jax.devices()
+    if len(devs) == n:
+        return jax.make_mesh(shape, axes)
+    assert len(devs) >= n
+    return jax.make_mesh(shape, axes, devices=devs[:n])
+
+
+def batch_axes_for(mesh) -> tuple:
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))

@@ -1,0 +1,132 @@
+"""Roofline term extraction from a compiled dry-run artifact.
+
+Hardware model: TPU v5e — 197 TFLOP/s bf16 per chip, 819 GB/s HBM,
+~50 GB/s/link ICI.  Three terms per (arch, shape, mesh) cell:
+
+    compute_s    = HLO_FLOPs_per_device / PEAK_FLOPS
+    memory_s     = HLO_bytes_per_device / HBM_BW
+    collective_s = sum over collective ops of result_bytes / ICI_BW
+
+``compiled.cost_analysis()`` gives per-device FLOPs/bytes of the SPMD
+partitioned module.  Collective bytes are NOT in cost_analysis: we parse the
+optimized HLO text and sum the *result* shapes of every all-gather /
+all-reduce / reduce-scatter / all-to-all / collective-permute instruction
+(result size ~= data moved per device per op; all-reduce moves ~2x in a
+ring — reported via the per-op breakdown so the factor can be applied in
+analysis).  MODEL_FLOPS = 6*N*D (dense) or 6*N_active*D (MoE) per trained
+token, 2*N_active per decoded token; the ratio MODEL/HLO exposes remat and
+padding waste.
+"""
+
+from __future__ import annotations
+
+import json
+import re
+from dataclasses import asdict, dataclass, field
+from typing import Dict, Optional
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # bytes/s
+ICI_BW = 50e9                # bytes/s/link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "token": 0, "opaque": 0,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        b = _DTYPE_BYTES.get(dt)
+        if b is None:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * b
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Sum result bytes per collective kind over the optimized module."""
+    out = {k: 0 for k in _COLLECTIVES}
+    out["count"] = 0
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        m = re.match(r"%?[\w.\-]+\s*=\s*(\(?[a-z0-9]+\[[^=]*?)\s*"
+                     r"(all-gather|all-reduce|reduce-scatter|all-to-all|"
+                     r"collective-permute)(-start)?\(", ls)
+        if not m:
+            continue
+        shape_txt, kind = m.group(1), m.group(2)
+        if m.group(3) == "-start" and kind == "collective-permute":
+            # collective-permute-start results carry aliased buffers; count
+            # the payload once
+            pass
+        out[kind] += _shape_bytes(shape_txt)
+        out["count"] += 1
+    return out
+
+
+@dataclass
+class Roofline:
+    flops: float
+    bytes_accessed: float
+    coll: Dict[str, int]
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    dominant: str
+    model_flops: Optional[float] = None
+    useful_ratio: Optional[float] = None
+
+    def summary(self) -> str:
+        return (f"compute {self.compute_s*1e3:.3f} ms | memory "
+                f"{self.memory_s*1e3:.3f} ms | collective "
+                f"{self.collective_s*1e3:.3f} ms -> {self.dominant}"
+                + (f" | useful {self.useful_ratio:.2f}"
+                   if self.useful_ratio else ""))
+
+
+def analyze(compiled, model_flops_per_device: Optional[float] = None
+            ) -> Roofline:
+    ca = compiled.cost_analysis()
+    if isinstance(ca, list):
+        ca = ca[0]
+    flops = float(ca.get("flops", 0.0))
+    byts = float(ca.get("bytes accessed", 0.0))
+    try:
+        hlo = compiled.as_text()
+    except Exception:
+        hlo = ""
+    coll = collective_bytes(hlo)
+    cbytes = sum(v for k, v in coll.items() if k in _COLLECTIVES)
+    terms = dict(compute=flops / PEAK_FLOPS, memory=byts / HBM_BW,
+                 collective=cbytes / ICI_BW)
+    dominant = max(terms, key=terms.get)
+    r = Roofline(flops, byts, coll, terms["compute"], terms["memory"],
+                 terms["collective"], dominant)
+    if model_flops_per_device:
+        r.model_flops = model_flops_per_device
+        r.useful_ratio = model_flops_per_device / max(flops, 1.0)
+    return r
+
+
+def model_flops(cfg, shape, n_devices: int) -> float:
+    """Per-device useful FLOPs of one step (6*N*D train, 2*N decode)."""
+    n_active = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens / n_devices
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens / n_devices
+    return 2.0 * n_active * shape.global_batch / n_devices

@@ -1,0 +1,1 @@
+# LM-family model substrate: configs, layers, decoder-only / enc-dec stacks.

@@ -1,0 +1,571 @@
+"""Pure-JAX layer library (no flax): params are nested dicts of arrays,
+described by a parallel *meta* tree carrying shapes + logical sharding axes.
+
+Logical axes (mapped to mesh axes by repro.train.sharding):
+  embed, mlp, heads, kv, head (per-head feature), vocab, experts, conv,
+  state, ssm_heads, lora — plus None for replicated dims.
+
+Compute dtype is bf16 (cast at use), params are kept f32 (master copy);
+softmax/normalization accumulate in f32.  All matmul dims that shard over
+the model axis are multiples of 128 in the assigned configs (MXU-aligned).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from dataclasses import dataclass
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .config import MLACfg, ModelConfig, MoECfg, SSMCfg
+
+COMPUTE_DTYPE = jnp.bfloat16
+
+
+@dataclass(frozen=True)
+class PM:
+    """Param meta: shape + logical axes (+ init style)."""
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]
+    init: str = "normal"     # normal | zeros | ones
+
+
+def init_param(key, pm: PM, scale: float = 0.02):
+    if pm.init == "zeros":
+        return jnp.zeros(pm.shape, jnp.float32)
+    if pm.init == "ones":
+        return jnp.ones(pm.shape, jnp.float32)
+    return scale * jax.random.normal(key, pm.shape, jnp.float32)
+
+
+def init_tree(key, meta):
+    leaves, treedef = jax.tree_util.tree_flatten(
+        meta, is_leaf=lambda x: isinstance(x, PM))
+    keys = jax.random.split(key, len(leaves))
+    vals = [init_param(k, pm) for k, pm in zip(keys, leaves)]
+    return jax.tree_util.tree_unflatten(treedef, vals)
+
+
+def cast(x):
+    return x.astype(COMPUTE_DTYPE)
+
+
+# ---------------------------------------------------------------------------
+# norms / rope
+# ---------------------------------------------------------------------------
+
+def rmsnorm_meta(d: int) -> Dict[str, PM]:
+    return {"scale": PM((d,), ("embed",), "ones")}
+
+
+def rmsnorm(params, x, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps)).astype(x.dtype) \
+        * cast(params["scale"])
+
+
+def rope_freqs(hd: int, theta: float):
+    return 1.0 / (theta ** (np.arange(0, hd, 2) / hd))
+
+
+def apply_rope(x, pos, theta: float = 10000.0):
+    """x: (..., S, H, hd); pos: (..., S) absolute positions.
+
+    Interleaved (GPT-NeoX 'rotate every two') pairing: rotation pairs are
+    adjacent dims, so a head_dim sharded over the model axis stays local
+    (the head-dim TP fallback for archs whose head counts don't divide the
+    mesh — see EXPERIMENTS.md §Perf)."""
+    hd = x.shape[-1]
+    freqs = jnp.asarray(rope_freqs(hd, theta), jnp.float32)
+    ang = pos[..., :, None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    cos = jnp.repeat(jnp.cos(ang), 2, axis=-1)[..., None, :]
+    sin = jnp.repeat(jnp.sin(ang), 2, axis=-1)[..., None, :]
+    xf = x.astype(jnp.float32)
+    # pairwise rotate: (x0, x1) -> (-x1, x0) on adjacent pairs
+    xr = xf.reshape(xf.shape[:-1] + (hd // 2, 2))
+    xr = jnp.stack([-xr[..., 1], xr[..., 0]], axis=-1)
+    xr = xr.reshape(xf.shape)
+    return (xf * cos + xr * sin).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention (GQA / sliding window)
+# ---------------------------------------------------------------------------
+
+def attention_meta(cfg: ModelConfig) -> Dict[str, PM]:
+    d, H, Kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv, cfg.hd
+    m = {
+        "wq": PM((d, H, hd), ("embed", "heads", "head")),
+        "wk": PM((d, Kv, hd), ("embed", "kv", "head")),
+        "wv": PM((d, Kv, hd), ("embed", "kv", "head")),
+        "wo": PM((H, hd, d), ("heads", "head", "embed")),
+    }
+    if cfg.qkv_bias:
+        m["bq"] = PM((H, hd), ("heads", "head"), "zeros")
+        m["bk"] = PM((Kv, hd), ("kv", "head"), "zeros")
+        m["bv"] = PM((Kv, hd), ("kv", "head"), "zeros")
+    return m
+
+
+def _sdpa(q, k, v, mask):
+    """Materialized-logits attention (short sequences / decode).
+    q: (B,S,H,hd); k,v: (B,T,Kv,hd); mask broadcastable to (B,Kv,rep,S,T)."""
+    B, S, H, hd = q.shape
+    Kv = k.shape[2]
+    rep = H // Kv
+    qs = q.reshape(B, S, Kv, rep, hd)
+    logits = jnp.einsum("bskrh,btkh->bkrst", qs, k).astype(jnp.float32)
+    logits = logits * np.float32(1.0 / np.sqrt(hd))
+    logits = jnp.where(mask, logits, -1e30)
+    w = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    o = jnp.einsum("bkrst,btkh->bskrh", w, v)
+    return o.reshape(B, S, H, v.shape[-1])   # v dim may differ (MLA)
+
+
+FLASH_THRESHOLD = 2048   # sequences above this use the chunked path
+FLASH_QC = 512
+FLASH_KC = 1024
+CAUSAL_BLOCK_SKIP = True  # skip fully-masked kv blocks (static triangle)
+FLASH_UNROLL = False      # unroll the kv scan (dry-run exact-cost mode)
+
+
+def _flash_sdpa(q, k, v, causal: bool, window=None,
+                qc: int = None, kc: int = None):
+    """Online-softmax (flash) attention in pure JAX: outer unrolled q-chunk
+    loop (static causal triangle skip), inner lax.scan over kv chunks with
+    running (max, denom, acc).  Never materializes (S, T) logits."""
+    qc = qc or FLASH_QC
+    kc = kc or FLASH_KC
+    B, S, H, hd = q.shape
+    T, Kv = k.shape[1], k.shape[2]
+    rep = H // Kv
+    dv = v.shape[-1]
+    Sp = -(-S // qc) * qc
+    Tp = -(-T // kc) * kc
+    qp = jnp.pad(q, ((0, 0), (0, Sp - S), (0, 0), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, Tp - T), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, Tp - T), (0, 0), (0, 0)))
+    nq, nk = Sp // qc, Tp // kc
+    kb = kp.reshape(B, nk, kc, Kv, hd)
+    vb = vp.reshape(B, nk, kc, Kv, dv)
+    scale = np.float32(1.0 / np.sqrt(hd))
+
+    outs = []
+    for qi in range(nq):
+        qblk = qp[:, qi * qc:(qi + 1) * qc].reshape(B, qc, Kv, rep, hd)
+        q_pos = qi * qc + jnp.arange(qc)
+        hi = min(nk, (qi + 1) * qc // kc + (1 if (qi + 1) * qc % kc else 0)) \
+            if (causal and CAUSAL_BLOCK_SKIP) else nk
+        lo = 0
+        if causal and window is not None and CAUSAL_BLOCK_SKIP:
+            lo = max(0, (qi * qc - window) // kc)
+        m0 = jnp.full((B, Kv, rep, qc), -jnp.inf, jnp.float32)
+        l0 = jnp.zeros((B, Kv, rep, qc), jnp.float32)
+        a0 = jnp.zeros((B, Kv, rep, qc, dv), jnp.float32)
+
+        def k_step(carry, ki):
+            m, l, acc = carry
+            kblk = kb[:, ki]                          # (B,kc,Kv,hd)
+            vblk = vb[:, ki]
+            s = jnp.einsum("bqkrh,btkh->bkrqt", qblk, kblk
+                           ).astype(jnp.float32) * scale
+            k_pos = ki * kc + jnp.arange(kc)
+            ok = (k_pos < T)[None, :]
+            if causal:
+                ok = ok & (q_pos[:, None] >= k_pos[None, :])
+                if window is not None:
+                    ok = ok & (q_pos[:, None] - k_pos[None, :] < window)
+            s = jnp.where(ok[None, None, None], s, -jnp.inf)
+            m_new = jnp.maximum(m, s.max(-1))
+            m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+            p = jnp.exp(s - m_safe[..., None])
+            p = jnp.where(ok[None, None, None], p, 0.0)
+            corr = jnp.where(jnp.isfinite(m), jnp.exp(m - m_safe), 0.0)
+            l = l * corr + p.sum(-1)
+            acc = acc * corr[..., None] + jnp.einsum(
+                "bkrqt,btkh->bkrqh", p.astype(vblk.dtype), vblk)
+            return (m_new, l, acc), None
+
+        (m, l, acc), _ = jax.lax.scan(k_step, (m0, l0, a0),
+                                      jnp.arange(lo, hi),
+                                      unroll=FLASH_UNROLL or 1)
+        o = acc / jnp.maximum(l, 1e-30)[..., None]
+        outs.append(o.transpose(0, 3, 1, 2, 4).reshape(B, qc, H, dv))
+    out = jnp.concatenate(outs, axis=1)[:, :S]
+    return out.astype(v.dtype)
+
+
+def sdpa(q, k, v, *, causal: bool, window=None, mask=None):
+    """Dispatch: flash for long sequences, materialized otherwise.
+    ``mask`` (decode write-mask etc.) forces the materialized path."""
+    if mask is None and q.shape[1] > FLASH_THRESHOLD:
+        return _flash_sdpa(q, k, v, causal, window)
+    if mask is None:
+        S, T = q.shape[1], k.shape[1]
+        spans_q = jnp.arange(S)
+        spans_k = jnp.arange(T)
+        if causal:
+            m = spans_q[:, None] >= spans_k[None, :]
+            if window is not None:
+                m &= (spans_q[:, None] - spans_k[None, :]) < window
+        else:
+            m = jnp.ones((S, T), bool)
+        mask = m[None, None, None]
+    return _sdpa(q, k, v, mask)
+
+
+def attention(cfg: ModelConfig, params, x, pos, cache=None):
+    """Causal (optionally sliding-window) GQA.
+
+    Train/prefill: cache=None, full sequence.  Decode: cache is a dict with
+    k/v ring buffers and `idx` (tokens written so far); x is (B,1,d)."""
+    B, S, d = x.shape
+    q = jnp.einsum("bsd,dhk->bshk", x, cast(params["wq"]))
+    k = jnp.einsum("bsd,dhk->bshk", x, cast(params["wk"]))
+    v = jnp.einsum("bsd,dhk->bshk", x, cast(params["wv"]))
+    if cfg.qkv_bias:
+        q = q + cast(params["bq"])
+        k = k + cast(params["bk"])
+        v = v + cast(params["bv"])
+    q = apply_rope(q, pos, cfg.rope_theta)
+    k = apply_rope(k, pos, cfg.rope_theta)
+
+    if cache is None:
+        o = sdpa(q, k, v, causal=True, window=cfg.window)
+    else:
+        T = cache["k"].shape[1]
+        slot = cache["idx"] % T if cfg.window is not None else cache["idx"]
+        ck = jax.lax.dynamic_update_index_in_dim(cache["k"], k[:, 0], slot, 1)
+        cv = jax.lax.dynamic_update_index_in_dim(cache["v"], v[:, 0], slot, 1)
+        cache = dict(cache, k=ck, v=cv, idx=cache["idx"] + 1)
+        written = jnp.arange(T) <= slot if cfg.window is None else \
+            jnp.arange(T) < jnp.minimum(cache["idx"], T)
+        o = sdpa(q, ck, cv, causal=False,
+                 mask=written[None, None, None, None, :])
+    out = jnp.einsum("bshk,hkd->bsd", o, cast(params["wo"]))
+    return out, cache
+
+
+def attention_cache(cfg: ModelConfig, batch: int, max_len: int):
+    T = min(max_len, cfg.window) if cfg.window is not None else max_len
+    shp = (batch, T, cfg.n_kv, cfg.hd)
+    return {"k": jnp.zeros(shp, COMPUTE_DTYPE),
+            "v": jnp.zeros(shp, COMPUTE_DTYPE),
+            "idx": jnp.zeros((), jnp.int32)}
+
+
+# ---------------------------------------------------------------------------
+# MLA (multi-head latent attention, MiniCPM3/DeepSeek style)
+# ---------------------------------------------------------------------------
+
+def mla_meta(cfg: ModelConfig) -> Dict[str, PM]:
+    m = cfg.mla
+    d, H = cfg.d_model, cfg.n_heads
+    return {
+        "wdq": PM((d, m.q_lora), ("embed", "lora")),
+        "q_norm": rmsnorm_meta(m.q_lora)["scale"],
+        "wuq": PM((m.q_lora, H, m.qk_nope + m.qk_rope),
+                  ("lora", "heads", "head")),
+        "wdkv": PM((d, m.kv_lora + m.qk_rope), ("embed", "lora")),
+        "kv_norm": rmsnorm_meta(m.kv_lora)["scale"],
+        "wukv": PM((m.kv_lora, H, m.qk_nope + m.v_head),
+                   ("lora", "heads", "head")),
+        "wo": PM((H, m.v_head, d), ("heads", "head", "embed")),
+    }
+
+
+def mla_attention(cfg: ModelConfig, params, x, pos, cache=None):
+    if cache is not None and MLA_ABSORBED_DECODE:
+        return mla_attention_absorbed(cfg, params, x, pos, cache)
+    m = cfg.mla
+    B, S, d = x.shape
+    H = cfg.n_heads
+    cq = rmsnorm({"scale": params["q_norm"]},
+                 jnp.einsum("bsd,dl->bsl", x, cast(params["wdq"])))
+    q = jnp.einsum("bsl,lhk->bshk", cq, cast(params["wuq"]))
+    q_nope, q_rope = q[..., :m.qk_nope], q[..., m.qk_nope:]
+    q_rope = apply_rope(q_rope, pos, cfg.rope_theta)
+
+    dkv = jnp.einsum("bsd,dl->bsl", x, cast(params["wdkv"]))
+    c_kv, k_rope1 = dkv[..., :m.kv_lora], dkv[..., m.kv_lora:]
+    c_kv = rmsnorm({"scale": params["kv_norm"]}, c_kv)
+    k_rope1 = apply_rope(k_rope1[:, :, None, :], pos, cfg.rope_theta)[:, :, 0]
+
+    if cache is not None:
+        slot = cache["idx"]
+        cc = jax.lax.dynamic_update_index_in_dim(cache["c"], c_kv[:, 0],
+                                                 slot, 1)
+        cr = jax.lax.dynamic_update_index_in_dim(cache["r"], k_rope1[:, 0],
+                                                 slot, 1)
+        cache = dict(cache, c=cc, r=cr, idx=cache["idx"] + 1)
+        c_all, r_all = cc, cr
+        T = cc.shape[1]
+        mask = (jnp.arange(T) <= slot)[None, None, None, None, :]
+    else:
+        c_all, r_all = c_kv, k_rope1
+        mask = None
+
+    kv = jnp.einsum("btl,lhk->bthk", c_all, cast(params["wukv"]))
+    k_nope, vv = kv[..., :m.qk_nope], kv[..., m.qk_nope:]
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(r_all[:, :, None, :],
+                                  k_nope.shape[:-1] + (m.qk_rope,))], -1)
+    qfull = jnp.concatenate([q_nope, q_rope], -1)
+    o = sdpa(qfull, k, vv, causal=True, mask=mask)
+    out = jnp.einsum("bshk,hkd->bsd", o, cast(params["wo"]))
+    return out, cache
+
+
+def mla_attention_absorbed(cfg: ModelConfig, params, x, pos, cache):
+    """Decode-path MLA with the *absorbed* up-projection (DeepSeek-V2 trick,
+    EXPERIMENTS.md §Perf): W_ukv is folded into the per-head query/output
+    maps, so attention contracts directly against the compressed latent
+    cache (B, T, kv_lora) instead of re-materializing per-head K/V over the
+    whole history every step.  O(T * kv_lora) work/bytes per head instead of
+    O(T * (qk_nope + v_head)) re-projection — ~H x fewer cache-side FLOPs.
+
+    Numerically identical to ``mla_attention`` (asserted by tests)."""
+    m = cfg.mla
+    B, S, d = x.shape
+    H = cfg.n_heads
+    assert cache is not None and S == 1
+    cq = rmsnorm({"scale": params["q_norm"]},
+                 jnp.einsum("bsd,dl->bsl", x, cast(params["wdq"])))
+    q = jnp.einsum("bsl,lhk->bshk", cq, cast(params["wuq"]))
+    q_nope, q_rope = q[..., :m.qk_nope], q[..., m.qk_nope:]
+    q_rope = apply_rope(q_rope, pos, cfg.rope_theta)
+
+    dkv = jnp.einsum("bsd,dl->bsl", x, cast(params["wdkv"]))
+    c_kv, k_rope1 = dkv[..., :m.kv_lora], dkv[..., m.kv_lora:]
+    c_kv = rmsnorm({"scale": params["kv_norm"]}, c_kv)
+    k_rope1 = apply_rope(k_rope1[:, :, None, :], pos, cfg.rope_theta)[:, :, 0]
+
+    slot = cache["idx"]
+    cc = jax.lax.dynamic_update_index_in_dim(cache["c"], c_kv[:, 0], slot, 1)
+    cr = jax.lax.dynamic_update_index_in_dim(cache["r"], k_rope1[:, 0],
+                                             slot, 1)
+    cache = dict(cache, c=cc, r=cr, idx=cache["idx"] + 1)
+    T = cc.shape[1]
+
+    wukv = cast(params["wukv"])                      # (lora, H, nope+v)
+    wk = wukv[..., :m.qk_nope]                       # (lora, H, nope)
+    wv = wukv[..., m.qk_nope:]                       # (lora, H, v)
+    # absorb: q_eff[l] = sum_k q_nope[k] * wk[l,h,k]
+    q_eff = jnp.einsum("bshk,lhk->bshl", q_nope, wk)     # (B,1,H,lora)
+    s_lat = jnp.einsum("bshl,btl->bhst", q_eff, cc)      # latent scores
+    s_rope = jnp.einsum("bshk,btk->bhst", q_rope, cr)
+    scale = np.float32(1.0 / np.sqrt(m.qk_nope + m.qk_rope))
+    logits = (s_lat + s_rope).astype(jnp.float32) * scale
+    mask = (jnp.arange(T) <= slot)[None, None, None, :]
+    logits = jnp.where(mask, logits, -1e30)
+    w = jax.nn.softmax(logits, axis=-1).astype(cc.dtype)
+    o_lat = jnp.einsum("bhst,btl->bshl", w, cc)          # (B,1,H,lora)
+    o = jnp.einsum("bshl,lhk->bshk", o_lat, wv)          # (B,1,H,v)
+    out = jnp.einsum("bshk,hkd->bsd", o, cast(params["wo"]))
+    return out, cache
+
+
+MLA_ABSORBED_DECODE = False  # flipped by launchers / §Perf experiments
+
+
+def mla_cache(cfg: ModelConfig, batch: int, max_len: int):
+    m = cfg.mla
+    return {"c": jnp.zeros((batch, max_len, m.kv_lora), COMPUTE_DTYPE),
+            "r": jnp.zeros((batch, max_len, m.qk_rope), COMPUTE_DTYPE),
+            "idx": jnp.zeros((), jnp.int32)}
+
+
+# ---------------------------------------------------------------------------
+# MLPs / MoE
+# ---------------------------------------------------------------------------
+
+def mlp_meta(cfg: ModelConfig) -> Dict[str, PM]:
+    d, f = cfg.d_model, cfg.d_ff
+    return {"wg": PM((d, f), ("embed", "mlp")),
+            "wu": PM((d, f), ("embed", "mlp")),
+            "wd": PM((f, d), ("mlp", "embed"))}
+
+
+def mlp(params, x):
+    g = jnp.einsum("bsd,df->bsf", x, cast(params["wg"]))
+    u = jnp.einsum("bsd,df->bsf", x, cast(params["wu"]))
+    return jnp.einsum("bsf,fd->bsd", jax.nn.silu(g) * u, cast(params["wd"]))
+
+
+def moe_meta(cfg: ModelConfig) -> Dict[str, PM]:
+    d = cfg.d_model
+    mo = cfg.moe
+    E, fe = mo.n_experts, mo.d_expert
+    return {"router": PM((d, E), ("embed", "experts")),
+            "wg": PM((E, d, fe), ("experts", "embed", "mlp")),
+            "wu": PM((E, d, fe), ("experts", "embed", "mlp")),
+            "wd": PM((E, fe, d), ("experts", "mlp", "embed"))}
+
+
+def moe(cfg: ModelConfig, params, x):
+    """Capacity-based top-k MoE with *sort-based* dispatch: token-choice
+    assignments are ranked within their expert queue via argsort + bincount
+    (O(T log T), no (T, E) or (T, E, cap) tensors), scattered into an
+    (E*cap, d) buffer, run through the expert FFNs, and gathered back.
+    Expert-parallel: the E axis shards over the model mesh axis.
+    Returns (out, aux_loss)."""
+    mo = cfg.moe
+    B, S, d = x.shape
+    E, k = mo.n_experts, mo.top_k
+    logits = jnp.einsum("bsd,de->bse", x, cast(params["router"])
+                        ).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, -1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, k)             # (B,S,k)
+    gate_vals = gate_vals / jnp.sum(gate_vals, -1, keepdims=True)
+    cap = int(np.ceil(mo.capacity_factor * B * S * k / E))
+
+    Tk = B * S * k
+    expert = gate_idx.reshape(Tk)
+    # position within expert queue: rank by stable sort over expert id
+    order = jnp.argsort(expert, stable=True)                  # (Tk,)
+    counts = jnp.zeros((E,), jnp.int32).at[expert].add(1)
+    starts = jnp.cumsum(counts) - counts                      # (E,)
+    pos_sorted = jnp.arange(Tk, dtype=jnp.int32) - starts[expert[order]]
+    pos = jnp.zeros((Tk,), jnp.int32).at[order].set(pos_sorted)
+    keep = pos < cap
+    slot = jnp.where(keep, expert * cap + pos, E * cap)       # dump slot
+
+    xf = jnp.broadcast_to(x.reshape(B * S, 1, d), (B * S, k, d)) \
+        .reshape(Tk, d)
+    buf = jnp.zeros((E * cap + 1, d), x.dtype).at[slot].set(xf)
+    xe = buf[:E * cap].reshape(E, cap, d)
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xe, cast(params["wg"]))) \
+        * jnp.einsum("ecd,edf->ecf", xe, cast(params["wu"]))
+    ye = jnp.einsum("ecf,efd->ecd", h, cast(params["wd"]))
+    yf = ye.reshape(E * cap, d)
+    ytok = jnp.where(keep[:, None], yf[jnp.minimum(slot, E * cap - 1)], 0.0)
+    out = (ytok.reshape(B * S, k, d)
+           * gate_vals.reshape(B * S, k, 1).astype(x.dtype)).sum(1)
+    out = out.reshape(B, S, d)
+    # load-balancing aux loss (Switch style)
+    frac_tokens = counts.astype(jnp.float32) / Tk
+    frac_probs = jnp.mean(probs, axis=(0, 1))
+    aux = E * jnp.sum(frac_tokens * frac_probs)
+    return out, aux
+
+
+# ---------------------------------------------------------------------------
+# Mamba-2 (SSD)
+# ---------------------------------------------------------------------------
+
+def mamba2_meta(cfg: ModelConfig) -> Dict[str, PM]:
+    s = cfg.ssm
+    d = cfg.d_model
+    di = s.d_inner(d)
+    nh = s.n_heads(d)
+    N = s.d_state
+    return {
+        "in_proj": PM((d, 2 * di + 2 * N + nh), ("embed", "mlp")),
+        "conv_w": PM((s.d_conv, di + 2 * N), ("conv", "mlp")),
+        "conv_b": PM((di + 2 * N,), ("mlp",), "zeros"),
+        "A_log": PM((nh,), ("ssm_heads",), "ones"),
+        "D": PM((nh,), ("ssm_heads",), "ones"),
+        "dt_bias": PM((nh,), ("ssm_heads",), "zeros"),
+        "norm": rmsnorm_meta(di)["scale"],
+        "out_proj": PM((di, d), ("mlp", "embed")),
+    }
+
+
+def _segsum(x):
+    """(..., L) -> (..., L, L) lower-triangular segment sums."""
+    L = x.shape[-1]
+    cs = jnp.cumsum(x, -1)
+    ss = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((L, L), bool))
+    return jnp.where(mask, ss, -jnp.inf)
+
+
+def ssd_chunked(x, a, B, C, chunk):
+    """Minimal SSD (Mamba-2 paper, listing 1) in jnp.
+
+    x: (b,l,h,p); a: (b,l,h) = dt*(-exp(A_log)); B,C: (b,l,n).
+    Returns y: (b,l,h,p)."""
+    b, l, h, p = x.shape
+    n = B.shape[-1]
+    c = l // chunk
+    xr = x.reshape(b, c, chunk, h, p)
+    ar = a.reshape(b, c, chunk, h).transpose(0, 3, 1, 2)  # (b,h,c,l)
+    Br = B.reshape(b, c, chunk, n)
+    Cr = C.reshape(b, c, chunk, n)
+    a_cum = jnp.cumsum(ar, -1)
+    # 1. intra-chunk (diagonal blocks)
+    L = jnp.exp(_segsum(ar))                              # (b,h,c,l,l)
+    Y_diag = jnp.einsum("bcsn,bczn,bhcsz,bczhp->bcshp", Cr, Br, L, xr)
+    # 2. chunk states
+    decay = jnp.exp(a_cum[..., -1:] - a_cum)              # (b,h,c,l)
+    states = jnp.einsum("bczn,bhcz,bczhp->bchpn", Br, decay, xr)
+    # 3. inter-chunk recurrence (initial state prepended, à la listing 1)
+    states_cat = jnp.concatenate([jnp.zeros_like(states[:, :1]), states], 1)
+    chunk_decay = jnp.exp(
+        _segsum(jnp.pad(a_cum[..., -1], ((0, 0), (0, 0), (1, 0)))))
+    new_states = jnp.einsum("bhzc,bchpn->bzhpn", chunk_decay, states_cat)
+    states_in = new_states[:, :-1]                        # state at chunk start
+    # 4. state -> output
+    out_decay = jnp.exp(a_cum)                            # (b,h,c,l)
+    Y_off = jnp.einsum("bcsn,bchpn,bhcs->bcshp", Cr, states_in, out_decay)
+    return (Y_diag + Y_off).reshape(b, l, h, p)
+
+
+def mamba2(cfg: ModelConfig, params, x, cache=None):
+    s = cfg.ssm
+    d = cfg.d_model
+    di = s.d_inner(d)
+    nh = s.n_heads(d)
+    N = s.d_state
+    B_, S, _ = x.shape
+    zxbcdt = jnp.einsum("bsd,de->bse", x, cast(params["in_proj"]))
+    z, xin, Bc, Cc, dt = jnp.split(
+        zxbcdt, [di, 2 * di, 2 * di + N, 2 * di + 2 * N], axis=-1)
+    xbc = jnp.concatenate([xin, Bc, Cc], -1)              # conv features
+    w = cast(params["conv_w"])                            # (K, di+2N)
+    if cache is None:
+        pad = jnp.pad(xbc, ((0, 0), (s.d_conv - 1, 0), (0, 0)))
+        conv = sum(pad[:, i:i + S] * w[i] for i in range(s.d_conv))
+        conv = jax.nn.silu(conv + cast(params["conv_b"]))
+    else:
+        buf = jnp.concatenate([cache["conv"], xbc], axis=1)[:, 1:]
+        conv = jax.nn.silu((buf * w[None]).sum(1, keepdims=True)
+                           + cast(params["conv_b"]))
+        cache = dict(cache, conv=buf)
+    xin, Bc, Cc = jnp.split(conv, [di, di + N], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + params["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))     # (nh,)
+    xh = xin.reshape(B_, S, nh, s.head_dim)
+    if cache is None:
+        a = dt * A                                        # (b,l,nh)
+        y = ssd_chunked(xh * dt[..., None].astype(xh.dtype), a.astype(
+            jnp.float32), Bc, Cc, min(s.chunk, S))
+    else:
+        st = cache["state"]                               # (b,nh,p,n)
+        da = jnp.exp(dt[:, 0] * A)                        # (b,nh)
+        upd = jnp.einsum("bhp,bn->bhpn", xh[:, 0] * dt[:, 0, :, None]
+                         .astype(xh.dtype), Bc[:, 0])
+        st = st * da[..., None, None] + upd
+        y = jnp.einsum("bhpn,bn->bhp", st, Cc[:, 0])[:, None]
+        cache = dict(cache, state=st)
+        y = y.reshape(B_, 1, nh, s.head_dim)
+    y = y + xh * params["D"].astype(xh.dtype)[:, None]
+    y = y.reshape(B_, S, di)
+    y = rmsnorm({"scale": params["norm"]}, y * jax.nn.silu(z))
+    return jnp.einsum("bsd,de->bse", y, cast(params["out_proj"])), cache
+
+
+def mamba2_cache(cfg: ModelConfig, batch: int):
+    s = cfg.ssm
+    di = s.d_inner(cfg.d_model)
+    nh = s.n_heads(cfg.d_model)
+    return {"conv": jnp.zeros((batch, s.d_conv, di + 2 * s.d_state),
+                              COMPUTE_DTYPE),
+            "state": jnp.zeros((batch, nh, s.head_dim, s.d_state),
+                               COMPUTE_DTYPE)}

@@ -1,0 +1,336 @@
+"""Model stacks: decoder-only LM (dense / MoE / SSM / hybrid), enc-dec
+(whisper-style) and VLM (patch-embedding prefix).  Layers are scanned
+(``lax.scan`` over stacked per-layer params) so the HLO stays one-layer-sized
+regardless of depth — essential for 512-device dry-run compile times.
+
+Hybrid (zamba2): every layer is an SSM block; every ``shared_attn_every``-th
+layer additionally runs one *shared* attention block (single param set reused
+— the zamba2 weight-sharing scheme), selected with ``lax.cond`` inside the
+scan so only one branch executes.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import layers as L
+from .config import ModelConfig
+from .layers import PM, cast
+
+
+def _constrain(x, kind):
+    from repro.train.sharding import constrain
+    return constrain(x, kind)
+
+
+# ---------------------------------------------------------------------------
+# meta construction
+# ---------------------------------------------------------------------------
+
+def _block_meta(cfg: ModelConfig) -> Dict[str, Any]:
+    m: Dict[str, Any] = {"ln1": L.rmsnorm_meta(cfg.d_model)}
+    if cfg.ssm is not None:
+        m["mixer"] = L.mamba2_meta(cfg)
+    elif cfg.mla is not None:
+        m["mixer"] = L.mla_meta(cfg)
+    else:
+        m["mixer"] = L.attention_meta(cfg)
+    if cfg.ssm is None:
+        m["ln2"] = L.rmsnorm_meta(cfg.d_model)
+        m["ffn"] = L.moe_meta(cfg) if cfg.moe is not None else \
+            L.mlp_meta(cfg)
+    return m
+
+
+def _enc_block_meta(cfg: ModelConfig) -> Dict[str, Any]:
+    return {"ln1": L.rmsnorm_meta(cfg.d_model),
+            "attn": L.attention_meta(cfg),
+            "ln2": L.rmsnorm_meta(cfg.d_model),
+            "ffn": L.mlp_meta(cfg)}
+
+
+def _dec_block_meta(cfg: ModelConfig) -> Dict[str, Any]:
+    m = _enc_block_meta(cfg)
+    m["ln_x"] = L.rmsnorm_meta(cfg.d_model)
+    m["xattn"] = L.attention_meta(cfg)
+    return m
+
+
+def _stack(meta, n: int):
+    return jax.tree_util.tree_map(
+        lambda pm: PM((n,) + pm.shape, ("layers",) + pm.axes, pm.init),
+        meta, is_leaf=lambda x: isinstance(x, PM))
+
+
+def lm_meta(cfg: ModelConfig) -> Dict[str, Any]:
+    meta: Dict[str, Any] = {
+        "embed": PM((cfg.vocab_padded, cfg.d_model), ("vocab", "embed")),
+        "ln_f": L.rmsnorm_meta(cfg.d_model),
+    }
+    if not cfg.tie_embeddings:
+        meta["unembed"] = PM((cfg.d_model, cfg.vocab_padded),
+                             ("embed", "vocab"))
+    if cfg.enc_dec:
+        meta["enc"] = _stack(_enc_block_meta(cfg), cfg.enc_layers)
+        meta["enc_ln"] = L.rmsnorm_meta(cfg.d_model)
+        meta["layers"] = _stack(_dec_block_meta(cfg), cfg.n_layers)
+    else:
+        meta["layers"] = _stack(_block_meta(cfg), cfg.n_layers)
+    if cfg.shared_attn_every:
+        meta["shared_attn"] = {"ln": L.rmsnorm_meta(cfg.d_model),
+                               "attn": L.attention_meta(cfg)}
+    if cfg.frontend == "vision_stub":
+        meta["patch_proj"] = PM((cfg.d_model, cfg.d_model),
+                                ("embed", "embed2"))
+    if cfg.frontend == "audio_stub":
+        meta["frame_proj"] = PM((cfg.d_model, cfg.d_model),
+                                ("embed", "embed2"))
+    return meta
+
+
+def init_params(cfg: ModelConfig, key):
+    return L.init_tree(key, lm_meta(cfg))
+
+
+def abstract_params(cfg: ModelConfig):
+    """ShapeDtypeStruct pytree (no allocation) — used by the dry-run."""
+    return jax.tree_util.tree_map(
+        lambda pm: jax.ShapeDtypeStruct(pm.shape, jnp.float32),
+        lm_meta(cfg), is_leaf=lambda x: isinstance(x, PM))
+
+
+# ---------------------------------------------------------------------------
+# forward passes
+# ---------------------------------------------------------------------------
+
+def _block_apply(cfg: ModelConfig, p, x, pos, shared, layer_idx):
+    """One decoder block, training/prefill path (no caches)."""
+    aux = jnp.float32(0.0)
+    h = L.rmsnorm(p["ln1"], x, cfg.norm_eps)
+    if cfg.ssm is not None:
+        mix, _ = L.mamba2(cfg, p["mixer"], h, None)
+    elif cfg.mla is not None:
+        mix, _ = L.mla_attention(cfg, p["mixer"], h, pos, None)
+    else:
+        mix, _ = L.attention(cfg, p["mixer"], h, pos, None)
+    x = x + mix.astype(x.dtype)
+    if cfg.ssm is None:
+        h = L.rmsnorm(p["ln2"], x, cfg.norm_eps)
+        if cfg.moe is not None:
+            f, aux = L.moe(cfg, p["ffn"], h)
+        else:
+            f = L.mlp(p["ffn"], h)
+        x = x + f.astype(x.dtype)
+    if cfg.shared_attn_every and shared is not None:
+        def with_attn(x):
+            h = L.rmsnorm(shared["ln"], x, cfg.norm_eps)
+            a, _ = L.attention(cfg, shared["attn"], h, pos, None)
+            return x + a.astype(x.dtype)
+
+        x = jax.lax.cond(layer_idx % cfg.shared_attn_every == 0,
+                         with_attn, lambda x: x, x)
+    return x, aux
+
+
+def _unembed(cfg: ModelConfig, params, x):
+    unemb = params.get("unembed")
+    w = cast(unemb) if unemb is not None else cast(params["embed"]).T
+    logits = jnp.einsum("bsd,dv->bsv", x, w).astype(jnp.float32)
+    # mask the padded vocab tail (vocab is padded for clean TP sharding)
+    if cfg.vocab_padded != cfg.vocab:
+        logits = jnp.where(jnp.arange(cfg.vocab_padded) < cfg.vocab,
+                           logits, -1e30)
+    return logits
+
+
+def _embed_inputs(cfg: ModelConfig, params, tokens, frontend_embeds):
+    x = cast(params["embed"])[tokens]
+    if cfg.frontend == "vision_stub" and frontend_embeds is not None:
+        pe = jnp.einsum("bpd,de->bpe", cast(frontend_embeds),
+                        cast(params["patch_proj"]))
+        x = jnp.concatenate([pe, x], axis=1)
+    return x
+
+
+def lm_apply(cfg: ModelConfig, params, tokens, frontend_embeds=None,
+             remat: bool = False):
+    """Training/prefill forward: logits (B, S', vocab) (f32).
+    For enc-dec, frontend_embeds are the encoder frame embeddings.
+    ``remat=True`` checkpoints each block (per-layer rematerialization —
+    peak activation memory is one layer, not the stack)."""
+    if cfg.enc_dec:
+        return _encdec_apply(cfg, params, tokens, frontend_embeds, remat)
+    x = _constrain(_embed_inputs(cfg, params, tokens, frontend_embeds),
+                   "tokens")
+    B, S, _ = x.shape
+    pos = jnp.broadcast_to(jnp.arange(S), (B, S))
+    shared = params.get("shared_attn")
+    blk = _block_apply
+    if remat:
+        blk = jax.checkpoint(_block_apply, static_argnums=(0,))
+
+    def body(carry, layer):
+        x, aux, i = carry
+        x, a = blk(cfg, layer, x, pos, shared, i)
+        return (_constrain(x, "tokens"), aux + a, i + 1), None
+
+    (x, aux, _), _ = jax.lax.scan(
+        body, (x, jnp.float32(0.0), jnp.int32(0)), params["layers"],
+        unroll=getattr(cfg, "unroll", False) or 1)
+    x = L.rmsnorm(params["ln_f"], x, cfg.norm_eps)
+    logits = _unembed(cfg, params, x)
+    return _constrain(logits, "logits"), aux
+
+
+def _enc_block(cfg, p, x):
+    h = L.rmsnorm(p["ln1"], x, cfg.norm_eps)
+    # bidirectional self-attention: full mask
+    q = jnp.einsum("bsd,dhk->bshk", h, cast(p["attn"]["wq"]))
+    k = jnp.einsum("bsd,dhk->bshk", h, cast(p["attn"]["wk"]))
+    v = jnp.einsum("bsd,dhk->bshk", h, cast(p["attn"]["wv"]))
+    o = L.sdpa(q, k, v, causal=False)
+    x = x + jnp.einsum("bshk,hkd->bsd", o, cast(p["attn"]["wo"])) \
+        .astype(x.dtype)
+    h = L.rmsnorm(p["ln2"], x, cfg.norm_eps)
+    return x + L.mlp(p["ffn"], h).astype(x.dtype)
+
+
+def _encoder_apply(cfg: ModelConfig, params, frames, remat: bool = False):
+    """frames: (B, T_enc, d) precomputed frame embeddings (conv stub)."""
+    x = jnp.einsum("btd,de->bte", cast(frames), cast(params["frame_proj"]))
+    B, T, _ = x.shape
+    enc = jax.checkpoint(_enc_block, static_argnums=(0,)) if remat \
+        else _enc_block
+
+    def body(x, p):
+        return _constrain(enc(cfg, p, x), "tokens"), None
+
+    x, _ = jax.lax.scan(body, x, params["enc"],
+                        unroll=getattr(cfg, "unroll", False) or 1)
+    return L.rmsnorm(params["enc_ln"], x, cfg.norm_eps)
+
+
+def _cross_attend(cfg, p, x, enc_kv):
+    q = jnp.einsum("bsd,dhk->bshk", x, cast(p["wq"]))
+    o = L.sdpa(q, enc_kv["k"], enc_kv["v"], causal=False)
+    return jnp.einsum("bshk,hkd->bsd", o, cast(p["wo"]))
+
+
+def _enc_kv(p, enc_out):
+    return {"k": jnp.einsum("btd,dhk->bthk", enc_out, cast(p["wk"])),
+            "v": jnp.einsum("btd,dhk->bthk", enc_out, cast(p["wv"]))}
+
+
+def _dec_block(cfg, p, x, pos, enc_out):
+    h = L.rmsnorm(p["ln1"], x, cfg.norm_eps)
+    a, _ = L.attention(cfg, p["attn"], h, pos, None)
+    x = x + a.astype(x.dtype)
+    h = L.rmsnorm(p["ln_x"], x, cfg.norm_eps)
+    x = x + _cross_attend(cfg, p["xattn"], h,
+                          _enc_kv(p["xattn"], enc_out)).astype(x.dtype)
+    h = L.rmsnorm(p["ln2"], x, cfg.norm_eps)
+    return x + L.mlp(p["ffn"], h).astype(x.dtype)
+
+
+def _encdec_apply(cfg: ModelConfig, params, tokens, frames,
+                  remat: bool = False):
+    enc_out = _encoder_apply(cfg, params, frames, remat)
+    x = _constrain(cast(params["embed"])[tokens], "tokens")
+    B, S, _ = x.shape
+    pos = jnp.broadcast_to(jnp.arange(S), (B, S))
+    dec = jax.checkpoint(_dec_block, static_argnums=(0,)) if remat \
+        else _dec_block
+
+    def body(carry, p):
+        return _constrain(dec(cfg, p, carry, pos, enc_out), "tokens"), None
+
+    x, _ = jax.lax.scan(body, x, params["layers"],
+                        unroll=getattr(cfg, "unroll", False) or 1)
+    x = L.rmsnorm(params["ln_f"], x, cfg.norm_eps)
+    return _constrain(_unembed(cfg, params, x), "logits"), jnp.float32(0.0)
+
+
+# ---------------------------------------------------------------------------
+# decode (one token with caches)
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int):
+    n = cfg.n_layers
+
+    def stackc(c):
+        return jax.tree_util.tree_map(
+            lambda a: jnp.broadcast_to(a, (n,) + a.shape), c)
+
+    if cfg.ssm is not None:
+        cache = stackc(L.mamba2_cache(cfg, batch))
+    elif cfg.mla is not None:
+        cache = stackc(L.mla_cache(cfg, batch, max_len))
+    else:
+        cache = stackc(L.attention_cache(cfg, batch, max_len))
+    out = {"layers": cache, "pos": jnp.zeros((), jnp.int32)}
+    if cfg.shared_attn_every:
+        out["shared"] = L.attention_cache(cfg, batch, max_len)
+    if cfg.enc_dec:
+        out["enc_out"] = jnp.zeros((batch, cfg.enc_len, cfg.d_model),
+                                   L.COMPUTE_DTYPE)
+    return out
+
+
+def decode_step(cfg: ModelConfig, params, cache, token):
+    """token: (B,) -> logits (B, vocab), updated cache."""
+    x = cast(params["embed"])[token][:, None]              # (B,1,d)
+    B = x.shape[0]
+    pos = jnp.broadcast_to(cache["pos"], (B, 1))
+    shared = params.get("shared_attn")
+    shared_cache = cache.get("shared")
+
+    def body(carry, pl):
+        x, scache, i = carry
+        p, lc = pl
+        h = L.rmsnorm(p["ln1"], x, cfg.norm_eps)
+        if cfg.ssm is not None:
+            mix, lc = L.mamba2(cfg, p["mixer"], h, lc)
+        elif cfg.mla is not None:
+            mix, lc = L.mla_attention(cfg, p["mixer"], h, pos, lc)
+        elif cfg.enc_dec:
+            a, lc = L.attention(cfg, p["attn"], h, pos, lc)
+            x = x + a
+            h = L.rmsnorm(p["ln_x"], x, cfg.norm_eps)
+            mix = _cross_attend(cfg, p["xattn"], h,
+                                _enc_kv(p["xattn"], cache["enc_out"]))
+        else:
+            mix, lc = L.attention(cfg, p["mixer"], h, pos, lc)
+        x = x + mix.astype(x.dtype)
+        if cfg.ssm is None:
+            h = L.rmsnorm(p["ln2"], x, cfg.norm_eps)
+            if cfg.moe is not None:
+                f, _ = L.moe(cfg, p["ffn"], h)
+            else:
+                f = L.mlp(p["ffn"], h)
+            x = x + f.astype(x.dtype)
+        if cfg.shared_attn_every and shared is not None:
+            def with_attn(args):
+                x, c = args
+                h = L.rmsnorm(shared["ln"], x, cfg.norm_eps)
+                a, c = L.attention(cfg, shared["attn"], h, pos, c)
+                return x + a.astype(x.dtype), c
+
+            x, scache = jax.lax.cond(i % cfg.shared_attn_every == 0,
+                                     with_attn, lambda a: a, (x, scache))
+        return (x, scache, i + 1), lc
+
+    (x, shared_cache, _), new_layers = jax.lax.scan(
+        body, (x, shared_cache, jnp.int32(0)),
+        (params["layers"], cache["layers"]),
+        unroll=getattr(cfg, "unroll", False) or 1)
+    x = L.rmsnorm(params["ln_f"], x, cfg.norm_eps)
+    logits = _unembed(cfg, params, x)[:, 0]
+    new_cache = dict(cache, layers=new_layers, pos=cache["pos"] + 1)
+    if shared_cache is not None:
+        new_cache["shared"] = shared_cache
+    return logits, new_cache

@@ -1,0 +1,2 @@
+# Training substrate: sharding rules, optimizer, train step, checkpointing,
+# fault tolerance, gradient compression.

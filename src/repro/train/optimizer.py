@@ -1,0 +1,79 @@
+"""AdamW + LR schedule (pure JAX, optax-free).
+
+Optimizer state shards exactly like the parameters (FSDP): the dry-run's
+memory analysis therefore reflects ZeRO-style fully-sharded m/v buffers.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    betas: tuple = (0.9, 0.95)
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10000
+
+
+class OptState(NamedTuple):
+    step: jax.Array
+    m: Any
+    v: Any
+
+
+def init_opt_state(params) -> OptState:
+    z = jax.tree_util.tree_map(jnp.zeros_like, params)
+    return OptState(jnp.zeros((), jnp.int32), z,
+                    jax.tree_util.tree_map(jnp.zeros_like, params))
+
+
+def lr_at(cfg: OptConfig, step):
+    warm = cfg.lr * (step + 1) / cfg.warmup_steps
+    t = jnp.clip((step - cfg.warmup_steps)
+                 / max(1, cfg.total_steps - cfg.warmup_steps), 0.0, 1.0)
+    cos = 0.5 * cfg.lr * (1 + jnp.cos(jnp.pi * t))
+    return jnp.where(step < cfg.warmup_steps, warm, cos)
+
+
+def global_norm(tree):
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(l.astype(jnp.float32) ** 2)
+                        for l in leaves))
+
+
+def adamw_update(cfg: OptConfig, params, grads, state: OptState):
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-9))
+    b1, b2 = cfg.betas
+    step = state.step + 1
+    lr = lr_at(cfg, state.step)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * g * g
+        mh = m / (1 - b1 ** step)
+        vh = v / (1 - b2 ** step)
+        p = p - lr * (mh / (jnp.sqrt(vh) + cfg.eps)
+                      + cfg.weight_decay * p)
+        return p, m, v
+
+    flat_p, td = jax.tree_util.tree_flatten(params)
+    flat_g = jax.tree_util.tree_leaves(grads)
+    flat_m = jax.tree_util.tree_leaves(state.m)
+    flat_v = jax.tree_util.tree_leaves(state.v)
+    out = [upd(p, g, m, v) for p, g, m, v
+           in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = jax.tree_util.tree_unflatten(td, [o[0] for o in out])
+    new_m = jax.tree_util.tree_unflatten(td, [o[1] for o in out])
+    new_v = jax.tree_util.tree_unflatten(td, [o[2] for o in out])
+    return new_p, OptState(step, new_m, new_v), {"gnorm": gnorm, "lr": lr}

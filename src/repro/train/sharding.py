@@ -1,0 +1,162 @@
+"""Logical-axis -> mesh-axis sharding rules (MaxText-style, but tiny).
+
+Parallelism scheme on the production mesh (pod?, data=16, model=16):
+
+- TP   : heads / kv / mlp / experts / vocab / lora / ssm_heads -> "model"
+- FSDP : the `embed` axis of weight matrices -> "data" (parameters and
+         optimizer state are fully sharded; all-gathered per layer by XLA)
+- DP   : batch -> ("pod", "data") — gradients all-reduce over both
+- EP   : MoE experts -> "model" (dbrx: 16/16; moonshot: 64/16 = 4 per device)
+- SP   : long-sequence activations may shard "seq" -> "model" (opt-in)
+
+Every rule is divisibility-checked against the actual dim; non-divisible
+dims fall back to replication (never uneven GSPMD padding) so the
+memory/roofline numbers stay interpretable — e.g. kv=8 heads on model=16
+replicate, and the *per-head feature* axis shards instead (decode caches).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.layers import PM
+
+
+@dataclass(frozen=True)
+class ShardingRules:
+    batch_axes: Tuple[str, ...] = ("data",)   # ("pod","data") multi-pod
+    model_axis: str = "model"
+    fsdp: bool = True
+    seq_shard: bool = False                   # SP for prefill activations
+    rules: Dict[str, object] = field(default_factory=dict)
+
+    def logical_map(self) -> Dict[str, object]:
+        m = {
+            "vocab": self.model_axis,
+            "heads": self.model_axis,
+            "kv": self.model_axis,
+            "head": None,
+            "mlp": self.model_axis,
+            "experts": self.model_axis,
+            "lora": self.model_axis,
+            "ssm_heads": self.model_axis,
+            "embed": self.batch_axes if self.fsdp else None,
+            "embed2": None,
+            "conv": None,
+            "state": None,
+            "layers": None,
+        }
+        m.update(self.rules)
+        return m
+
+
+def _axis_ok(mesh: Mesh, axes, dim: int) -> bool:
+    if axes is None:
+        return True
+    if isinstance(axes, str):
+        axes = (axes,)
+    n = int(np.prod([mesh.shape[a] for a in axes]))
+    return dim % n == 0
+
+
+def spec_for_param(pm: PM, rules: ShardingRules, mesh: Mesh,
+                   used: Optional[set] = None) -> P:
+    """PartitionSpec for one param; each mesh axis used at most once."""
+    lm = rules.logical_map()
+    taken: set = set()
+    out = []
+    for dim, ax in zip(pm.shape, pm.axes):
+        m = lm.get(ax) if ax is not None else None
+        names = (m,) if isinstance(m, str) else (tuple(m) if m else ())
+        if m is None or any(n in taken for n in names) \
+                or not _axis_ok(mesh, m, dim):
+            out.append(None)
+        else:
+            out.append(m if isinstance(m, str) else tuple(m))
+            taken.update(names)
+    while out and out[-1] is None:
+        out.pop()
+    return P(*out)
+
+
+def param_specs(meta, rules: ShardingRules, mesh: Mesh):
+    return jax.tree_util.tree_map(
+        lambda pm: spec_for_param(pm, rules, mesh),
+        meta, is_leaf=lambda x: isinstance(x, PM))
+
+
+def param_shardings(meta, rules: ShardingRules, mesh: Mesh):
+    return jax.tree_util.tree_map(
+        lambda pm: NamedSharding(mesh, spec_for_param(pm, rules, mesh)),
+        meta, is_leaf=lambda x: isinstance(x, PM))
+
+
+def batch_spec(rules: ShardingRules, ndim: int, seq_axis: int = 1) -> P:
+    """Tokens/labels: batch over DP axes (+ optional SP on the seq axis)."""
+    parts = [tuple(rules.batch_axes)] + [None] * (ndim - 1)
+    if rules.seq_shard and ndim > seq_axis:
+        parts[seq_axis] = rules.model_axis
+    return P(*parts)
+
+
+def cache_specs(cfg, cache_tree, rules: ShardingRules, mesh: Mesh):
+    """Decode-cache shardings: batch over DP if divisible; the trailing
+    feature axis over model if divisible (kv-head counts rarely divide the
+    model axis, the flattened/per-head feature usually does)."""
+    model = rules.model_axis
+    msize = mesh.shape[model]
+    bsize = int(np.prod([mesh.shape[a] for a in rules.batch_axes]))
+
+    def spec(x):
+        if x.ndim == 0:
+            return P()
+        parts = [None] * x.ndim
+        if x.shape[0] % bsize == 0:
+            parts[0] = tuple(rules.batch_axes)
+        for i in range(x.ndim - 1, 0, -1):
+            if x.shape[i] % msize == 0 and x.shape[i] >= msize:
+                parts[i] = model
+                break
+        while parts and parts[-1] is None:
+            parts.pop()
+        return P(*parts)
+
+    return jax.tree_util.tree_map(spec, cache_tree)
+
+
+# ---------------------------------------------------------------------------
+# activation sharding-constraint hooks (set by launchers around lower())
+# ---------------------------------------------------------------------------
+
+_CURRENT: Optional[Tuple["ShardingRules", Mesh]] = None
+
+
+def set_rules(rules: Optional[ShardingRules], mesh: Optional[Mesh]):
+    """Install rules+mesh so model code can constrain activations.  Call with
+    (None, None) to disable (CPU unit tests run without constraints)."""
+    global _CURRENT
+    _CURRENT = (rules, mesh) if rules is not None else None
+
+
+def constrain(x, kind: str):
+    """Annotate an activation: kind in {'tokens','logits','decode'}.
+    No-op unless a launcher installed rules (dry-run / real runs)."""
+    if _CURRENT is None:
+        return x
+    rules, mesh = _CURRENT
+    bsize = int(np.prod([mesh.shape[a] for a in rules.batch_axes]))
+    parts = [None] * x.ndim
+    if x.shape[0] % bsize == 0:
+        parts[0] = tuple(rules.batch_axes)
+    if kind == "logits" and x.shape[-1] % mesh.shape[rules.model_axis] == 0:
+        parts[-1] = rules.model_axis
+    if kind == "tokens" and rules.seq_shard and x.ndim >= 3 \
+            and x.shape[1] % mesh.shape[rules.model_axis] == 0:
+        parts[1] = rules.model_axis
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*parts)))

@@ -1,0 +1,102 @@
+"""Train / serve step factories with explicit shardings (pjit path).
+
+``make_train_step`` builds the jit'd step the launcher and the dry-run use:
+cross-entropy (+ MoE aux loss), optional microbatch gradient accumulation
+(``lax.scan`` over microbatches — the standard pipeline-less way to trade
+memory for time), optional remat of the whole block stack, AdamW update.
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models import transformer as T
+from repro.models.config import ModelConfig
+from . import sharding as SH
+from .optimizer import OptConfig, OptState, adamw_update, init_opt_state
+
+
+@dataclass(frozen=True)
+class StepConfig:
+    microbatches: int = 1
+    remat: bool = True
+    aux_weight: float = 0.01
+    z_weight: float = 1e-4
+
+
+def loss_fn(cfg: ModelConfig, step_cfg: StepConfig, params, tokens, labels,
+            frontend=None):
+    # per-block rematerialization: peak activations = one layer, not the
+    # whole stack (whole-model checkpointing would not bound peak memory)
+    logits, aux = T.lm_apply(cfg, params, tokens, frontend,
+                             remat=step_cfg.remat)
+    if cfg.frontend == "vision_stub":
+        logits = logits[:, cfg.n_patches:]                # text positions only
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    z = jnp.mean(jax.scipy.special.logsumexp(logits, axis=-1) ** 2)
+    loss = jnp.mean(nll) + step_cfg.aux_weight * aux + step_cfg.z_weight * z
+    return loss, {"nll": jnp.mean(nll), "aux": aux}
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: OptConfig,
+                    step_cfg: StepConfig = StepConfig()):
+    """Returns train_step(params, opt_state, batch) -> (params, opt, metrics).
+    ``batch`` is a dict with tokens/labels (+frontend)."""
+
+    def grads_of(params, batch):
+        def one(p, mb):
+            return loss_fn(cfg, step_cfg, p, mb["tokens"],
+                           mb["labels"], mb.get("frontend"))
+
+        if step_cfg.microbatches == 1:
+            (loss, m), g = jax.value_and_grad(one, has_aux=True)(params,
+                                                                 batch)
+            return loss, m, g
+        n = step_cfg.microbatches
+
+        def split(x):
+            return x.reshape((n, x.shape[0] // n) + x.shape[1:])
+
+        mbs = jax.tree_util.tree_map(split, batch)
+
+        def body(carry, mb):
+            acc, lsum = carry
+            (loss, m), g = jax.value_and_grad(one, has_aux=True)(params, mb)
+            acc = jax.tree_util.tree_map(jnp.add, acc, g)
+            return (acc, lsum + loss), m
+
+        zero = jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        (g, lsum), ms = jax.lax.scan(body, (zero, jnp.float32(0)), mbs)
+        g = jax.tree_util.tree_map(lambda x: x / n, g)
+        m = jax.tree_util.tree_map(lambda x: x[-1], ms)
+        return lsum / n, m, g
+
+    def train_step(params, opt_state, batch):
+        loss, metrics, grads = grads_of(
+            params, {k: v for k, v in batch.items() if v is not None})
+        params, opt_state, om = adamw_update(opt_cfg, params, grads,
+                                             opt_state)
+        return params, opt_state, dict(metrics, loss=loss, **om)
+
+    return train_step
+
+
+def make_serve_step(cfg: ModelConfig):
+    def serve_step(params, cache, token):
+        return T.decode_step(cfg, params, cache, token)
+    return serve_step
+
+
+def make_prefill_step(cfg: ModelConfig):
+    def prefill(params, tokens, frontend=None):
+        logits, _ = T.lm_apply(cfg, params, tokens, frontend)
+        return logits[:, -1]
+    return prefill

@@ -1,0 +1,73 @@
+"""Multi-device shard_map front-end check — run as a subprocess with
+XLA_FLAGS=--xla_force_host_platform_device_count=N (see test_shardmap.py).
+
+Asserts that the distributed front-end (sample sort, halo gradient, ring
+tracing, triplet emission) on N devices reproduces the single-device DMS
+front-end exactly."""
+
+import os
+import sys
+
+N_DEV = int(sys.argv[1]) if len(sys.argv) > 1 else 8
+os.environ["XLA_FLAGS"] = (
+    f"--xla_force_host_platform_device_count={N_DEV} "
+    + os.environ.get("XLA_FLAGS", ""))
+
+import numpy as np  # noqa: E402
+import jax  # noqa: E402
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.core.critical import extract_critical  # noqa: E402
+from repro.core.extremum_graph import (build_d0_graph,  # noqa: E402
+                                       build_dual_graph)
+from repro.core.gradient import compute_gradient_np  # noqa: E402
+from repro.core.grid import Grid, vertex_order  # noqa: E402
+from repro.distributed.shardmap_pipeline import (front_triplets,  # noqa: E402
+                                                 run_front)
+
+
+def check(dims, seed, n_blocks, use_sample_sort=True, backend="jax"):
+    g = Grid.of(*dims)
+    rng = np.random.default_rng(seed)
+    f = rng.standard_normal(g.nv).astype(np.float32)
+
+    # single-device reference
+    order = np.asarray(vertex_order(f.astype(np.float64)))
+    gf = compute_gradient_np(g, order)
+    ci = extract_critical(g, gf, order)
+    g0 = build_d0_graph(g, gf, ci)
+    gD = build_dual_graph(g, gf, ci, ci.crit_sids[2])
+
+    cfg, out = run_front(dims, f, n_blocks, use_sample_sort=use_sample_sort,
+                         gradient_backend=backend, sort_slack=4.0)
+    assert not bool(out["overflow"]), "sample sort overflow"
+    assert int(out["unresolved"]) == 0, "ring resolution incomplete"
+    assert np.array_equal(out["ranks"], order), "distributed order mismatch"
+    nc = out["ncrit"]
+    assert nc[0] == len(ci.crit_sids[0]) and nc[1] == len(ci.crit_sids[1])
+    assert nc[2] == len(ci.crit_sids[2]) and nc[3] == len(ci.crit_sids[3])
+
+    (sid0, _, t0, t1), (sidd, _, s0, s1) = front_triplets(dims, out)
+    ref0 = {(int(s), frozenset((int(a), int(b))))
+            for s, a, b in zip(g0.saddles, g0.t0, g0.t1)}
+    got0 = {(int(s), frozenset((int(a), int(b))))
+            for s, a, b in zip(sid0, t0, t1) if a != b}
+    assert got0 == ref0, f"D0 triplets differ: {got0 ^ ref0}"
+    refd = {(int(s), frozenset((int(a), int(b))))
+            for s, a, b in zip(gD.saddles, gD.t0, gD.t1)}
+    gotd = {(int(s), frozenset((int(a), int(b))))
+            for s, a, b in zip(sidd, s0, s1) if a != b}
+    assert gotd == refd, f"dual triplets differ: {gotd ^ refd}"
+    print(f"OK dims={dims} seed={seed} blocks={n_blocks} "
+          f"sort={use_sample_sort} backend={backend}")
+
+
+if __name__ == "__main__":
+    assert jax.device_count() == N_DEV, jax.device_count()
+    check((6, 5, 16), 0, N_DEV)
+    check((6, 5, 16), 1, N_DEV)
+    check((5, 4, 24), 2, N_DEV)
+    check((6, 5, 16), 3, N_DEV, use_sample_sort=True, backend="pallas")
+    check((4, 4, 8), 4, 4)
+    print("ALL SHARD_MAP CHECKS PASSED")

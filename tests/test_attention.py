@@ -1,0 +1,80 @@
+"""Flash (chunked online-softmax) attention == materialized attention."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import layers as L
+
+
+def _mk(B, S, T, H, Kv, hd, dv=None, seed=0):
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(k1, (B, S, H, hd), jnp.float32)
+    k = jax.random.normal(k2, (B, T, Kv, hd), jnp.float32)
+    v = jax.random.normal(k3, (B, T, Kv, dv or hd), jnp.float32)
+    return q, k, v
+
+
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("S,T", [(256, 256), (384, 384), (256, 512)])
+def test_flash_equals_masked(causal, S, T):
+    if causal and S != T:
+        pytest.skip("causal needs square")
+    q, k, v = _mk(2, S, T, 4, 2, 32)
+    spans_q, spans_k = jnp.arange(S), jnp.arange(T)
+    m = (spans_q[:, None] >= spans_k[None, :]) if causal else \
+        jnp.ones((S, T), bool)
+    ref = L._sdpa(q, k, v, m[None, None, None])
+    got = L._flash_sdpa(q, k, v, causal, qc=64, kc=128)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_flash_window():
+    S = 512
+    q, k, v = _mk(1, S, S, 4, 4, 16, seed=3)
+    w = 64
+    spans = jnp.arange(S)
+    m = (spans[:, None] >= spans[None, :]) \
+        & ((spans[:, None] - spans[None, :]) < w)
+    ref = L._sdpa(q, k, v, m[None, None, None])
+    got = L._flash_sdpa(q, k, v, True, window=w, qc=64, kc=64)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_flash_mla_asymmetric_v():
+    q, k, v = _mk(2, 320, 320, 4, 4, 24, dv=8, seed=4)
+    spans = jnp.arange(320)
+    m = spans[:, None] >= spans[None, :]
+    ref = L._sdpa(q, k, v, m[None, None, None])
+    got = L._flash_sdpa(q, k, v, True, qc=64, kc=64)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_mla_absorbed_equals_naive():
+    """Absorbed MLA decode == naive MLA decode (the §Perf optimization)."""
+    import jax
+    from repro.configs import smoke_config
+    from repro.models import layers as L
+    cfg = smoke_config("minicpm3-4b")
+    params = jax.tree_util.tree_map(
+        lambda x: x, __import__("repro.models.transformer",
+                                fromlist=["init_params"]).init_params(
+            cfg, jax.random.PRNGKey(0)))
+    p0 = params["layers"]
+    p_layer = jax.tree_util.tree_map(lambda x: x[0], p0["mixer"])
+    B = 2
+    cache = L.mla_cache(cfg, B, 8)
+    x = jax.random.normal(jax.random.PRNGKey(1), (B, 1, cfg.d_model),
+                          jnp.bfloat16)
+    pos = jnp.zeros((B, 1), jnp.int32)
+    o_naive, c_naive = L.mla_attention(cfg, p_layer, x, pos, cache)
+    o_abs, c_abs = L.mla_attention_absorbed(cfg, p_layer, x, pos, cache)
+    np.testing.assert_allclose(np.asarray(o_naive, np.float32),
+                               np.asarray(o_abs, np.float32),
+                               rtol=0.08, atol=0.02)
+    np.testing.assert_array_equal(np.asarray(c_naive["c"]),
+                                  np.asarray(c_abs["c"]))

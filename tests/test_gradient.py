@@ -1,0 +1,87 @@
+"""Tests for the discrete gradient (ProcessLowerStars) implementations."""
+
+import numpy as np
+import pytest
+
+from repro.core import gradient as GR
+from repro.core.grid import Grid, vertex_order
+from repro.core.gradient import (check_gradient_valid, compute_gradient,
+                                 compute_gradient_np)
+
+
+CASES = [
+    ((9,), 0), ((5, 4), 1), ((6, 5), 2), ((4, 3, 3), 3), ((3, 3, 4), 4),
+    ((2, 2, 2), 5), ((7, 1), 6),
+]
+
+
+def _field(dims, seed):
+    g = Grid.of(*dims)
+    rng = np.random.default_rng(seed)
+    return g, rng.standard_normal(g.nv)
+
+
+@pytest.mark.parametrize("dims,seed", CASES)
+def test_ref_gradient_valid(dims, seed):
+    g, f = _field(dims, seed)
+    order = vertex_order(f)
+    gf = compute_gradient_np(g, order)
+    check_gradient_valid(g, gf, order)
+
+
+@pytest.mark.parametrize("dims,seed", CASES)
+def test_masked_equals_literal(dims, seed):
+    """The queue-free masked form is exactly the literal Robins algorithm."""
+    g, f = _field(dims, seed)
+    order = vertex_order(f)
+    a = compute_gradient_np(g, order, masked=False)
+    b = compute_gradient_np(g, order, masked=True)
+    for k in a.pair_up:
+        assert np.array_equal(a.pair_up[k], b.pair_up[k]), f"pair_up[{k}]"
+    for k in a.crit:
+        assert np.array_equal(a.crit[k], b.crit[k]), f"crit[{k}]"
+
+
+@pytest.mark.parametrize("dims,seed", CASES)
+def test_jax_equals_literal(dims, seed):
+    g, f = _field(dims, seed)
+    order = vertex_order(f)
+    a = compute_gradient_np(g, order)
+    b = compute_gradient(g, order, backend="jax")
+    for k in a.pair_up:
+        assert np.array_equal(a.pair_up[k], b.pair_up[k]), f"pair_up[{k}]"
+    for k in a.crit:
+        assert np.array_equal(a.crit[k], b.crit[k]), f"crit[{k}]"
+
+
+def test_global_min_is_critical():
+    g, f = _field((4, 4, 3), 7)
+    order = vertex_order(f)
+    gf = compute_gradient_np(g, order)
+    vmin = int(np.argmin(order))
+    assert gf.crit[0][vmin]
+
+
+def test_monotone_field_single_critical():
+    """Elevation: exactly one critical simplex (the global minimum)."""
+    g = Grid.of(5, 4, 3)
+    f = np.arange(g.nv, dtype=np.float64)
+    order = vertex_order(f)
+    gf = compute_gradient_np(g, order)
+    counts = gf.n_critical()
+    assert counts[0] == 1
+    assert all(counts[k] == 0 for k in range(1, g.dim + 1))
+
+
+def test_vpaths_acyclic():
+    """Following vertex-edge vectors strictly decreases the vertex order."""
+    g, f = _field((5, 5, 3), 8)
+    order = vertex_order(f)
+    gf = compute_gradient_np(g, order)
+    v = np.arange(g.nv)
+    e = gf.pair_up[0]
+    paired = e >= 0
+    everts = np.asarray(g.simplex_vertices(1, e[paired]))
+    other = np.where(everts[:, 0] == v[paired], everts[:, 1], everts[:, 0])
+    # v-path step: vertex -> paired edge -> other endpoint, order decreases
+    assert (order[other] < order[v[paired]]).all()

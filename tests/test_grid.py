@@ -1,0 +1,154 @@
+"""Tests for the implicit Freudenthal triangulation (repro.core.grid)."""
+
+import itertools
+
+import numpy as np
+import pytest
+
+from repro.core import grid as G
+from repro.core.grid import Grid, NTYPES, NSTAR, vertex_order
+
+
+def brute_force_simplices(g: Grid, k: int):
+    """All k-simplices as frozensets of vertex ids, via the type tables."""
+    out = set()
+    sids = g.all_valid_sids(k)
+    verts = np.asarray(g.simplex_vertices(k, sids))
+    for row in verts:
+        out.add(frozenset(int(v) for v in row))
+    return out, sids, verts
+
+
+def test_type_counts():
+    assert NTYPES == {0: 1, 1: 7, 2: 12, 3: 6}
+    assert NSTAR == {0: 1, 1: 14, 2: 36, 3: 24}
+
+
+@pytest.mark.parametrize("dims", [(5,), (4, 3), (3, 4, 3), (2, 2, 2), (5, 1, 1)])
+def test_euler_characteristic(dims):
+    g = Grid.of(*dims)
+    chi = sum((-1) ** k * g.n_simplices(k) for k in range(g.dim + 1))
+    assert chi == 1  # a box is contractible
+
+
+@pytest.mark.parametrize("dims", [(4, 3), (3, 3, 2)])
+def test_simplices_are_distinct_and_valid(dims):
+    g = Grid.of(*dims)
+    for k in range(g.dim + 1):
+        simset, sids, verts = brute_force_simplices(g, k)
+        assert len(simset) == len(sids) == g.n_simplices(k)
+        # every simplex has k+1 distinct vertices in range
+        assert all(len(s) == k + 1 for s in simset)
+        assert verts.min() >= 0 and verts.max() < g.nv
+
+
+@pytest.mark.parametrize("dims", [(4, 3), (3, 3, 2)])
+def test_faces_are_valid_subsets(dims):
+    g = Grid.of(*dims)
+    for k in range(1, g.dim + 1):
+        sids = g.all_valid_sids(k)
+        verts = np.asarray(g.simplex_vertices(k, sids))
+        faces = np.asarray(g.simplex_faces(k, sids))
+        fvalid = np.asarray(g.simplex_valid(k - 1, faces))
+        assert fvalid.all(), f"invalid face of valid {k}-simplex"
+        fverts = np.asarray(g.simplex_vertices(k - 1, faces))
+        for i in range(len(sids)):
+            sv = set(verts[i].tolist())
+            seen = set()
+            for j in range(k + 1):
+                fv = frozenset(fverts[i, j].tolist())
+                assert fv < sv and len(fv) == k
+                seen.add(fv)
+            assert len(seen) == k + 1  # all faces distinct
+
+
+@pytest.mark.parametrize("dims", [(4, 3), (3, 3, 2)])
+def test_cofaces_invert_faces(dims):
+    g = Grid.of(*dims)
+    for k in range(g.dim):
+        sids = g.all_valid_sids(k)
+        cof = np.asarray(g.simplex_cofaces(k, sids))
+        # every listed coface is valid and has the simplex among its faces
+        for i, sid in enumerate(sids):
+            for c in cof[i]:
+                if c < 0:
+                    continue
+                assert g.simplex_valid(k + 1, np.array([c]))[0]
+                fc = np.asarray(g.simplex_faces(k + 1, np.array([c])))[0]
+                assert int(sid) in fc.tolist()
+        # and the coface relation is complete: check via brute force on faces
+        all_cofaces = {int(s): set() for s in sids}
+        up = g.all_valid_sids(k + 1)
+        fcs = np.asarray(g.simplex_faces(k + 1, up))
+        for j, u in enumerate(up):
+            for fs in fcs[j]:
+                all_cofaces[int(fs)].add(int(u))
+        for i, sid in enumerate(sids):
+            listed = {int(c) for c in cof[i] if c >= 0}
+            assert listed == all_cofaces[int(sid)]
+
+
+@pytest.mark.parametrize("dims", [(4, 3), (3, 3, 2)])
+def test_star_tables(dims):
+    g = Grid.of(*dims)
+    for k in range(1, g.dim + 1):
+        # brute-force stars
+        star_of = {v: set() for v in range(g.nv)}
+        sids = g.all_valid_sids(k)
+        verts = np.asarray(g.simplex_vertices(k, sids))
+        for i, sid in enumerate(sids):
+            for v in verts[i]:
+                star_of[int(v)].add(int(sid))
+        vs = np.arange(g.nv)
+        table = np.asarray(g.star_sids(k, vs))
+        for v in range(g.nv):
+            listed = {int(s) for s in table[v] if s >= 0}
+            assert listed == star_of[v], (k, v)
+
+
+def test_star_others_and_faces_consistency():
+    g = Grid.of(4, 4, 3)
+    v = np.arange(g.nv)
+    for k in (1, 2, 3):
+        sids = np.asarray(g.star_sids(k, v))          # (nv,S)
+        oth, valid = g.star_other_vertices(k, v)       # (nv,S,k)
+        for vid in (0, 17, g.nv - 1):
+            for r in range(sids.shape[1]):
+                if sids[vid, r] < 0:
+                    continue
+                assert valid[vid, r]
+                sv = set(np.asarray(
+                    g.simplex_vertices(k, np.array([sids[vid, r]])))[0].tolist())
+                assert sv == set(oth[vid, r].tolist()) | {vid}
+
+
+def test_star_faces_local_indices():
+    g = Grid.of(4, 4, 3)
+    vid = np.array([21])
+    for k in (2, 3):
+        srows = np.asarray(g.star_sids(k, vid))[0]
+        frows = np.asarray(g.star_sids(k - 1, vid))[0]
+        for r in range(len(srows)):
+            if srows[r] < 0:
+                continue
+            faces = np.asarray(g.simplex_faces(k, np.array([srows[r]])))[0]
+            local = G.STAR_FACES[k][r]
+            got = {int(frows[l]) for l in local}
+            # faces of star simplex containing v = faces listed by table
+            expect = set()
+            for fs in faces:
+                fv = set(np.asarray(
+                    g.simplex_vertices(k - 1, np.array([fs])))[0].tolist())
+                if 21 in fv:
+                    expect.add(int(fs))
+            assert got == expect
+
+
+def test_vertex_order_injective():
+    rng = np.random.default_rng(0)
+    f = rng.integers(0, 3, size=24).astype(np.float64)  # many ties
+    o = vertex_order(f)
+    assert sorted(o.tolist()) == list(range(24))
+    # order refines f: o[u] < o[v] => f[u] <= f[v]
+    perm = np.argsort(o)
+    assert (np.diff(f[perm]) >= 0).all()

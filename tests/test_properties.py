@@ -1,0 +1,67 @@
+"""Property-based tests (hypothesis) on the system's core invariants."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.diagram import diff_report, same_offdiagonal
+from repro.core.dms import compute_dms, oracle_to_diagram
+from repro.core.gradient import check_gradient_valid, compute_gradient_np
+from repro.core.grid import Grid, vertex_order
+from repro.core.reduction import compute_oracle
+
+
+dims_strategy = st.one_of(
+    st.tuples(st.integers(2, 14)),
+    st.tuples(st.integers(2, 6), st.integers(2, 6)),
+    st.tuples(st.integers(2, 4), st.integers(2, 4), st.integers(2, 4)),
+)
+
+
+@st.composite
+def grid_and_field(draw):
+    dims = draw(dims_strategy)
+    g = Grid.of(*dims)
+    seed = draw(st.integers(0, 2**31 - 1))
+    rng = np.random.default_rng(seed)
+    # integer-valued fields exercise the tie-breaking (simulation of
+    # simplicity) path; float fields exercise the generic path
+    if draw(st.booleans()):
+        f = rng.integers(0, max(2, g.nv // 3), size=g.nv).astype(np.float64)
+    else:
+        f = rng.standard_normal(g.nv)
+    return g, f
+
+
+@given(grid_and_field())
+@settings(max_examples=25, deadline=None)
+def test_gradient_always_valid(gx):
+    g, f = gx
+    order = vertex_order(f)
+    gf = compute_gradient_np(g, order)
+    check_gradient_valid(g, gf, order)
+
+
+@given(grid_and_field())
+@settings(max_examples=15, deadline=None)
+def test_dms_matches_oracle(gx):
+    g, f = gx
+    res = compute_dms(g, f)
+    orc = oracle_to_diagram(compute_oracle(g, f), g)
+    assert same_offdiagonal(res.diagram, orc), diff_report(res.diagram, orc)
+    for p in range(g.dim + 1):
+        assert np.array_equal(res.diagram.essential_orders(p),
+                              orc.essential_orders(p))
+
+
+@given(grid_and_field())
+@settings(max_examples=15, deadline=None)
+def test_diagram_invariants(gx):
+    """Birth < death in order space; Betti numbers of a box; pair counts
+    bounded by critical counts (Morse inequalities)."""
+    g, f = gx
+    res = compute_dms(g, f)
+    dg = res.diagram
+    assert dg.betti() == {k: (1 if k == 0 else 0) for k in range(g.dim + 1)}
+    for p in range(g.dim):
+        pts = dg.points_order(p)
+        assert (pts[:, 0] < pts[:, 1]).all()

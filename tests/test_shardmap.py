@@ -1,0 +1,20 @@
+"""Multi-device shard_map tests (run in a subprocess so the forced host
+device count never leaks into other tests — smoke tests must see 1 device)."""
+
+import os
+import subprocess
+import sys
+
+import pytest
+
+
+@pytest.mark.slow
+def test_shardmap_8_devices():
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    r = subprocess.run(
+        [sys.executable, os.path.join(os.path.dirname(__file__),
+                                      "shardmap_check.py"), "8"],
+        capture_output=True, text=True, timeout=900, env=env)
+    assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr}"
+    assert "ALL SHARD_MAP CHECKS PASSED" in r.stdout

@@ -1,0 +1,77 @@
+"""Unit tests: field generators, sharding rules, roofline HLO parser."""
+
+import numpy as np
+import pytest
+
+from repro.core.grid import Grid
+from repro.fields import FIELDS, make_field
+from repro.launch.roofline import collective_bytes, _shape_bytes
+from repro.models.layers import PM
+from repro.train.sharding import ShardingRules, spec_for_param
+
+
+@pytest.mark.parametrize("name", sorted(FIELDS))
+def test_fields_generate(name):
+    f = make_field(name, (8, 6, 4), seed=1)
+    assert f.shape == (8 * 6 * 4,)
+    assert np.isfinite(f).all()
+    # deterministic
+    assert np.array_equal(f, make_field(name, (8, 6, 4), seed=1))
+
+
+def test_elevation_monotone_unique():
+    f = make_field("elevation", (6, 6, 6))
+    assert len(np.unique(f)) == f.size
+
+
+class _FakeMesh:
+    shape = {"data": 16, "model": 16, "pod": 2}
+
+
+def test_spec_divisibility_fallback():
+    rules = ShardingRules(batch_axes=("data",))
+    mesh = _FakeMesh()
+    # heads=40 not divisible by 16 -> replicated; mlp=27648 divisible
+    p = PM((5120, 40, 128), ("embed", "heads", "head"))
+    spec = spec_for_param(p, rules, mesh)
+    assert tuple(spec) == ("data",)  # trailing Nones trimmed
+    p2 = PM((5120, 27648), ("embed", "mlp"))
+    spec2 = spec_for_param(p2, rules, mesh)
+    assert tuple(spec2) == ("data", "model")
+
+
+def test_spec_axis_used_once():
+    rules = ShardingRules(batch_axes=("data",))
+    mesh = _FakeMesh()
+    # both dims map to model: only the first takes it
+    p = PM((1024, 2048), ("mlp", "vocab"))
+    spec = spec_for_param(p, rules, mesh)
+    assert tuple(spec) == ("model",)
+
+
+def test_head_dim_fallback_rule():
+    """The §Perf head-dim TP fallback: override 'head'->model when the head
+    count doesn't divide the mesh."""
+    rules = ShardingRules(batch_axes=("data",), rules={"head": "model"})
+    mesh = _FakeMesh()
+    p = PM((5120, 40, 128), ("embed", "heads", "head"))
+    spec = spec_for_param(p, rules, mesh)
+    assert tuple(spec) == ("data", None, "model")
+
+
+def test_collective_parser():
+    hlo = """
+  %ag = bf16[8,1024]{1,0} all-gather(bf16[1,1024]{1,0} %x), dimensions={0}
+  %ar.1 = f32[256]{0} all-reduce(f32[256]{0} %y), to_apply=%sum
+  %cp = s32[16]{0} collective-permute(s32[16]{0} %z), source_target_pairs={{0,1}}
+  %dot.5 = f32[128,128]{1,0} dot(f32[128,64] %a, f32[64,128] %b)
+"""
+    out = collective_bytes(hlo)
+    assert out["all-gather"] == 8 * 1024 * 2
+    assert out["all-reduce"] == 256 * 4
+    assert out["collective-permute"] == 16 * 4
+    assert out["count"] == 3
+
+
+def test_shape_bytes_tuple():
+    assert _shape_bytes("(bf16[4,4], f32[2])") == 4 * 4 * 2 + 2 * 4
