@@ -1,10 +1,18 @@
-"""Render EXPERIMENTS.md §Dry-run / §Roofline tables from results/dryrun.
+"""Render EXPERIMENTS.md §Dry-run / §Roofline tables from results/dryrun,
+and emit the machine-readable pipeline benchmark (BENCH_pipeline.json).
 
     PYTHONPATH=src python -m benchmarks.report [--dir results/dryrun]
+    PYTHONPATH=src python -m benchmarks.report --section pipeline \
+        [--out BENCH_pipeline.json]
+
+The pipeline section runs ``PersistencePipeline`` over a fixed field set
+and dumps every ``StageReport`` (nested per-stage wall times + algorithm
+counters) so the perf trajectory is tracked PR-over-PR.
 """
 
 import argparse
 import json
+import platform
 from pathlib import Path
 
 
@@ -92,12 +100,63 @@ def dryrun_table(recs):
     return "\n".join(rows)
 
 
+def pipeline_bench(out_path, dims=(8, 8, 8), fields=("wavelet", "random"),
+                   backends=("np", "jax"), block_counts=(1, 4), batch=4):
+    """Run the PersistencePipeline benchmark matrix, write BENCH json."""
+    from repro.core.grid import Grid
+    from repro.fields import make_field
+    from repro.pipeline import PersistencePipeline
+
+    g = Grid.of(*dims)
+    runs = []
+    for field in fields:
+        f = make_field(field, dims, seed=0)
+        for backend in backends:
+            for nb in block_counts:
+                pipe = PersistencePipeline(backend=backend, n_blocks=nb,
+                                           distributed=nb > 1)
+                pipe.diagram(f, grid=g)  # warm-up: keep jit compile out
+                res = pipe.diagram(f, grid=g)
+                runs.append({
+                    "field": field, "dims": list(dims), "backend": backend,
+                    "n_blocks": nb, "distributed": nb > 1,
+                    "report": res.report.to_dict(),
+                })
+        # batched path: one compiled program over `batch` same-shape fields
+        pipe = PersistencePipeline(backend="jax")
+        fs = [make_field(field, dims, seed=s) for s in range(batch)]
+        pipe.diagrams(fs, grid=g)  # warm-up: compile the batched program
+        ress = pipe.diagrams(fs, grid=g)
+        runs.append({
+            "field": field, "dims": list(dims), "backend": "jax",
+            "n_blocks": 1, "batched": batch,
+            "report": ress[0].report.to_dict(),
+        })
+    doc = {"schema": "ddms-pipeline-bench/v1",
+           "platform": platform.platform(),
+           "python": platform.python_version(),
+           "runs": runs}
+    Path(out_path).write_text(json.dumps(doc, indent=1))
+    print(f"wrote {out_path}: {len(runs)} runs")
+    for r in runs:
+        stages = {c["name"]: c["seconds"] for c in r["report"]["children"]}
+        tag = f"b{r['batched']}" if "batched" in r else f"nb{r['n_blocks']}"
+        total = sum(stages.values())
+        print(f"  {r['field']}/{r['backend']}/{tag}: total={total*1e3:.1f}ms "
+              + " ".join(f"{k}={v*1e3:.1f}" for k, v in stages.items()))
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--dir", default="results/dryrun")
     ap.add_argument("--section", default="all",
-                    choices=["all", "roofline", "dryrun"])
+                    choices=["all", "roofline", "dryrun", "pipeline"])
+    ap.add_argument("--out", default="BENCH_pipeline.json",
+                    help="output path for --section pipeline")
     args = ap.parse_args()
+    if args.section == "pipeline":
+        pipeline_bench(args.out)
+        return
     recs = load(args.dir)
     if args.section in ("all", "dryrun"):
         print("### Dry-run status (all cells)\n")

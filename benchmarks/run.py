@@ -11,7 +11,13 @@ Prints ``name,us_per_call,derived`` CSV rows.  Paper mapping:
 - fig15_vs_dipha        : DDMS vs boundary-matrix reduction (the DIPHA
                           algorithm core, clearing-optimized)
 - gradient_throughput   : lower-star gradient vertices/s (jnp jit + Pallas)
+- batched_serving       : PersistencePipeline.diagrams + TopoService
+                          batch amortization vs per-field calls
 - lm_train_step         : smoke-model tokens/s (framework side)
+
+Everything topological runs through the ``PersistencePipeline`` facade
+(``repro.pipeline``); per-stage timings come from its ``StageReport``.
+``--quick`` runs a CPU-seconds subset for CI smoke.
 
 Sizes are scaled to CPU-minutes; the ratios (speedups, efficiencies,
 round counts) are the observables the paper's figures report.  The 512-chip
@@ -19,15 +25,15 @@ numbers live in EXPERIMENTS.md §Dry-run/§Roofline (compiled artifacts, not
 wall clock).
 """
 
+import argparse
 import time
 
 import numpy as np
 
-from repro.core.ddms import compute_ddms_sim
-from repro.core.dms import compute_dms
 from repro.core.grid import Grid, vertex_order
 from repro.core.reduction import compute_oracle
 from repro.fields import make_field
+from repro.pipeline import PersistencePipeline
 
 
 def _row(name, us, derived=""):
@@ -43,17 +49,23 @@ def _time(fn, reps=1):
 
 
 DIMS = (16, 16, 16)
+QUICK_DIMS = (8, 8, 8)
 
 
-def fig11_d1_versions():
-    f = make_field("backpack", DIMS, seed=1)
-    g = Grid.of(*DIMS)
+def _ddms(backend="jax", n_blocks=4, **kw):
+    return PersistencePipeline(backend=backend, n_blocks=n_blocks,
+                               distributed=True, **kw)
+
+
+def fig11_d1_versions(dims=DIMS):
+    f = make_field("backpack", dims, seed=1)
+    g = Grid.of(*dims)
     for name, kw in [("basic", dict(anticipation=False)),
                      ("anticipation_b1", dict(budget=1)),
                      ("anticipation_b16", dict(budget=16)),
                      ("anticipation_auto", dict())]:
-        us, res = _time(lambda kw=kw: compute_ddms_sim(
-            g, f, n_blocks=4, gradient_backend="jax", **kw))
+        pipe = _ddms(**kw)
+        us, res = _time(lambda pipe=pipe: pipe.diagram(f, grid=g))
         st = res.stats
         _row(f"fig11_{name}", us,
              f"d1_rounds={st.get('d1_rounds')};"
@@ -61,10 +73,10 @@ def fig11_d1_versions():
              f"expansions={st.get('d1_expansions')}")
 
 
-def fig12_step_breakdown():
-    f = make_field("backpack", DIMS, seed=1)
-    g = Grid.of(*DIMS)
-    res = compute_ddms_sim(g, f, n_blocks=4, gradient_backend="jax")
+def fig12_step_breakdown(dims=DIMS):
+    f = make_field("backpack", dims, seed=1)
+    g = Grid.of(*dims)
+    res = _ddms().diagram(f, grid=g)
     stages = ("order", "gradient", "extract_sort", "d0", "d_top", "d1")
     tot = sum(res.stats[k] for k in stages)
     for k in stages:
@@ -72,13 +84,13 @@ def fig12_step_breakdown():
              f"frac={res.stats[k] / tot:.2f}")
 
 
-def fig13_strong_scaling():
-    f = make_field("wavelet", DIMS, seed=2)
-    g = Grid.of(*DIMS)
+def fig13_strong_scaling(dims=DIMS):
+    f = make_field("wavelet", dims, seed=2)
+    g = Grid.of(*dims)
     base = None
     for nb in (1, 2, 4, 8):
-        us, res = _time(lambda nb=nb: compute_ddms_sim(
-            g, f, n_blocks=nb, gradient_backend="jax"))
+        pipe = _ddms(n_blocks=nb)
+        us, res = _time(lambda pipe=pipe: pipe.diagram(f, grid=g))
         base = base or us
         _row(f"fig13_strong_nb{nb}", us,
              f"rel={base / us:.2f};d1_rounds={res.stats.get('d1_rounds')}")
@@ -89,41 +101,41 @@ def fig13_weak_scaling():
         dims = (12, 12, nz)
         f = make_field("magnetic", dims, seed=3)
         g = Grid.of(*dims)
-        us, res = _time(lambda g=g, f=f, nb=nb: compute_ddms_sim(
-            g, f, n_blocks=nb, gradient_backend="jax"))
+        pipe = _ddms(n_blocks=nb)
+        us, res = _time(lambda g=g, f=f, pipe=pipe: pipe.diagram(f, grid=g))
         _row(f"fig13_weak_nb{nb}", us,
              f"nv={g.nv};ncrit={res.stats['n_critical']}")
 
 
-def fig14_dms_vs_ddms():
+def fig14_dms_vs_ddms(dims=DIMS):
+    dms = PersistencePipeline(backend="jax", distributed=False)
+    ddms = _ddms()
     for name in ("wavelet", "random", "isabel"):
-        f = make_field(name, DIMS, seed=4)
-        g = Grid.of(*DIMS)
-        us_dms, _ = _time(lambda f=f, g=g: compute_dms(
-            g, f, gradient_backend="jax"))
-        us_ddms, _ = _time(lambda f=f, g=g: compute_ddms_sim(
-            g, f, n_blocks=4, gradient_backend="jax"))
+        f = make_field(name, dims, seed=4)
+        g = Grid.of(*dims)
+        us_dms, _ = _time(lambda f=f, g=g: dms.diagram(f, grid=g))
+        us_ddms, _ = _time(lambda f=f, g=g: ddms.diagram(f, grid=g))
         _row(f"fig14_{name}", us_ddms,
              f"dms_us={us_dms:.0f};overhead={us_ddms / us_dms:.2f}")
 
 
 def fig15_vs_dipha():
     dims = (8, 8, 8)  # reduction is the bottleneck; the point is the gap
+    ddms = _ddms()
     for name in ("wavelet", "random"):
         f = make_field(name, dims, seed=5)
         g = Grid.of(*dims)
         us_red, _ = _time(lambda f=f, g=g: compute_oracle(g, f, twist=True))
-        us_ddms, _ = _time(lambda f=f, g=g: compute_ddms_sim(
-            g, f, n_blocks=4, gradient_backend="jax"))
+        us_ddms, _ = _time(lambda f=f, g=g: ddms.diagram(f, grid=g))
         _row(f"fig15_{name}", us_ddms,
              f"dipha_like_us={us_red:.0f};speedup={us_red / us_ddms:.1f}x")
 
 
-def gradient_throughput():
+def gradient_throughput(quick=False):
     import jax
     import jax.numpy as jnp
     from repro.kernels import ops
-    dims = (32, 32, 32)
+    dims = (16, 16, 16) if quick else (32, 32, 32)
     f = make_field("random", dims, seed=6)
     g = Grid.of(*dims)
     o = jnp.asarray(np.asarray(vertex_order(f.astype(np.float64))))
@@ -152,6 +164,26 @@ def gradient_throughput():
          f"vertices_per_s={gp.nv / (us / 1e6):.0f};interpret_mode=1")
 
 
+def batched_serving(dims=(8, 8, 8), batch=6):
+    """Batched diagrams() + TopoService vs one-at-a-time calls."""
+    from repro.serve import TopoService
+    g = Grid.of(*dims)
+    fields = [make_field("random", dims, seed=s) for s in range(batch)]
+    pipe = PersistencePipeline(backend="jax")
+    pipe.diagram(fields[0], grid=g)  # compile the single path
+    us_one, _ = _time(lambda: [pipe.diagram(f, grid=g) for f in fields])
+    pipe.diagrams(fields, grid=g)    # compile the batched path
+    us_bat, _ = _time(lambda: pipe.diagrams(fields, grid=g))
+    _row(f"batched_diagrams_b{batch}", us_bat,
+         f"sequential_us={us_one:.0f};speedup={us_one / us_bat:.2f}x")
+    with TopoService(pipeline=pipe, max_batch=batch,
+                     max_wait_s=0.05) as svc:
+        us_svc, _ = _time(lambda: svc.map(fields, grid=g))
+        st = svc.stats.as_dict()
+    _row(f"topo_service_b{batch}", us_svc,
+         f"batches={st['batches']};max_batch={st['max_batch']}")
+
+
 def lm_train_step():
     import jax
     from repro.configs import smoke_config
@@ -174,7 +206,17 @@ def lm_train_step():
 
 
 def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="small-size subset for CI smoke")
+    args = ap.parse_args()
     print("name,us_per_call,derived")
+    if args.quick:
+        fig12_step_breakdown(QUICK_DIMS)
+        fig14_dms_vs_ddms(QUICK_DIMS)
+        gradient_throughput(quick=True)
+        batched_serving(dims=(6, 6, 6), batch=4)
+        return
     fig11_d1_versions()
     fig12_step_breakdown()
     fig13_strong_scaling()
@@ -182,6 +224,7 @@ def main() -> None:
     fig14_dms_vs_ddms()
     fig15_vs_dipha()
     gradient_throughput()
+    batched_serving()
     lm_train_step()
 
 

@@ -20,13 +20,12 @@ sys.path.insert(0, "src")
 
 import numpy as np  # noqa: E402
 
-from repro.core.ddms import compute_ddms_sim  # noqa: E402
 from repro.core.diagram import same_offdiagonal  # noqa: E402
-from repro.core.dms import compute_dms  # noqa: E402
 from repro.core.grid import Grid  # noqa: E402
 from repro.distributed.shardmap_pipeline import (front_triplets,  # noqa
                                                  run_front)
 from repro.fields import make_field  # noqa: E402
+from repro.pipeline import PersistencePipeline  # noqa: E402
 
 
 def main():
@@ -43,10 +42,12 @@ def main():
           f"sort overflow={bool(out['overflow'])}, "
           f"unresolved={int(out['unresolved'])}")
 
-    # distributed pairing + D1 (block-level algorithms)
-    res = compute_ddms_sim(g, f, n_blocks=args.devices,
-                           gradient_backend="jax")
-    ref = compute_dms(g, f, gradient_backend="jax")
+    # distributed pairing + D1 (block-level algorithms) — the sharded
+    # gradient backend + the DDMS back-end, vs the sequential reference
+    res = PersistencePipeline(backend="shardmap", n_blocks=args.devices,
+                              distributed=True).diagram(f, grid=g)
+    ref = PersistencePipeline(backend="jax",
+                              distributed=False).diagram(f, grid=g)
     ok = same_offdiagonal(res.diagram, ref.diagram)
     print(f"DDMS == DMS: {ok}")
     print("self-correcting pairing rounds:",

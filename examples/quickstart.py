@@ -1,5 +1,6 @@
 """Quickstart: compute the persistence diagram of a 3-D scalar field with
-DMS and verify it against the boundary-matrix reduction oracle.
+the ``PersistencePipeline`` facade and verify it against the
+boundary-matrix reduction oracle.
 
     PYTHONPATH=src python examples/quickstart.py [--dims 12 12 12]
 """
@@ -11,24 +12,29 @@ sys.path.insert(0, "src")
 import numpy as np  # noqa: E402
 
 from repro.core.diagram import diff_report, same_offdiagonal  # noqa: E402
-from repro.core.dms import compute_dms, oracle_to_diagram  # noqa: E402
+from repro.core.dms import oracle_to_diagram  # noqa: E402
 from repro.core.grid import Grid  # noqa: E402
 from repro.core.reduction import compute_oracle  # noqa: E402
 from repro.fields import make_field  # noqa: E402
+from repro.pipeline import PersistencePipeline  # noqa: E402
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--dims", nargs="+", type=int, default=[10, 10, 10])
     ap.add_argument("--field", default="wavelet")
+    ap.add_argument("--backend", default="jax",
+                    help="pipeline backend: np | jax | pallas | shardmap")
     ap.add_argument("--check", action="store_true",
                     help="verify against the O(n^3) reduction oracle")
     args = ap.parse_args()
     g = Grid.of(*args.dims)
     f = make_field(args.field, g.dims, seed=0)
-    res = compute_dms(g, f, gradient_backend="jax")
+    pipe = PersistencePipeline(backend=args.backend)
+    res = pipe.diagram(f, grid=g)
     dg = res.diagram
-    print(f"field '{args.field}' on {g.dims}: {g.nv} vertices")
+    print(f"field '{args.field}' on {g.dims}: {g.nv} vertices "
+          f"(backend={pipe.backend.name})")
     for p in range(g.dim):
         pts = dg.points_value(p, f)
         pts = pts[pts[:, 0] != pts[:, 1]]
@@ -36,8 +42,8 @@ def main():
               + (f", max persistence {np.max(pts[:,1]-pts[:,0]):.3f}"
                  if len(pts) else ""))
     print("  Betti:", dg.betti())
-    print("  stage times:", {k: f"{v:.3f}s" for k, v in res.stats.items()
-                             if isinstance(v, float)})
+    print("  stage times:",
+          {c.name: f"{c.seconds:.3f}s" for c in res.report.children})
     if args.check:
         orc = oracle_to_diagram(compute_oracle(g, f), g)
         assert same_offdiagonal(dg, orc), diff_report(dg, orc)

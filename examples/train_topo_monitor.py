@@ -15,8 +15,8 @@ sys.path.insert(0, "src")
 import jax  # noqa: E402
 import numpy as np  # noqa: E402
 
-from repro.core.dms import compute_dms  # noqa: E402
 from repro.core.grid import Grid  # noqa: E402
+from repro.pipeline import PersistencePipeline  # noqa: E402
 from repro.data.pipeline import DataConfig, batch_at  # noqa: E402
 from repro.launch.train import RunConfig, run  # noqa: E402
 from repro.models import transformer as T  # noqa: E402
@@ -46,7 +46,8 @@ def loss_landscape_pd(cfg, params, batch, step_cfg, n=12, radius=0.05,
         for j, b in enumerate(np.linspace(-1, 1, n)):
             grid_vals[i, j] = float(at(a, b))
     g = Grid.of(n, n)
-    res = compute_dms(g, grid_vals.reshape(-1))
+    res = PersistencePipeline(backend="np").diagram(
+        grid_vals.reshape(-1), grid=g)
     d0 = res.diagram.points_value(0, grid_vals.reshape(-1))
     d0 = d0[d0[:, 0] != d0[:, 1]]
     return grid_vals, d0

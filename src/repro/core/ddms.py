@@ -1,127 +1,45 @@
-"""Distributed Discrete Morse Sandwich driver (paper Sec. III).
+"""Distributed Discrete Morse Sandwich entry point (paper Sec. III).
 
-``compute_ddms_sim`` runs the *algorithmic* distributed pipeline: the
-round-synchronous self-correcting extremum-saddle pairing (Alg. 4 analogue)
-and the token-based D1 engine (Alg. 5/6) over an n-block z-decomposition,
-and must produce bit-identical diagrams to single-node DMS for every block
-count — that is the correctness contract the paper validates against DMS.
+``compute_ddms_sim`` runs the *algorithmic* distributed pipeline — the
+round-synchronous self-correcting extremum-saddle pairing (Alg. 4
+analogue) and the token-based D1 engine (Alg. 5/6) over an n-block
+z-decomposition — and must produce bit-identical diagrams to single-node
+DMS for every block count; that is the correctness contract the paper
+validates against DMS.
 
-The dense front-end (order, gradient, tracing) is embarrassingly parallel /
-halo-local; its *device-level* distribution (shard_map + ppermute halo
-exchange + pointer-doubling) lives in ``repro.distributed.shardmap_pipeline``
-and is exercised by the multi-device tests and the multi-pod dry-run.
+The shared stage chain and the engine selection now live in
+:mod:`repro.pipeline`: this function is the API-compatible thin wrapper
+
+    compute_ddms_sim(grid, f, n_blocks=n)
+        == PersistencePipeline(backend="np", n_blocks=n,
+                               distributed=True).diagram(f, grid=grid)
+
+The dense front-end (order, gradient, tracing) is embarrassingly
+parallel / halo-local; its *device-level* distribution (shard_map +
+ppermute halo exchange + pointer-doubling) lives in
+``repro.distributed.shardmap_pipeline`` and is exposed to the pipeline
+as the ``shardmap`` backend of the registry.  New code should use the
+``PersistencePipeline`` facade; see docs/pipeline.md.
 """
 
 from __future__ import annotations
 
-import time
-from dataclasses import dataclass, field
-from typing import Dict, Optional
+from typing import Optional
 
 import numpy as np
 
-from .critical import extract_critical
-from .diagram import Diagram
-from .dms import DMSResult, _as_pairs
-from .extremum_graph import build_d0_graph, build_dual_graph
-from .gradient import compute_gradient, compute_gradient_np
-from .grid import Grid, vertex_order
-from repro.distributed.d1_rounds import d1_distributed
-from repro.distributed.pairing_rounds import pairing_fixpoint
+from .dms import DMSResult
+from .grid import Grid
 
 
 def compute_ddms_sim(grid: Grid, f: np.ndarray, n_blocks: int = 4,
                      anticipation: bool = True, budget: Optional[int] = None,
                      gradient_backend: str = "np") -> DMSResult:
-    stats: Dict[str, float] = {"n_blocks": n_blocks}
-    t0 = time.perf_counter()
-    f = np.asarray(f).reshape(-1)
-    order = np.asarray(vertex_order(f))
-    stats["order"] = time.perf_counter() - t0
-
-    t = time.perf_counter()
-    if gradient_backend == "np":
-        gf = compute_gradient_np(grid, order)
-    else:
-        gf = compute_gradient(grid, order, backend=gradient_backend)
-    stats["gradient"] = time.perf_counter() - t
-
-    t = time.perf_counter()
-    ci = extract_critical(grid, gf, order)
-    stats["extract_sort"] = time.perf_counter() - t
-
-    d = grid.dim
-    pairs: Dict[int, np.ndarray] = {}
-    essential: Dict[int, np.ndarray] = {}
-
-    # ---- D0: self-correcting distributed pairing -----------------------
-    t = time.perf_counter()
-    d0_saddles: set = set()
-    if d >= 1:
-        g0 = build_d0_graph(grid, gf, ci)
-        p0, st0 = pairing_fixpoint(g0, collect_stats=True)
-        stats["d0_rounds"] = st0.rounds
-        stats["d0_corrections"] = st0.corrections
-        pairs[0] = _as_pairs([(e, s) for (s, e) in p0.pairs])
-        paired_v = {e for _, e in p0.pairs}
-        essential[0] = np.asarray(
-            sorted(set(map(int, ci.crit_sids[0])) - paired_v), dtype=np.int64)
-        d0_saddles = {s for s, _ in p0.pairs}
-    else:
-        pairs[0] = _as_pairs([])
-        essential[0] = np.asarray([int(x) for x in ci.crit_sids[0]],
-                                  dtype=np.int64)
-    stats["d0"] = time.perf_counter() - t
-
-    # ---- D_{d-1}: same engine in the reversed (dual) space -------------
-    t = time.perf_counter()
-    dual_paired_saddles: set = set()
-    if d >= 2:
-        if d == 2:
-            dual_saddles = np.asarray(
-                [int(e) for e in ci.crit_sids[1] if int(e) not in d0_saddles],
-                dtype=np.int64)
-        else:
-            dual_saddles = ci.crit_sids[d - 1]
-        gD = build_dual_graph(grid, gf, ci, dual_saddles)
-        pD, stD = pairing_fixpoint(gD, collect_stats=True)
-        stats["d_top_rounds"] = stD.rounds
-        pairs[d - 1] = _as_pairs(pD.pairs)
-        essential[d] = np.asarray(
-            sorted(set(map(int, ci.crit_sids[d])) - {e for _, e in pD.pairs}),
-            dtype=np.int64)
-        dual_paired_saddles = {s for s, _ in pD.pairs}
-    elif d == 1:
-        essential[1] = np.asarray(
-            sorted(set(map(int, ci.crit_sids[1])) - d0_saddles),
-            dtype=np.int64)
-    stats["d_top"] = time.perf_counter() - t
-
-    # ---- D1: token-based distributed homologous propagation ------------
-    t = time.perf_counter()
-    if d == 3:
-        c1 = np.asarray(
-            [int(e) for e in ci.crit_sids[1] if int(e) not in d0_saddles],
-            dtype=np.int64)
-        c2 = np.asarray(
-            [int(s) for s in ci.crit_sids[2]
-             if int(s) not in dual_paired_saddles], dtype=np.int64)
-        ss, st1 = d1_distributed(grid, gf, ci, c1, c2, n_blocks,
-                                 anticipation=anticipation, budget=budget)
-        stats["d1_rounds"] = st1.rounds
-        stats["d1_token_hops"] = st1.token_hops
-        stats["d1_expansions"] = st1.expansions
-        stats["d1_merges"] = st1.merges
-        stats["d1_steals"] = st1.steals
-        pairs[1] = _as_pairs(ss.pairs)
-        essential[1] = np.asarray(ss.unpaired_edges, dtype=np.int64)
-        essential[2] = np.asarray(ss.unpaired_triangles, dtype=np.int64)
-    elif d == 2:
-        essential[1] = np.asarray(
-            sorted({int(s) for s in dual_saddles} - dual_paired_saddles),
-            dtype=np.int64)
-    stats["d1"] = time.perf_counter() - t
-
-    diag = Diagram(grid, order, pairs, essential)
-    stats["n_critical"] = sum(gf.n_critical().values())
-    return DMSResult(diag, stats)
+    """Distributed DMS via the unified pipeline (see module docstring)."""
+    from repro.pipeline import PersistencePipeline
+    res = PersistencePipeline(backend=gradient_backend, n_blocks=n_blocks,
+                              distributed=True, anticipation=anticipation,
+                              budget=budget).diagram(f, grid=grid)
+    stats = dict(res.stats)
+    stats.setdefault("n_blocks", n_blocks)
+    return DMSResult(res.diagram, stats)

@@ -1,30 +1,32 @@
-"""Single-node Discrete Morse Sandwich driver (paper Sec. II-F).
+"""Single-node Discrete Morse Sandwich entry point (paper Sec. II-F).
 
-Pipeline: vertex order -> discrete gradient (zero-persistence skip) ->
-critical extraction & sort -> D0 (primal extremum graph + Alg. 1) and
-D_{d-1} (dual graph, same pairing in reversed order) -> D1 by homologous
-propagation on the unpaired leftovers (3-D only) -> essential classes.
+The actual stage chain — vertex order -> discrete gradient (zero-
+persistence skip) -> critical extraction & sort -> D0 / D_{d-1}
+(Union-Find extremum-saddle pairing) -> D1 by homologous propagation —
+now lives in :mod:`repro.pipeline` (``stages.py`` for the chain,
+``backends.py`` for the gradient implementations, ``api.py`` for the
+``PersistencePipeline`` facade with batching and program caching).
 
-The stratification is exactly the paper's: D0 / D_{d-1} are the cheap special
-cases handled with Union-Find, and only the (few) still-unpaired critical 1-
-and 2-saddles reach the expensive saddle-saddle procedure.
+``compute_dms`` is kept as the API-compatible thin wrapper:
+
+    compute_dms(grid, f)  ==  PersistencePipeline(backend="np",
+                                                  distributed=False)
+                                  .diagram(f, grid=grid)
+
+both in the diagram it returns and in the (now StageReport-derived)
+``stats`` keys.  New code should use the facade directly; see
+docs/pipeline.md for the migration notes.
 """
 
 from __future__ import annotations
 
-import time
 from dataclasses import dataclass, field
 from typing import Dict
 
 import numpy as np
 
-from .critical import extract_critical
 from .diagram import Diagram
-from .extremum_graph import build_d0_graph, build_dual_graph
-from .gradient import compute_gradient, compute_gradient_np
-from .grid import Grid, vertex_order
-from .pairing import pair_extrema_saddles
-from .saddle_saddle import pair_saddle_saddle_seq
+from .grid import Grid
 
 
 @dataclass
@@ -40,90 +42,11 @@ def _as_pairs(lst) -> np.ndarray:
 
 def compute_dms(grid: Grid, f: np.ndarray,
                 gradient_backend: str = "np") -> DMSResult:
-    stats: Dict[str, float] = {}
-    t0 = time.perf_counter()
-    f = np.asarray(f).reshape(-1)
-    order = np.asarray(vertex_order(f))
-    stats["order"] = time.perf_counter() - t0
-
-    t = time.perf_counter()
-    if gradient_backend == "np":
-        gf = compute_gradient_np(grid, order)
-    else:
-        gf = compute_gradient(grid, order, backend=gradient_backend)
-    stats["gradient"] = time.perf_counter() - t
-
-    t = time.perf_counter()
-    ci = extract_critical(grid, gf, order)
-    stats["extract_sort"] = time.perf_counter() - t
-
-    d = grid.dim
-    pairs: Dict[int, np.ndarray] = {}
-    essential: Dict[int, np.ndarray] = {}
-
-    # ---- D0 (primal) ----
-    t = time.perf_counter()
-    d0_saddles: set = set()
-    if d >= 1:
-        g0 = build_d0_graph(grid, gf, ci)
-        p0 = pair_extrema_saddles(g0)
-        pairs[0] = _as_pairs([(e, s) for (s, e) in p0.pairs])
-        paired_v = {e for _, e in p0.pairs}
-        essential[0] = np.asarray(
-            sorted(set(map(int, ci.crit_sids[0])) - paired_v), dtype=np.int64)
-        d0_saddles = {s for s, _ in p0.pairs}
-    else:
-        pairs[0] = _as_pairs([])
-        essential[0] = np.asarray([int(x) for x in ci.crit_sids[0]],
-                                  dtype=np.int64)
-    stats["d0"] = time.perf_counter() - t
-
-    # ---- D_{d-1} (dual) ----
-    t = time.perf_counter()
-    dual_paired_saddles: set = set()
-    if d >= 2:
-        if d == 2:
-            dual_saddles = np.asarray(
-                [int(e) for e in ci.crit_sids[1] if int(e) not in d0_saddles],
-                dtype=np.int64)
-        else:
-            dual_saddles = ci.crit_sids[d - 1]
-        gD = build_dual_graph(grid, gf, ci, dual_saddles)
-        pD = pair_extrema_saddles(gD)
-        pairs[d - 1] = _as_pairs(pD.pairs)  # (saddle birth, extremum death)
-        essential[d] = np.asarray(
-            sorted(set(map(int, ci.crit_sids[d])) - {e for _, e in pD.pairs}),
-            dtype=np.int64)
-        dual_paired_saddles = {s for s, _ in pD.pairs}
-    elif d == 1:
-        essential[1] = np.asarray(
-            sorted(set(map(int, ci.crit_sids[1])) - d0_saddles),
-            dtype=np.int64)
-    stats["d_top"] = time.perf_counter() - t
-
-    # ---- D1 by homologous propagation (3-D only) ----
-    t = time.perf_counter()
-    if d == 3:
-        c1 = np.asarray(
-            [int(e) for e in ci.crit_sids[1] if int(e) not in d0_saddles],
-            dtype=np.int64)
-        c2 = np.asarray(
-            [int(s) for s in ci.crit_sids[2]
-             if int(s) not in dual_paired_saddles], dtype=np.int64)
-        ss = pair_saddle_saddle_seq(grid, gf, ci, c1, c2)
-        pairs[1] = _as_pairs(ss.pairs)
-        essential[1] = np.asarray(ss.unpaired_edges, dtype=np.int64)
-        essential[2] = np.asarray(ss.unpaired_triangles, dtype=np.int64)
-        stats["d1_expansions"] = ss.expansions
-    elif d == 2:
-        essential[1] = np.asarray(
-            sorted({int(s) for s in dual_saddles} - dual_paired_saddles),
-            dtype=np.int64)
-    stats["d1"] = time.perf_counter() - t
-
-    diag = Diagram(grid, order, pairs, essential)
-    stats["n_critical"] = sum(gf.n_critical().values())
-    return DMSResult(diag, stats)
+    """Sequential DMS via the unified pipeline (see module docstring)."""
+    from repro.pipeline import PersistencePipeline
+    res = PersistencePipeline(backend=gradient_backend,
+                              distributed=False).diagram(f, grid=grid)
+    return DMSResult(res.diagram, res.stats)
 
 
 def oracle_to_diagram(orc, grid: Grid) -> Diagram:

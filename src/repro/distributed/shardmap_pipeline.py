@@ -59,7 +59,13 @@ class FrontConfig:
     @property
     def nz_local(self) -> int:
         nx, ny, nz = self.dims
-        assert nz % self.n_blocks == 0, "nz must divide evenly over blocks"
+        if self.n_blocks < 1:
+            raise ValueError(f"n_blocks must be >= 1, got {self.n_blocks}")
+        if nz % self.n_blocks != 0:
+            raise ValueError(
+                f"nz={nz} does not divide evenly over n_blocks="
+                f"{self.n_blocks} (dims={self.dims}); choose a block count "
+                f"dividing the z extent")
         return nz // self.n_blocks
 
     @property
@@ -73,13 +79,21 @@ class FrontConfig:
 
 # -- mesh-axis helpers (single name or tuple; z is split over all of them) --
 
+def _one_axis_size(a) -> int:
+    # jax.lax.axis_size only exists in newer jax; fall back to the static
+    # axis env (jax.core.axis_frame returns the int size on 0.4.x)
+    if hasattr(jax.lax, "axis_size"):
+        return jax.lax.axis_size(a)
+    return int(jax.core.axis_frame(a))
+
+
 def _axis_size(ax):
     if isinstance(ax, tuple):
         n = 1
         for a in ax:
-            n *= jax.lax.axis_size(a)
+            n *= _one_axis_size(a)
         return n
-    return jax.lax.axis_size(ax)
+    return _one_axis_size(ax)
 
 
 def _axis_index(ax):
@@ -195,6 +209,32 @@ def ring_resolve(cfg: FrontConfig, table, ent_per_vertex: int, queries):
 # the per-device program
 # --------------------------------------------------------------------------
 
+def halo_gradient(cfg: FrontConfig, ranks):
+    """Halo-exchange the boundary rank planes with the ring neighbors and
+    run the lower-star gradient on the local slab (inside shard_map).
+
+    ranks: (nv_local,) int64 global vertex ranks of my z-slab.
+    Returns (nbrs, (status, partner, vstat, vpart)): the (nv_local, 27)
+    neighbor-order tensor and the packed gradient rows.
+    """
+    nx, ny, _ = cfg.dims
+    nzl, plane, nvl = cfg.nz_local, cfg.plane, cfg.nv_local
+    ax = cfg.axis_name
+    me = _axis_index(ax)
+    nb = cfg.n_blocks
+    r3 = ranks.reshape(nzl, ny, nx)
+    below = _ppshift(r3[-1], ax, up=True)
+    above = _ppshift(r3[0], ax, up=False)
+    below = jnp.where(me > 0, below, jnp.int64(-1))
+    above = jnp.where(me < nb - 1, above, jnp.int64(-1))
+    ext = jnp.concatenate([below[None], r3, above[None]], axis=0)
+    from repro.core.grid import Grid
+    eg = Grid.of(nx, ny, nzl + 2)
+    nbrs_ext = GR.neighbor_orders(eg, ext.reshape(-1), xp=jnp)
+    nbrs = nbrs_ext.reshape(nzl + 2, plane, 27)[1:-1].reshape(nvl, 27)
+    return nbrs, _gradient_rows(cfg, nbrs, ranks)
+
+
 def _gradient_rows(cfg: FrontConfig, nbrs, ov):
     if cfg.gradient_backend == "pallas":
         return lower_star_gradient_pallas(nbrs, ov, interpret=True)
@@ -226,7 +266,6 @@ def front_device_fn(cfg: FrontConfig, f_slab):
     ax = cfg.axis_name
     me = _axis_index(ax)
     nb = cfg.n_blocks
-    has_below = me > 0
     has_above = me < nb - 1
     gid0 = me.astype(jnp.int64) * nvl
 
@@ -243,20 +282,8 @@ def front_device_fn(cfg: FrontConfig, f_slab):
     else:
         ranks, overflow = rankfree_keys(fl, gids), jnp.asarray(False)
 
-    # ---- 2. halo exchange of ranks ----------------------------------------
-    r3 = ranks.reshape(nzl, ny, nx)
-    below = _ppshift(r3[-1], ax, up=True)
-    above = _ppshift(r3[0], ax, up=False)
-    below = jnp.where(has_below, below, jnp.int64(-1))
-    above = jnp.where(has_above, above, jnp.int64(-1))
-    ext = jnp.concatenate([below[None], r3, above[None]], axis=0)
-
-    # ---- 3. gradient on own vertices ---------------------------------------
-    from repro.core.grid import Grid
-    eg = Grid.of(nx, ny, nzl + 2)
-    nbrs_ext = GR.neighbor_orders(eg, ext.reshape(-1), xp=jnp)
-    nbrs = nbrs_ext.reshape(nzl + 2, plane, 27)[1:-1].reshape(nvl, 27)
-    status, partner, vstat, vpart = _gradient_rows(cfg, nbrs, ranks)
+    # ---- 2+3. halo exchange of ranks, gradient on own vertices -------------
+    nbrs, (status, partner, vstat, vpart) = halo_gradient(cfg, ranks)
 
     SHIFT, RTYPE, OTH = _row_tables()
     vx = gids % nx
@@ -457,6 +484,7 @@ def run_front(dims, f, n_blocks: int, mesh=None, **cfg_kw):
     from jax.experimental.shard_map import shard_map
 
     cfg = FrontConfig(tuple(dims), n_blocks, axis_name="blocks", **cfg_kw)
+    cfg.nz_local  # eager divisibility check: fail with dims/blocks named
     if mesh is None:
         mesh = jax.make_mesh((n_blocks,), ("blocks",))
 

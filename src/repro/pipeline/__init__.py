@@ -1,0 +1,24 @@
+"""Unified persistence-diagram pipeline: staged execution, backend
+registry, and a batched facade.
+
+- :mod:`repro.pipeline.stages`   — the paper's stage chain (order ->
+  gradient -> extraction -> D0 -> D_{d-1} -> D1) as composable stage
+  objects with structured :class:`StageReport` timing/counters;
+- :mod:`repro.pipeline.backends` — named gradient/pairing backends
+  (np / jax / pallas / shardmap) behind one protocol with capability
+  flags; ``register_backend`` is the extension point;
+- :mod:`repro.pipeline.api`      — the :class:`PersistencePipeline`
+  facade with single (``diagram``) and batched (``diagrams``) paths and
+  a compiled-program cache.
+
+See docs/pipeline.md for the architecture and the migration notes from
+``compute_dms`` / ``compute_ddms_sim`` (which remain as thin wrappers).
+"""
+
+from .api import (PersistencePipeline, PipelineConfig,  # noqa: F401
+                  PipelineResult)
+from .backends import (Backend, BackendCaps,  # noqa: F401
+                       UnknownBackendError, available_backends,
+                       get_backend, register_backend)
+from .stages import (ALL_STAGES, BACK_STAGES, FRONT_STAGES,  # noqa: F401
+                     PipelineState, StageReport, run_stages)

@@ -1,0 +1,204 @@
+"""Backend registry: name -> gradient implementation + capability flags.
+
+Replaces the string-typed ``gradient_backend`` if/else ladders that used
+to live in ``compute_dms`` / ``compute_ddms_sim`` / ``kernels.ops``.  A
+backend bundles:
+
+- ``gradient(grid, order, *, n_blocks=1)`` -> :class:`GradientField`;
+- an optional *batched rows* program ``batched_rows(grid)`` returning a
+  compiled ``orders (B, nv) -> packed rows`` function used by
+  ``PersistencePipeline.diagrams`` to amortize the stencil-gather
+  pre-pass over a batch of same-shape fields;
+- capability flags (``jittable`` / ``sharded`` / ``batched``) that the
+  facade and the serving layer use to pick execution strategies.
+
+Registered backends:
+
+- ``np``       — literal Robins reference with priority queues (heapq);
+- ``jax``      — branchless masked-recomputation form, jit-compiled;
+- ``pallas``   — the Pallas lower-star kernel (interpret mode on CPU);
+- ``shardmap`` — the device-level z-slab front-end: ``shard_map`` over a
+  mesh ring with one-plane ``ppermute`` halo exchange of ranks, the same
+  program ``repro.distributed.shardmap_pipeline`` runs at scale.
+
+``register_backend`` is the extension point later scaling PRs (async
+collectives, multi-host, remote caches) plug into.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Dict, Optional
+
+import numpy as np
+
+from repro.core import gradient as GR
+from repro.core.gradient import GradientField
+from repro.core.grid import Grid
+
+
+class UnknownBackendError(KeyError):
+    """Raised for a backend name absent from the registry."""
+
+
+@dataclass(frozen=True)
+class BackendCaps:
+    jittable: bool = False   # gradient program is jit-compiled
+    sharded: bool = False    # runs under shard_map over a device mesh
+    batched: bool = False    # supports one-shot batched packed-row programs
+
+
+@dataclass(frozen=True)
+class Backend:
+    """One gradient/pairing implementation behind the common protocol."""
+
+    name: str
+    gradient: Callable[..., GradientField]
+    caps: BackendCaps = field(default_factory=BackendCaps)
+    description: str = ""
+    # optional: grid -> compiled fn(orders (B, nv) int64) -> packed rows
+    batched_rows: Optional[Callable[[Grid], Callable]] = None
+
+
+_REGISTRY: Dict[str, Backend] = {}
+
+
+def register_backend(backend: Backend, overwrite: bool = False) -> Backend:
+    if backend.name in _REGISTRY and not overwrite:
+        raise ValueError(f"backend {backend.name!r} already registered")
+    _REGISTRY[backend.name] = backend
+    return backend
+
+
+def get_backend(name: str) -> Backend:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise UnknownBackendError(
+            f"unknown backend {name!r}; registered backends: "
+            f"{sorted(_REGISTRY)}") from None
+
+
+def available_backends() -> Dict[str, Backend]:
+    return dict(_REGISTRY)
+
+
+# --------------------------------------------------------------------------
+# np — literal Robins reference (priority queues)
+# --------------------------------------------------------------------------
+
+def _gradient_np(grid: Grid, order, *, n_blocks: int = 1) -> GradientField:
+    return GR.compute_gradient_np(grid, np.asarray(order))
+
+
+# --------------------------------------------------------------------------
+# jax / pallas — vectorized kernels (shared batched-row machinery)
+# --------------------------------------------------------------------------
+
+def _rows_fn(grid: Grid, kernel: str) -> Callable:
+    """orders (B, nv) -> packed rows over the flattened batch.
+
+    The stencil gather (``neighbor_orders``) and the per-vertex pairing
+    are both vertex-local, so a batch of B same-shape fields is just a
+    (B*nv)-vertex problem — one compiled program, one dispatch.
+    """
+    import jax
+    import jax.numpy as jnp
+    from repro.kernels import ref as REF
+
+    def fn(orders):  # (B, nv) int64
+        nbrs = jax.vmap(
+            lambda o: GR.neighbor_orders(grid, o, xp=jnp))(orders)
+        flat_nbrs = nbrs.reshape(-1, 27)
+        flat_ov = orders.reshape(-1)
+        if kernel == "pallas":
+            from repro.kernels.lower_star import lower_star_gradient_pallas
+            return lower_star_gradient_pallas(flat_nbrs, flat_ov,
+                                              interpret=True)
+        return REF.lower_star_gradient_jnp(flat_nbrs, flat_ov)
+
+    return jax.jit(fn) if kernel != "pallas" else fn
+
+
+def _scatter_batch(grid: Grid, rows, B: int):
+    """Split flattened-batch packed rows back into B GradientFields."""
+    status, partner, vstat, vpart = (np.asarray(r) for r in rows)
+    nv = grid.nv
+    out = []
+    for b in range(B):
+        sl = slice(b * nv, (b + 1) * nv)
+        out.append(GR._scatter_results(grid, status[sl], partner[sl],
+                                       vstat[sl], vpart[sl]))
+    return out
+
+
+def _make_kernel_gradient(kernel: str) -> Callable:
+    def _gradient(grid: Grid, order, *, n_blocks: int = 1) -> GradientField:
+        return GR.compute_gradient(grid, order, backend=kernel)
+    return _gradient
+
+
+# --------------------------------------------------------------------------
+# shardmap — device-level z-slab front-end (mesh ring + halo exchange)
+# --------------------------------------------------------------------------
+
+def _gradient_shardmap(grid: Grid, order, *, n_blocks: int = 1,
+                       kernel: str = "jax") -> GradientField:
+    """Lower-star gradient under ``shard_map``: each device owns a z-slab,
+    exchanges its boundary rank planes with ring neighbors (``ppermute``),
+    and runs the kernel on its own vertices — the gradient step of
+    ``repro.distributed.shardmap_pipeline.front_device_fn``."""
+    import jax
+    import jax.numpy as jnp
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    from repro.distributed.shardmap_pipeline import (FrontConfig,
+                                                     halo_gradient)
+
+    n_dev = len(jax.devices())
+    if n_blocks > n_dev:
+        raise ValueError(
+            f"shardmap backend needs {n_blocks} devices, have {n_dev} "
+            "(set XLA_FLAGS=--xla_force_host_platform_device_count=N)")
+    cfg = FrontConfig(grid.dims, n_blocks, gradient_backend=kernel)
+    cfg.nz_local  # eager divisibility check
+    mesh = jax.make_mesh((n_blocks,), ("blocks",))
+
+    def dev_fn(o_slab):  # (nv_local,) int64 ranks of my slab
+        _, rows = halo_gradient(cfg, o_slab)
+        return rows
+
+    fn = shard_map(dev_fn, mesh=mesh, in_specs=P("blocks"),
+                   out_specs=P("blocks"), check_rep=False)
+    o = jnp.asarray(np.asarray(order).reshape(-1), jnp.int64)
+    status, partner, vstat, vpart = jax.jit(fn)(o)
+    return GR._scatter_results(grid, np.asarray(status), np.asarray(partner),
+                               np.asarray(vstat), np.asarray(vpart))
+
+
+# --------------------------------------------------------------------------
+# registration
+# --------------------------------------------------------------------------
+
+register_backend(Backend(
+    name="np", gradient=_gradient_np,
+    caps=BackendCaps(),
+    description="literal Robins ProcessLowerStars (heapq reference)"))
+
+register_backend(Backend(
+    name="jax", gradient=_make_kernel_gradient("jax"),
+    caps=BackendCaps(jittable=True, batched=True),
+    description="branchless masked-recomputation form, jit-compiled",
+    batched_rows=lambda grid: _rows_fn(grid, "jax")))
+
+register_backend(Backend(
+    name="pallas", gradient=_make_kernel_gradient("pallas"),
+    caps=BackendCaps(jittable=True, batched=True),
+    description="Pallas lower-star kernel (interpret mode on CPU)",
+    batched_rows=lambda grid: _rows_fn(grid, "pallas")))
+
+register_backend(Backend(
+    name="shardmap", gradient=_gradient_shardmap,
+    caps=BackendCaps(jittable=True, sharded=True),
+    description="shard_map z-slab front-end with ppermute halo exchange"))

@@ -1,0 +1,272 @@
+"""Composable DMS/DDMS stages + structured stage reporting.
+
+The paper's pipeline is a fixed chain (Sec. II-F / III):
+
+    order -> gradient -> critical extraction -> D0 -> D_{d-1} -> D1
+
+The *front-end* (order, gradient, extraction) is identical for the
+sequential and the distributed algorithm; only the *back-end* pairing
+engines differ (Union-Find vs the round-synchronous self-correcting
+fixpoint; sequential homologous propagation vs the token-based D1).
+This module expresses each link of the chain as a stage object operating
+on a shared :class:`PipelineState`, so `compute_dms` / `compute_ddms_sim`
+and the `PersistencePipeline` facade all run the *same* code and only
+select engines through the config.
+
+Timings and algorithm counters land in a :class:`StageReport` — a
+nestable, machine-readable record replacing the ad-hoc ``stats`` dicts
+the two drivers used to hand-roll.  ``StageReport.flat()`` reproduces
+the legacy flat key space (``order``, ``gradient``, ``d1_rounds``, ...)
+so existing consumers keep working.
+"""
+
+from __future__ import annotations
+
+import time
+from contextlib import contextmanager
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.core.critical import CriticalInfo, extract_critical
+from repro.core.diagram import Diagram
+from repro.core.dms import _as_pairs
+from repro.core.extremum_graph import build_d0_graph, build_dual_graph
+from repro.core.gradient import GradientField
+from repro.core.grid import Grid, vertex_order
+from repro.core.pairing import pair_extrema_saddles
+from repro.core.saddle_saddle import pair_saddle_saddle_seq
+
+
+# --------------------------------------------------------------------------
+# StageReport
+# --------------------------------------------------------------------------
+
+@dataclass
+class StageReport:
+    """Structured per-stage record: wall time, counters, nested children."""
+
+    name: str
+    seconds: float = 0.0
+    counters: Dict[str, float] = field(default_factory=dict)
+    children: List["StageReport"] = field(default_factory=list)
+
+    def child(self, name: str) -> "StageReport":
+        r = StageReport(name)
+        self.children.append(r)
+        return r
+
+    @contextmanager
+    def stage(self, name: str):
+        """Open (and time) a child stage."""
+        r = self.child(name)
+        t0 = time.perf_counter()
+        try:
+            yield r
+        finally:
+            r.seconds += time.perf_counter() - t0
+
+    def count(self, **counters) -> None:
+        for k, v in counters.items():
+            self.counters[k] = self.counters.get(k, 0) + v
+
+    @property
+    def total_seconds(self) -> float:
+        return self.seconds if self.seconds else \
+            sum(c.total_seconds for c in self.children)
+
+    def flat(self) -> Dict[str, float]:
+        """Legacy flat stats dict: stage names -> seconds (nested names are
+        dot-joined), all counters merged at top level under their own keys."""
+        out: Dict[str, float] = {}
+
+        def visit(r: "StageReport", prefix: str) -> None:
+            for c in r.children:
+                out[prefix + c.name] = c.seconds
+                visit(c, prefix + c.name + ".")
+            out.update(r.counters)
+
+        visit(self, "")
+        return out
+
+    def to_dict(self) -> dict:
+        """Nested machine-readable form (BENCH_pipeline.json)."""
+        return {"name": self.name, "seconds": self.seconds,
+                "counters": dict(self.counters),
+                "children": [c.to_dict() for c in self.children]}
+
+
+# --------------------------------------------------------------------------
+# Pipeline state
+# --------------------------------------------------------------------------
+
+@dataclass
+class PipelineState:
+    """Everything a stage may read or produce, threaded through the chain."""
+
+    grid: Grid
+    f: np.ndarray
+    order: Optional[np.ndarray] = None
+    gf: Optional[GradientField] = None
+    ci: Optional[CriticalInfo] = None
+    pairs: Dict[int, np.ndarray] = field(default_factory=dict)
+    essential: Dict[int, np.ndarray] = field(default_factory=dict)
+    # inter-stage sets: saddles consumed by D0 / the dual diagram
+    d0_saddles: set = field(default_factory=set)
+    dual_saddles: Optional[np.ndarray] = None
+    dual_paired_saddles: set = field(default_factory=set)
+
+    def diagram(self) -> Diagram:
+        return Diagram(self.grid, self.order, self.pairs, self.essential)
+
+
+# --------------------------------------------------------------------------
+# Front-end stages (shared by DMS and DDMS)
+# --------------------------------------------------------------------------
+
+class OrderStage:
+    """Global injective vertex order (Array Preconditioning, Sec. III)."""
+
+    name = "order"
+
+    def run(self, state: PipelineState, cfg, rep: StageReport) -> None:
+        state.f = np.asarray(state.f).reshape(-1)
+        state.order = np.asarray(vertex_order(state.f))
+
+
+class GradientStage:
+    """Discrete gradient via the configured backend (registry dispatch)."""
+
+    name = "gradient"
+
+    def run(self, state: PipelineState, cfg, rep: StageReport) -> None:
+        state.gf = cfg.backend.gradient(state.grid, state.order,
+                                        n_blocks=cfg.n_blocks)
+        rep.count(n_critical=sum(state.gf.n_critical().values()))
+
+
+class CriticalStage:
+    """Critical extraction + per-dimension rank sort."""
+
+    name = "extract_sort"
+
+    def run(self, state: PipelineState, cfg, rep: StageReport) -> None:
+        state.ci = extract_critical(state.grid, state.gf, state.order)
+
+
+# --------------------------------------------------------------------------
+# Back-end stages (engine selected by the config)
+# --------------------------------------------------------------------------
+
+def _pair_graph(g, cfg, rep: StageReport, prefix: str):
+    """Run the configured extremum-saddle pairing engine on a graph."""
+    if cfg.distributed:
+        from repro.distributed.pairing_rounds import pairing_fixpoint
+        p, st = pairing_fixpoint(g, collect_stats=True)
+        rep.count(**{prefix + "_rounds": st.rounds})
+        if prefix == "d0":
+            rep.count(d0_corrections=st.corrections)
+        return p
+    return pair_extrema_saddles(g)
+
+
+class D0Stage:
+    """D0 on the primal extremum graph (minimum-saddle pairs)."""
+
+    name = "d0"
+
+    def run(self, state: PipelineState, cfg, rep: StageReport) -> None:
+        grid, ci = state.grid, state.ci
+        if grid.dim >= 1:
+            g0 = build_d0_graph(grid, state.gf, ci)
+            p0 = _pair_graph(g0, cfg, rep, "d0")
+            state.pairs[0] = _as_pairs([(e, s) for (s, e) in p0.pairs])
+            paired_v = {e for _, e in p0.pairs}
+            state.essential[0] = np.asarray(
+                sorted(set(map(int, ci.crit_sids[0])) - paired_v),
+                dtype=np.int64)
+            state.d0_saddles = {s for s, _ in p0.pairs}
+        else:
+            state.pairs[0] = _as_pairs([])
+            state.essential[0] = np.asarray(
+                [int(x) for x in ci.crit_sids[0]], dtype=np.int64)
+
+
+class DualStage:
+    """D_{d-1} on the dual graph (saddle-maximum pairs) + essential[d]."""
+
+    name = "d_top"
+
+    def run(self, state: PipelineState, cfg, rep: StageReport) -> None:
+        grid, ci = state.grid, state.ci
+        d = grid.dim
+        if d >= 2:
+            if d == 2:
+                state.dual_saddles = np.asarray(
+                    [int(e) for e in ci.crit_sids[1]
+                     if int(e) not in state.d0_saddles], dtype=np.int64)
+            else:
+                state.dual_saddles = ci.crit_sids[d - 1]
+            gD = build_dual_graph(grid, state.gf, ci, state.dual_saddles)
+            pD = _pair_graph(gD, cfg, rep, "d_top")
+            state.pairs[d - 1] = _as_pairs(pD.pairs)
+            state.essential[d] = np.asarray(
+                sorted(set(map(int, ci.crit_sids[d]))
+                       - {e for _, e in pD.pairs}), dtype=np.int64)
+            state.dual_paired_saddles = {s for s, _ in pD.pairs}
+        elif d == 1:
+            state.essential[1] = np.asarray(
+                sorted(set(map(int, ci.crit_sids[1])) - state.d0_saddles),
+                dtype=np.int64)
+
+
+class D1Stage:
+    """D1 by homologous propagation on the unpaired leftovers (3-D)."""
+
+    name = "d1"
+
+    def run(self, state: PipelineState, cfg, rep: StageReport) -> None:
+        grid, ci = state.grid, state.ci
+        d = grid.dim
+        if d == 3:
+            c1 = np.asarray(
+                [int(e) for e in ci.crit_sids[1]
+                 if int(e) not in state.d0_saddles], dtype=np.int64)
+            c2 = np.asarray(
+                [int(s) for s in ci.crit_sids[2]
+                 if int(s) not in state.dual_paired_saddles], dtype=np.int64)
+            if cfg.distributed:
+                from repro.distributed.d1_rounds import d1_distributed
+                ss, st1 = d1_distributed(
+                    grid, state.gf, ci, c1, c2, cfg.n_blocks,
+                    anticipation=cfg.anticipation, budget=cfg.budget)
+                rep.count(d1_rounds=st1.rounds, d1_token_hops=st1.token_hops,
+                          d1_expansions=st1.expansions, d1_merges=st1.merges,
+                          d1_steals=st1.steals)
+            else:
+                ss = pair_saddle_saddle_seq(grid, state.gf, ci, c1, c2)
+                rep.count(d1_expansions=ss.expansions)
+            state.pairs[1] = _as_pairs(ss.pairs)
+            state.essential[1] = np.asarray(ss.unpaired_edges,
+                                            dtype=np.int64)
+            state.essential[2] = np.asarray(ss.unpaired_triangles,
+                                            dtype=np.int64)
+        elif d == 2:
+            state.essential[1] = np.asarray(
+                sorted({int(s) for s in state.dual_saddles}
+                       - state.dual_paired_saddles), dtype=np.int64)
+
+
+FRONT_STAGES = (OrderStage(), GradientStage(), CriticalStage())
+BACK_STAGES = (D0Stage(), DualStage(), D1Stage())
+ALL_STAGES = FRONT_STAGES + BACK_STAGES
+
+
+def run_stages(state: PipelineState, cfg, report: StageReport,
+               stages=ALL_STAGES) -> PipelineState:
+    """Run a stage chain over ``state``, timing each into ``report``."""
+    for st in stages:
+        with report.stage(st.name) as rep:
+            st.run(state, cfg, rep)
+    return state

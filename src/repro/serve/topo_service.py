@@ -1,0 +1,181 @@
+"""Request-batching persistence-diagram service — the diagram analogue of
+``serve/engine.py``.
+
+``TopoService`` accepts concurrent scalar-field requests, coalesces them
+into shape-homogeneous batches, and answers each batch with ONE
+``PersistencePipeline.diagrams`` call, so the compiled front-end program
+and the stencil-gather pre-pass are amortized across requests (the
+backend's ``batched`` capability).  A single worker thread drains the
+queue; callers get ``concurrent.futures.Future``s.
+
+    with TopoService(backend="jax", max_batch=8) as svc:
+        futs = [svc.submit(f) for f in fields]
+        results = [ft.result() for ft in futs]
+    # or, synchronously:
+    results = svc.map(fields)
+
+This is deliberately dependency-free (queue + thread): the seam where a
+real RPC front (async collectives, multi-host dispatch, result caching)
+plugs in later.
+"""
+
+from __future__ import annotations
+
+import queue
+import threading
+import time
+from concurrent.futures import Future
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.core.grid import Grid
+from repro.pipeline import PersistencePipeline, PipelineResult
+
+
+@dataclass
+class ServiceStats:
+    """Aggregate serving counters (inspectable while running)."""
+
+    requests: int = 0
+    batches: int = 0
+    batched_requests: int = 0        # requests answered in a batch of > 1
+    max_batch: int = 0
+    errors: int = 0
+
+    def as_dict(self) -> Dict[str, int]:
+        return dict(requests=self.requests, batches=self.batches,
+                    batched_requests=self.batched_requests,
+                    max_batch=self.max_batch, errors=self.errors)
+
+
+@dataclass
+class _Request:
+    f: np.ndarray
+    grid: Optional[Grid]
+    future: Future = field(default_factory=Future)
+
+    @property
+    def shape_key(self):
+        dims = self.grid.dims if self.grid is not None else None
+        return (self.f.shape, dims)
+
+
+class TopoService:
+    """Batched diagram serving on top of a :class:`PersistencePipeline`.
+
+    Parameters
+    ----------
+    pipeline : an existing pipeline, or None to build one from
+        ``pipeline_kw`` (e.g. ``backend="jax"``, ``n_blocks=4``).
+    max_batch : max requests coalesced into one ``diagrams`` call.
+    max_wait_s : how long the worker waits to grow a batch once it holds
+        at least one request (latency/throughput knob).
+    """
+
+    def __init__(self, pipeline: Optional[PersistencePipeline] = None, *,
+                 max_batch: int = 8, max_wait_s: float = 0.002,
+                 **pipeline_kw):
+        if max_batch < 1:
+            raise ValueError(f"max_batch must be >= 1, got {max_batch}")
+        self.pipeline = pipeline or PersistencePipeline(**pipeline_kw)
+        self.max_batch = max_batch
+        self.max_wait_s = max_wait_s
+        self.stats = ServiceStats()
+        self._queue: "queue.Queue[Optional[_Request]]" = queue.Queue()
+        self._closed = False
+        self._lock = threading.Lock()  # orders submits vs the close sentinel
+        self._worker = threading.Thread(target=self._run, daemon=True,
+                                        name="topo-service")
+        self._worker.start()
+
+    # -- client API --------------------------------------------------------
+
+    def submit(self, f, grid: Optional[Grid] = None) -> Future:
+        """Enqueue one field; the Future resolves to a PipelineResult."""
+        req = _Request(np.asarray(f), grid)
+        with self._lock:
+            if self._closed:
+                raise RuntimeError("TopoService is closed")
+            self._queue.put(req)
+        return req.future
+
+    def diagram(self, f, grid: Optional[Grid] = None) -> PipelineResult:
+        """Synchronous single request."""
+        return self.submit(f, grid).result()
+
+    def map(self, fields: Sequence, grid: Optional[Grid] = None
+            ) -> List[PipelineResult]:
+        """Submit a burst of fields, gather results in order."""
+        futs = [self.submit(f, grid) for f in fields]
+        return [ft.result() for ft in futs]
+
+    def close(self) -> None:
+        with self._lock:
+            if self._closed:
+                return
+            self._closed = True
+            self._queue.put(None)  # under the lock: nothing lands after it
+        self._worker.join()
+
+    def __enter__(self) -> "TopoService":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    # -- worker ------------------------------------------------------------
+
+    def _collect(self) -> List[Optional[_Request]]:
+        """Block for one request, then grow the batch until ``max_wait_s``
+        has elapsed since the first arrival (or the batch is full)."""
+        first = self._queue.get()
+        batch = [first]
+        if first is None:
+            return batch
+        deadline = time.monotonic() + self.max_wait_s
+        while len(batch) < self.max_batch:
+            remaining = deadline - time.monotonic()
+            if remaining <= 0:
+                break
+            try:
+                nxt = self._queue.get(timeout=remaining)
+            except queue.Empty:
+                break
+            batch.append(nxt)
+            if nxt is None:
+                break
+        return batch
+
+    def _run(self) -> None:
+        while True:
+            batch = self._collect()
+            stop = batch[-1] is None
+            reqs = [r for r in batch if r is not None]
+            if reqs:
+                self._serve(reqs)
+            if stop:
+                return
+
+    def _serve(self, reqs: List[_Request]) -> None:
+        self.stats.requests += len(reqs)
+        # group shape-homogeneous runs so diagrams() sees one shape
+        groups: Dict[object, List[_Request]] = {}
+        for r in reqs:
+            groups.setdefault(r.shape_key, []).append(r)
+        for group in groups.values():
+            self.stats.batches += 1
+            self.stats.max_batch = max(self.stats.max_batch, len(group))
+            if len(group) > 1:
+                self.stats.batched_requests += len(group)
+            try:
+                results = self.pipeline.diagrams(
+                    [r.f for r in group], grid=group[0].grid)
+            except Exception as e:  # pragma: no cover - error propagation
+                self.stats.errors += len(group)
+                for r in group:
+                    r.future.set_exception(e)
+                continue
+            for r, res in zip(group, results):
+                r.future.set_result(res)

@@ -77,7 +77,9 @@ def spec_for_param(pm: PM, rules: ShardingRules, mesh: Mesh,
                 or not _axis_ok(mesh, m, dim):
             out.append(None)
         else:
-            out.append(m if isinstance(m, str) else tuple(m))
+            # unwrap singleton axis tuples: P("data") == P(("data",)) for
+            # GSPMD, but the bare name is the canonical spelling
+            out.append(names[0] if len(names) == 1 else tuple(names))
             taken.update(names)
     while out and out[-1] is None:
         out.pop()

@@ -1,0 +1,11 @@
+"""Put ``src/`` on sys.path so ``python -m pytest`` works from the repo
+root without the manual ``PYTHONPATH=src`` incantation (mirrors the
+``pythonpath`` ini option in pyproject.toml for environments where that
+option is unavailable)."""
+
+import os
+import sys
+
+_SRC = os.path.join(os.path.dirname(os.path.dirname(__file__)), "src")
+if _SRC not in sys.path:
+    sys.path.insert(0, _SRC)

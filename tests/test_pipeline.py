@@ -1,0 +1,245 @@
+"""Pipeline subsystem tests: backend registry, backend/block parity,
+batched diagrams, StageReport structure, the TopoService batcher, and
+config validation."""
+
+import numpy as np
+import pytest
+
+from repro.core.ddms import compute_ddms_sim
+from repro.core.diagram import diff_report, same_offdiagonal
+from repro.core.dms import DMSResult, compute_dms
+from repro.core.grid import Grid
+from repro.pipeline import (Backend, BackendCaps, PersistencePipeline,
+                            StageReport, UnknownBackendError,
+                            available_backends, get_backend,
+                            register_backend)
+
+
+DIMS = (4, 4, 8)
+
+
+def _field(seed=0, dims=DIMS):
+    g = Grid.of(*dims)
+    rng = np.random.default_rng(seed)
+    return g, rng.standard_normal(g.nv)
+
+
+def _assert_same(a, b, names=("A", "B")):
+    assert same_offdiagonal(a, b), diff_report(a, b, names)
+    for p in range(a.grid.dim + 1):
+        assert np.array_equal(a.essential_orders(p), b.essential_orders(p))
+
+
+# --------------------------------------------------------------------------
+# registry
+# --------------------------------------------------------------------------
+
+def test_registry_contents():
+    names = set(available_backends())
+    assert {"np", "jax", "pallas", "shardmap"} <= names
+    assert get_backend("jax").caps.jittable
+    assert get_backend("jax").caps.batched
+    assert get_backend("shardmap").caps.sharded
+    assert not get_backend("np").caps.jittable
+
+
+def test_registry_unknown_backend():
+    with pytest.raises(UnknownBackendError, match="unknown backend 'nope'"):
+        get_backend("nope")
+    with pytest.raises(UnknownBackendError, match="registered backends"):
+        PersistencePipeline(backend="nope")
+
+
+def test_registry_no_silent_overwrite():
+    be = get_backend("np")
+    with pytest.raises(ValueError, match="already registered"):
+        register_backend(Backend(name="np", gradient=be.gradient))
+    # explicit overwrite + restore works (the extension point)
+    register_backend(Backend(name="np", gradient=be.gradient,
+                             caps=BackendCaps()), overwrite=True)
+    register_backend(be, overwrite=True)
+
+
+# --------------------------------------------------------------------------
+# backend / block-count parity (the paper's correctness contract)
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", ["np", "jax", "pallas", "shardmap"])
+@pytest.mark.parametrize("n_blocks", [1, 2, 4])
+def test_backend_parity(backend, n_blocks):
+    import jax
+    if backend == "shardmap" and n_blocks > len(jax.devices()):
+        pytest.skip("not enough devices for the shardmap backend")
+    g, f = _field(seed=3)
+    ref = compute_dms(g, f)  # np reference, sequential engine
+    res = PersistencePipeline(backend=backend, n_blocks=n_blocks,
+                              distributed=n_blocks > 1).diagram(f, grid=g)
+    _assert_same(ref.diagram, res.diagram, ("ref", backend))
+
+
+def test_distributed_engine_single_block_parity():
+    g, f = _field(seed=4)
+    ref = compute_dms(g, f)
+    res = PersistencePipeline(backend="np", n_blocks=1,
+                              distributed=True).diagram(f, grid=g)
+    _assert_same(ref.diagram, res.diagram)
+    assert res.stats["n_blocks"] == 1
+    assert "d0_rounds" in res.stats
+
+
+def test_wrappers_are_pipeline_views():
+    """compute_dms / compute_ddms_sim == the facade, stats keys intact."""
+    g, f = _field(seed=5)
+    a = compute_dms(g, f, gradient_backend="jax")
+    b = PersistencePipeline(backend="jax", distributed=False).diagram(
+        f, grid=g)
+    _assert_same(a.diagram, b.diagram)
+    assert isinstance(a, DMSResult)
+    for k in ("order", "gradient", "extract_sort", "d0", "d_top", "d1",
+              "n_critical", "d1_expansions"):
+        assert k in a.stats, k
+    c = compute_ddms_sim(g, f, n_blocks=4)
+    _assert_same(a.diagram, c.diagram)
+    for k in ("n_blocks", "d0_rounds", "d0_corrections", "d1_rounds",
+              "d1_token_hops"):
+        assert k in c.stats, k
+
+
+def test_grid_inference_from_shaped_field():
+    g, f = _field(seed=6)
+    nx, ny, nz = g.dims
+    shaped = f.reshape(nz, ny, nx)  # numpy [z, y, x] layout
+    a = PersistencePipeline(backend="np").diagram(shaped)
+    _assert_same(compute_dms(g, f).diagram, a.diagram)
+    with pytest.raises(ValueError, match="cannot infer the grid"):
+        PersistencePipeline(backend="np").diagram(f)
+
+
+# --------------------------------------------------------------------------
+# batched diagrams
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", ["np", "jax", "pallas"])
+def test_batched_diagrams_match_per_field(backend):
+    g = Grid.of(*DIMS)
+    rng = np.random.default_rng(7)
+    fields = [rng.standard_normal(g.nv) for _ in range(3)]
+    pipe = PersistencePipeline(backend=backend)
+    batch = pipe.diagrams(fields, grid=g)
+    assert len(batch) == 3
+    for f, res in zip(fields, batch):
+        single = pipe.diagram(f, grid=g)
+        _assert_same(single.diagram, res.diagram, ("single", "batched"))
+
+
+def test_batched_program_cache_reused():
+    g = Grid.of(*DIMS)
+    rng = np.random.default_rng(8)
+    pipe = PersistencePipeline(backend="jax")
+    pipe.diagrams([rng.standard_normal(g.nv) for _ in range(2)], grid=g)
+    key = (g.dims, "jax", 1)
+    assert key in pipe._programs
+    prog = pipe._programs[key]
+    pipe.diagrams([rng.standard_normal(g.nv) for _ in range(3)], grid=g)
+    assert pipe._programs[key] is prog  # same compiled program object
+
+
+def test_batched_rejects_mixed_shapes():
+    g = Grid.of(*DIMS)
+    rng = np.random.default_rng(9)
+    pipe = PersistencePipeline(backend="jax")
+    with pytest.raises(ValueError, match="same-shape"):
+        pipe.diagrams([rng.standard_normal(g.nv),
+                       rng.standard_normal(g.nv // 2)], grid=g)
+
+
+def test_batched_empty_and_singleton():
+    g, f = _field(seed=10)
+    pipe = PersistencePipeline(backend="jax")
+    assert pipe.diagrams([], grid=g) == []
+    [res] = pipe.diagrams([f], grid=g)
+    _assert_same(compute_dms(g, f).diagram, res.diagram)
+
+
+# --------------------------------------------------------------------------
+# StageReport
+# --------------------------------------------------------------------------
+
+def test_stage_report_structure():
+    g, f = _field(seed=11)
+    res = PersistencePipeline(backend="np", n_blocks=2,
+                              distributed=True).diagram(f, grid=g)
+    rep = res.report
+    assert isinstance(rep, StageReport)
+    assert [c.name for c in rep.children] == \
+        ["order", "gradient", "extract_sort", "d0", "d_top", "d1"]
+    assert all(c.seconds >= 0 for c in rep.children)
+    assert rep.total_seconds > 0
+    d = rep.to_dict()
+    assert d["name"] == "pipeline" and len(d["children"]) == 6
+    flat = rep.flat()
+    assert flat["n_blocks"] == 2
+    assert flat["d0_rounds"] >= 1
+    # nesting: a child-of-child gets a dot-joined flat key
+    sub = rep.children[0].child("inner")
+    sub.seconds = 1.0
+    assert rep.flat()["order.inner"] == 1.0
+
+
+# --------------------------------------------------------------------------
+# TopoService (request batching)
+# --------------------------------------------------------------------------
+
+def test_topo_service_matches_pipeline():
+    from repro.serve import TopoService
+    g = Grid.of(4, 4, 6)
+    rng = np.random.default_rng(12)
+    fields = [rng.standard_normal(g.nv) for _ in range(6)]
+    refs = [compute_dms(g, f).diagram for f in fields]
+    with TopoService(backend="jax", max_batch=4, max_wait_s=0.05) as svc:
+        out = svc.map(fields, grid=g)
+        st = svc.stats.as_dict()
+    for ref, res in zip(refs, out):
+        _assert_same(ref, res.diagram, ("pipeline", "service"))
+    assert st["requests"] == 6
+    assert st["batches"] < 6          # coalescing actually happened
+    assert st["max_batch"] >= 2
+    assert st["errors"] == 0
+
+
+def test_topo_service_single_and_close():
+    from repro.serve import TopoService
+    g, f = _field(seed=13)
+    svc = TopoService(backend="np", max_batch=2)
+    res = svc.diagram(f, grid=g)
+    _assert_same(compute_dms(g, f).diagram, res.diagram)
+    svc.close()
+    with pytest.raises(RuntimeError, match="closed"):
+        svc.submit(f, grid=g)
+
+
+def test_topo_service_error_propagates():
+    from repro.serve import TopoService
+    with TopoService(backend="np", max_batch=2) as svc:
+        fut = svc.submit(np.zeros(10))  # flat field, no grid -> ValueError
+        with pytest.raises(ValueError, match="cannot infer"):
+            fut.result(timeout=30)
+
+
+# --------------------------------------------------------------------------
+# config validation
+# --------------------------------------------------------------------------
+
+def test_pipeline_config_validation():
+    with pytest.raises(ValueError, match="n_blocks"):
+        PersistencePipeline(backend="np", n_blocks=0)
+
+
+def test_front_config_indivisible_nz_raises():
+    from repro.distributed.shardmap_pipeline import FrontConfig
+    cfg = FrontConfig((4, 4, 10), n_blocks=3)
+    with pytest.raises(ValueError, match="nz=10.*n_blocks=3"):
+        _ = cfg.nz_local
+    with pytest.raises(ValueError, match="n_blocks must be >= 1"):
+        _ = FrontConfig((4, 4, 10), n_blocks=0).nz_local
+    assert FrontConfig((4, 4, 10), n_blocks=2).nz_local == 5

@@ -1,7 +1,11 @@
 """Property-based tests (hypothesis) on the system's core invariants."""
 
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="optional dependency 'hypothesis' not installed")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core.diagram import diff_report, same_offdiagonal
 from repro.core.dms import compute_dms, oracle_to_diagram
