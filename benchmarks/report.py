@@ -1,18 +1,24 @@
 """Render EXPERIMENTS.md §Dry-run / §Roofline tables from results/dryrun,
-and emit the machine-readable pipeline benchmark (BENCH_pipeline.json).
+and emit the machine-readable benchmarks (BENCH_pipeline.json,
+BENCH_gradient.json).
 
     PYTHONPATH=src python -m benchmarks.report [--dir results/dryrun]
     PYTHONPATH=src python -m benchmarks.report --section pipeline \
         [--out BENCH_pipeline.json]
+    PYTHONPATH=src python -m benchmarks.report --section gradient \
+        [--quick] [--out BENCH_gradient.json]
 
 The pipeline section runs ``PersistencePipeline`` over a fixed field set
 and dumps every ``StageReport`` (nested per-stage wall times + algorithm
-counters) so the perf trajectory is tracked PR-over-PR.
+counters).  The gradient section A/B-times the front-end paths (im2col
+pre-pass vs fused gather) with vertices/s and the modeled HBM
+bytes/vertex, so the perf trajectory is tracked PR-over-PR.
 """
 
 import argparse
 import json
 import platform
+import time
 from pathlib import Path
 
 
@@ -146,16 +152,128 @@ def pipeline_bench(out_path, dims=(8, 8, 8), fields=("wavelet", "random"),
               + " ".join(f"{k}={v*1e3:.1f}" for k, v in stages.items()))
 
 
+def gradient_bench(out_path, quick=False):
+    """A/B the gradient front-end paths; write BENCH_gradient.json.
+
+    Runs, per grid size, the fused jit program ("jax"), a pre-pass-style
+    jnp path (eager int64 im2col gather + column keys — the before-PR
+    formulation), and the two Pallas kernels (fused vs im2col pre-pass)
+    in interpret mode on a small grid.  Pre-pass and fused rows are
+    cross-checked bit-exact before timing.
+    """
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core import gradient as GRAD
+    from repro.core.grid import Grid, vertex_order
+    from repro.fields import make_field
+    from repro.kernels import ops, ref as REF
+    from repro.kernels.ops import gradient_hbm_model
+
+    # the pre-pass-style jnp reference: eager gather, no rank narrowing
+    prepass_jit = jax.jit(
+        lambda nbrs, ov: REF.lower_star_gradient_jnp(nbrs, ov))
+
+    def prepass_style(g, o):
+        nbrs = GRAD.neighbor_orders(g, jnp.asarray(o), xp=jnp)
+        return prepass_jit(nbrs, o)
+
+    def timed(fn, reps):
+        fn()  # compile
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            out = fn()
+        return (time.perf_counter() - t0) / reps, out
+
+    sizes = [(8, 8, 8)] if quick else [(16, 16, 16), (32, 32, 32)]
+    pallas_dims = (6, 6, 6) if quick else (16, 16, 8)
+    runs = []
+
+    for dims in sizes:
+        g = Grid.of(*dims)
+        f = make_field("random", dims, seed=6)
+        o = jnp.asarray(np.asarray(vertex_order(f.astype(np.float64))))
+        # the prepass comparator above gathers eagerly in int64 (the
+        # pre-PR formulation), so model its traffic at 8 B/rank
+        model = gradient_hbm_model(dims)
+        model["prepass"] = gradient_hbm_model(dims,
+                                              rank_bytes=8)["prepass"]
+        reps = 2 if quick else 3
+        s_pre, rows_pre = timed(
+            lambda: jax.block_until_ready(prepass_style(g, o)), reps)
+        s_fus, rows_fus = timed(
+            lambda: jax.block_until_ready(
+                ops.lower_star_gradient(g, o, backend="jax")), reps)
+        for a, b in zip(rows_pre, rows_fus):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        runs.append({"dims": list(dims), "backend": "jax",
+                     "paths": {
+                         "prepass": {"seconds": s_pre,
+                                     "vertices_per_s": g.nv / s_pre,
+                                     "model_bytes_per_vertex":
+                                         model["prepass"]},
+                         "fused": {"seconds": s_fus,
+                                   "vertices_per_s": g.nv / s_fus,
+                                   "model_bytes_per_vertex":
+                                       model["fused"]}},
+                     "speedup": s_pre / s_fus})
+
+    g = Grid.of(*pallas_dims)
+    f = make_field("random", pallas_dims, seed=6)
+    o = jnp.asarray(np.asarray(vertex_order(f.astype(np.float64))))
+    model = gradient_hbm_model(pallas_dims)
+    s_pre, rows_pre = timed(lambda: jax.block_until_ready(
+        ops.lower_star_gradient(g, o, backend="pallas_prepass")), 1)
+    s_fus, rows_fus = timed(lambda: jax.block_until_ready(
+        ops.lower_star_gradient(g, o, backend="pallas")), 1)
+    for a, b in zip(rows_pre, rows_fus):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    runs.append({"dims": list(pallas_dims), "backend": "pallas",
+                 "interpret_mode": True,
+                 "paths": {
+                     "prepass": {"seconds": s_pre,
+                                 "vertices_per_s": g.nv / s_pre,
+                                 "model_bytes_per_vertex":
+                                     model["prepass"]},
+                     "fused": {"seconds": s_fus,
+                               "vertices_per_s": g.nv / s_fus,
+                               "model_bytes_per_vertex": model["fused"]}},
+                 "speedup": s_pre / s_fus})
+
+    doc = {"schema": "ddms-gradient-bench/v1",
+           "platform": platform.platform(),
+           "python": platform.python_version(),
+           "quick": bool(quick),
+           "runs": runs}
+    Path(out_path).write_text(json.dumps(doc, indent=1))
+    print(f"wrote {out_path}: {len(runs)} runs")
+    for r in runs:
+        p = r["paths"]
+        print(f"  {r['backend']}/{'x'.join(map(str, r['dims']))}: "
+              f"prepass={p['prepass']['vertices_per_s']:.0f}v/s "
+              f"fused={p['fused']['vertices_per_s']:.0f}v/s "
+              f"speedup={r['speedup']:.2f}x "
+              f"bytes/v {p['prepass']['model_bytes_per_vertex']:.0f}->"
+              f"{p['fused']['model_bytes_per_vertex']:.1f}")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--dir", default="results/dryrun")
     ap.add_argument("--section", default="all",
-                    choices=["all", "roofline", "dryrun", "pipeline"])
-    ap.add_argument("--out", default="BENCH_pipeline.json",
-                    help="output path for --section pipeline")
+                    choices=["all", "roofline", "dryrun", "pipeline",
+                             "gradient"])
+    ap.add_argument("--out", default=None,
+                    help="output path for --section pipeline/gradient")
+    ap.add_argument("--quick", action="store_true",
+                    help="small sizes for CI smoke (gradient section)")
     args = ap.parse_args()
     if args.section == "pipeline":
-        pipeline_bench(args.out)
+        pipeline_bench(args.out or "BENCH_pipeline.json")
+        return
+    if args.section == "gradient":
+        gradient_bench(args.out or "BENCH_gradient.json", quick=args.quick)
         return
     recs = load(args.dir)
     if args.section in ("all", "dryrun"):

@@ -36,6 +36,7 @@ a Pallas kernel wants (see ``repro.kernels.lower_star``).
 
 from __future__ import annotations
 
+import functools
 import heapq
 from dataclasses import dataclass
 from typing import Dict, List, Optional, Tuple
@@ -281,60 +282,112 @@ class GradientField:
         return {k: int(self.crit[k].sum()) for k in self.crit}
 
 
-def _scatter_results(grid: Grid, status: np.ndarray, partner: np.ndarray,
-                     vstatus: np.ndarray, vpartner: np.ndarray) -> GradientField:
-    """Turn per-vertex packed rows (nv, 74) into dense per-dim arrays."""
+@functools.lru_cache(maxsize=64)
+def row_sid_offsets(grid: Grid) -> Dict[int, np.ndarray]:
+    """Per-grid row -> sid linear offset tables.
+
+    The sid of packed star row ``r`` (dim k) at vertex ``v`` is an affine
+    function of v:  ``sid = v * NTYPES[k] + off[k][r_local]`` where
+    ``off[k][r] = row_type[r] - lin(row_shift[r]) * NTYPES[k]`` and ``lin``
+    is the vid linearization.  One tiny (S_k,) table per dimension turns
+    the whole result scatter into flat index arithmetic — no per-row
+    coordinate decomposition, no Python loop over vertices or batches.
+    """
+    nx, ny, _ = grid.dims
+    out: Dict[int, np.ndarray] = {}
+    for k in (1, 2, 3):
+        rows = slice(ROW_OFF[k], ROW_OFF[k] + G.NSTAR[k])
+        sh = PACKED["row_shift"][rows].astype(np.int64)
+        t = PACKED["row_type"][rows].astype(np.int64)
+        lin = sh[:, 0] + nx * (sh[:, 1] + ny * sh[:, 2])
+        out[k] = t - lin * G.NTYPES[k]
+    return out
+
+
+def sid_dtype(grid: Grid, k: int):
+    """Smallest signed integer dtype that indexes dim-k sid space."""
+    return np.int32 if grid.sid_space(k) < 2 ** 31 else np.int64
+
+
+def scatter_results_batch(grid: Grid, status: np.ndarray, partner: np.ndarray,
+                          vstatus: np.ndarray, vpartner: np.ndarray,
+                          B: int = 1,
+                          offsets: Optional[Dict[int, np.ndarray]] = None,
+                          ) -> List[GradientField]:
+    """Turn packed rows of B stacked same-grid fields into GradientFields.
+
+    status/partner are (B*nv, 74), vstatus/vpartner (B*nv,).  All dims and
+    all batch elements scatter through flat index arithmetic on the cached
+    row->sid offset tables — the only Python loop is over the <= 3 simplex
+    dimensions.  Pair/crit arrays are int32 whenever the sid space fits
+    (it always does below ~180M vertices), halving gradient-field memory.
+    """
     nv = grid.nv
     d = grid.dim
-    row_type = PACKED["row_type"]
-    row_shift = PACKED["row_shift"]
-    nx, ny, nz = grid.dims
+    off = row_sid_offsets(grid) if offsets is None else offsets
+    N = B * nv
 
-    def row_sid(v: np.ndarray, row: np.ndarray, k: int) -> np.ndarray:
-        x = v % nx
-        y = (v // nx) % ny
-        z = v // (nx * ny)
-        sx = row_shift[row, 0].astype(np.int64)
-        sy = row_shift[row, 1].astype(np.int64)
-        sz = row_shift[row, 2].astype(np.int64)
-        base = (x - sx) + nx * ((y - sy) + ny * (z - sz))
-        return base * G.NTYPES[k] + row_type[row]
-
-    pair_up = {k: np.full(grid.sid_space(k), -1, dtype=np.int64)
+    space = {k: grid.sid_space(k) for k in range(d + 1)}
+    # flat (B, sid_space) planes; per-field views are split at the end.
+    # A pair array for dim k STORES sids of the adjacent dimension, so its
+    # dtype is gated on that dimension's space (e.g. pair_up[1] holds
+    # dim-2 sids spanning 12*nv even though its length is only 7*nv)
+    pair_up = {k: np.full(B * space[k], -1, dtype=sid_dtype(grid, k + 1))
                for k in range(d)}
-    pair_down = {k: np.full(grid.sid_space(k), -1, dtype=np.int64)
+    pair_down = {k: np.full(B * space[k], -1, dtype=sid_dtype(grid, k - 1))
                  for k in range(1, d + 1)}
-    crit = {k: np.zeros(grid.sid_space(k), dtype=bool) for k in range(d + 1)}
+    crit = {k: np.zeros(B * space[k], dtype=bool) for k in range(d + 1)}
 
     crit[0][:] = vstatus == CRIT
+    # vertex-edge pairs: vertex sid space == vid space, so the flat pair_up
+    # destination of vertex i IS i; the edge sid needs only the offset table
     vv = np.nonzero(vstatus == TAIL)[0]
     if len(vv):
-        es = row_sid(vv, vpartner[vv].astype(np.int64), 1)
+        es = (vv % nv) * G.NTYPES[1] + off[1][vpartner[vv]]
         pair_up[0][vv] = es
-        pair_down[1][es] = vv
+        pair_down[1][(vv // nv) * space[1] + es] = vv % nv
 
     for k in range(1, d + 1):
-        off = ROW_OFF[k]
-        rows = np.arange(off, off + G.NSTAR[k])
-        st = status[:, rows]                       # (nv, S_k)
+        st = status[:, ROW_OFF[k]: ROW_OFF[k] + G.NSTAR[k]]   # (N, S_k)
         vs, rs = np.nonzero(st == CRIT)
         if len(vs):
-            crit[k][row_sid(vs, rows[rs], k)] = True
+            sids = (vs % nv) * G.NTYPES[k] + off[k][rs]
+            crit[k][(vs // nv) * space[k] + sids] = True
         # head side: rows with status HEAD know their face partner; every
         # pair has exactly one head, so this covers all vectors of dim >= 1
         vs, rs = np.nonzero(st == HEAD)
         if len(vs):
-            head_sid = row_sid(vs, rows[rs], k)
-            p = partner[vs, rows[rs]].astype(np.int64)
+            p = partner[vs, ROW_OFF[k] + rs].astype(np.int64)
             if k == 1:
                 # partner -2 means paired with the vertex itself (handled
                 # above via vstatus); nothing else is legal for dim-1 heads
                 assert (p == -2).all(), "dim-1 head must pair with vertex"
             else:
-                face_sid = row_sid(vs, p, k - 1)
-                pair_down[k][head_sid] = face_sid
-                pair_up[k - 1][face_sid] = head_sid
-    return GradientField(grid, pair_up, pair_down, crit)
+                head_sid = (vs % nv) * G.NTYPES[k] + off[k][rs]
+                face_sid = ((vs % nv) * G.NTYPES[k - 1]
+                            + off[k - 1][p - ROW_OFF[k - 1]])
+                b = vs // nv
+                pair_down[k][b * space[k] + head_sid] = face_sid
+                pair_up[k - 1][b * space[k - 1] + face_sid] = head_sid
+
+    out = []
+    for b in range(B):
+        out.append(GradientField(
+            grid,
+            {k: pair_up[k][b * space[k]:(b + 1) * space[k]]
+             for k in pair_up},
+            {k: pair_down[k][b * space[k]:(b + 1) * space[k]]
+             for k in pair_down},
+            {k: crit[k][b * space[k]:(b + 1) * space[k]] for k in crit}))
+    return out
+
+
+def _scatter_results(grid: Grid, status: np.ndarray, partner: np.ndarray,
+                     vstatus: np.ndarray, vpartner: np.ndarray) -> GradientField:
+    """Single-field view of :func:`scatter_results_batch`."""
+    [gf] = scatter_results_batch(grid, status, partner,
+                                 np.asarray(vstatus), np.asarray(vpartner))
+    return gf
 
 
 def compute_gradient_np(grid: Grid, order: np.ndarray,

@@ -38,7 +38,8 @@ import numpy as np
 from repro.core import gradient as GR
 from repro.core import grid as G
 from repro.kernels import ref as REF
-from repro.kernels.lower_star import lower_star_gradient_pallas
+from repro.kernels.lower_star import (fused_rows_from_halo_volume,
+                                      lower_star_gradient_pallas)
 from .order import rankfree_keys, sample_sort_ranks
 
 OMEGA = -2
@@ -51,7 +52,7 @@ class FrontConfig:
     axis_name: object = "blocks"      # one name or tuple of names
     crit_cap: int = 4096              # triplet buffer capacity per device
     ring_rotations: int = 3           # resolution ring rotations
-    gradient_backend: str = "jax"     # "jax" | "pallas"
+    gradient_backend: str = "jax"     # "jax" | "fused" | "pallas"
     gradient_chunk: Optional[int] = None  # vertices per chunk (memory knob)
     use_sample_sort: bool = True
     sort_slack: float = 2.0
@@ -209,6 +210,17 @@ def ring_resolve(cfg: FrontConfig, table, ent_per_vertex: int, queries):
 # the per-device program
 # --------------------------------------------------------------------------
 
+def _rank_bound(cfg: FrontConfig) -> Optional[int]:
+    """Static exclusive bound on rank values (None for rank-free keys).
+
+    Dense sample-sort ranks live in [0, nv_global); rank-free keys are
+    full-width int64 and admit no narrowing or key packing."""
+    if not cfg.use_sample_sort:
+        return None
+    nx, ny, nz = cfg.dims
+    return nx * ny * nz
+
+
 def halo_gradient(cfg: FrontConfig, ranks):
     """Halo-exchange the boundary rank planes with the ring neighbors and
     run the lower-star gradient on the local slab (inside shard_map).
@@ -216,6 +228,12 @@ def halo_gradient(cfg: FrontConfig, ranks):
     ranks: (nv_local,) int64 global vertex ranks of my z-slab.
     Returns (nbrs, (status, partner, vstat, vpart)): the (nv_local, 27)
     neighbor-order tensor and the packed gradient rows.
+
+    The one-plane ``ppermute`` exchange produces exactly the z-halo the
+    fused kernel's overlapping BlockSpecs expect, so the ``"fused"``
+    backend consumes the extended volume directly — the (nv, 27) tensor
+    is still built here because the triplet-key extraction downstream
+    reads neighbor orders at the critical simplices.
     """
     nx, ny, _ = cfg.dims
     nzl, plane, nvl = cfg.nz_local, cfg.plane, cfg.nv_local
@@ -232,21 +250,29 @@ def halo_gradient(cfg: FrontConfig, ranks):
     eg = Grid.of(nx, ny, nzl + 2)
     nbrs_ext = GR.neighbor_orders(eg, ext.reshape(-1), xp=jnp)
     nbrs = nbrs_ext.reshape(nzl + 2, plane, 27)[1:-1].reshape(nvl, 27)
-    return nbrs, _gradient_rows(cfg, nbrs, ranks)
+    return nbrs, _gradient_rows(cfg, nbrs, ranks, ext=ext)
 
 
-def _gradient_rows(cfg: FrontConfig, nbrs, ov):
+def _gradient_rows(cfg: FrontConfig, nbrs, ov, ext=None):
+    rb = _rank_bound(cfg)
+    if cfg.gradient_backend == "fused" and ext is not None:
+        return fused_rows_from_halo_volume(ext, interpret=True,
+                                           rank_bound=rb)
+    if rb is not None and rb < 2 ** 31:
+        nbrs = nbrs.astype(jnp.int32)
+        ov = ov.astype(jnp.int32)
     if cfg.gradient_backend == "pallas":
-        return lower_star_gradient_pallas(nbrs, ov, interpret=True)
+        return lower_star_gradient_pallas(nbrs, ov, interpret=True,
+                                          rank_bound=rb)
     if cfg.gradient_chunk is None:
-        return REF.lower_star_gradient_jnp(nbrs, ov)
+        return REF.lower_star_gradient_jnp(nbrs, ov, rank_bound=rb)
     n = nbrs.shape[0]
     c = cfg.gradient_chunk
     npad = -(-n // c) * c
     nb_ = jnp.pad(nbrs, ((0, npad - n), (0, 0)), constant_values=-1)
     op = jnp.pad(ov, (0, npad - n))
     outs = jax.lax.map(
-        lambda ab: REF.lower_star_gradient_jnp(ab[0], ab[1]),
+        lambda ab: REF.lower_star_gradient_jnp(ab[0], ab[1], rank_bound=rb),
         (nb_.reshape(npad // c, c, 27), op.reshape(npad // c, c)))
     return tuple(o.reshape((npad,) + o.shape[2:])[:n] for o in outs)
 

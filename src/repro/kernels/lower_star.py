@@ -1,22 +1,37 @@
-"""Pallas TPU kernel for the lower-star discrete gradient.
+"""Pallas TPU kernels for the lower-star discrete gradient.
 
-TARGET: TPU v5e.  The kernel tiles the vertex axis; each block loads a
-(TILE, 27) neighbor-order window plus the (TILE,) vertex orders into VMEM and
-runs the branchless ProcessLowerStars pairing entirely on-chip:
+TARGET: TPU v5e.  Two kernels share one branchless pairing core
+(:func:`_pair_block`, the ProcessLowerStars masked-recomputation form —
+priority queues become masked lexicographic argmins, scatter-style updates
+become one-hot selects):
 
-- the stencil gather (HBM-bound) happens *outside* as a pre-pass (im2col
-  style), so the kernel's BlockSpec tiling is exact — no halo logic;
-- priority queues become masked lexicographic argmins over the 74-row packed
-  star table (VPU reductions along the row axis);
-- all scatter-style updates are one-hot selects (no dynamic stores), which
-  lowers cleanly to the TPU vector unit.
+1. **Fused halo-aware kernel** (:func:`fused_lower_star_gradient_pallas`) —
+   the production front-end.  The padded 3-D order volume is tiled with
+   *halo-overlapping* BlockSpecs (``pl.Unblocked`` element indexing): the
+   grid is (batch, z-slabs, y-tiles) and each block reads a
+   ``(tile_z+2, tile_y+2, nx+2)`` window (one-vertex halo on every side)
+   straight from HBM, builds its ``(tile_z*tile_y*nx, 27)`` neighbor table
+   *in VMEM* with 27 static shifted slices, and pairs on-chip.  The order
+   field is read ~once (halo overlap adds a few percent) — ~4 B/vertex of
+   HBM traffic on the int32 rank path instead of the 216 B/vertex the
+   materialized int64 im2col pre-pass used to move.  Outputs are int8
+   status/partner (74 packed rows fit int8), another ~4x off the write
+   traffic.  A leading batch grid dimension serves
+   ``PersistencePipeline.diagrams`` batches in a single dispatch.
 
-Working set per block (TILE=256): 256×27×4 B (nbrs) + 256×74×3×4 B (keys)
-+ a few 256×74 masks ≈ 0.4 MB — comfortably inside the 16 MB VMEM with room
-for double buffering.  TILE is a multiple of 128 to align the lane dimension.
+2. **Pre-pass kernel** (:func:`lower_star_gradient_pallas`) — the original
+   im2col-style path kept as a fallback and as the oracle cross-check: the
+   stencil gather happens outside as a ``(n, 27)`` tensor and the kernel
+   tiles the vertex axis only.  Inputs are *bucket-padded* to power-of-two
+   multiples of the tile so distinct lengths within one bucket share a
+   compiled program (see :func:`bucket_len`; probe compile reuse via
+   ``prepass_cache_size``).
 
-Validated in ``interpret=True`` mode on CPU against ``ref.py`` (which is in
-turn validated against the literal priority-queue reference).
+Working set per fused block (tile_z=4, tile_y=8, nx=128): 4 KB window +
+128 KB nbrs + 1.5 MB packed int64 keys + masks — comfortably inside the
+16 MB VMEM with room for double buffering.  Validated in ``interpret=True``
+mode on CPU against ``ref.py`` (which is in turn validated against the
+literal priority-queue reference).
 """
 
 from __future__ import annotations
@@ -38,22 +53,20 @@ NOT_L, AVAIL, TAIL, HEAD, CRIT = (GR.NOT_L, GR.AVAIL, GR.TAIL, GR.HEAD,
                                   GR.CRIT)
 
 
-def _onehot_set(arr, idx, value, active):
-    """arr (n,R); set arr[i, idx[i]] = value where active[i] (no-op else)."""
-    oh = (jnp.arange(arr.shape[-1])[None, :] == idx[:, None]) & active[:, None]
-    return jnp.where(oh, jnp.asarray(value, arr.dtype), arr)
+_onehot_set = REF.onehot_set
 
 
-def _lower_star_kernel(nbrs_ref, ov_ref, oth_ref, fid_ref, status_ref,
-                       partner_ref, vstat_ref, vpart_ref):
-    nbrs = nbrs_ref[...]          # (TILE, 27)
-    ov = ov_ref[...]              # (TILE, 1)
-    ov = ov[:, 0]
+def _pair_block(nbrs, ov, oth, fid, packed: bool):
+    """Branchless ProcessLowerStars over one block of vertices.
+
+    nbrs (n, 27), ov (n,): neighbor/vertex orders (-1 outside the grid).
+    Returns (status (n,R) int8, partner (n,R) int8, vstat (n,) int8,
+    vpart (n,) int32).  ``packed`` selects the single-word int64 key path
+    (valid when ranks < 2**21); both paths are bit-identical.
+    """
     n = nbrs.shape[0]
     idt = nbrs.dtype
     inf = jnp.asarray(np.iinfo(np.dtype(idt.name)).max, idt)
-    oth = oth_ref[...]            # (74, 3) packed star tables (SMEM-sized)
-    fid = fid_ref[...]
 
     vals = jnp.where(oth >= 0, nbrs[:, jnp.maximum(oth, 0)],
                      jnp.asarray(-1, idt))
@@ -61,14 +74,19 @@ def _lower_star_kernel(nbrs_ref, ov_ref, oth_ref, fid_ref, status_ref,
     in_l = (((~real) | (vals >= 0)) & ((~real) | (vals < ov[:, None, None]))
             ).all(-1)
     keys = REF.sort3_desc(vals)
+    if packed:
+        pkeys = REF.pack_key3(keys)
 
-    status = jnp.where(in_l, jnp.int8(AVAIL), jnp.int8(NOT_L))  # (TILE,R)
-    partner = jnp.full((n, R), -1, jnp.int32)
+    def pop(mask):
+        if packed:
+            return REF.lexmin_packed(pkeys, mask)
+        return REF.lexmin(keys, mask, inf), mask.any(-1)
+
+    status = jnp.where(in_l, jnp.int8(AVAIL), jnp.int8(NOT_L))  # (n,R)
+    partner = jnp.full((n, R), -1, jnp.int8)
     rows = jnp.arange(R)
 
-    has_edge = ((status == AVAIL) & (rows[None, :] < EDGE_ROWS)).any(-1)
-    delta = REF.lexmin(keys, (status == AVAIL) & (rows[None, :] < EDGE_ROWS),
-                       inf)
+    delta, has_edge = pop((status == AVAIL) & (rows[None, :] < EDGE_ROWS))
     vstat = jnp.where(has_edge, jnp.int8(TAIL), jnp.int8(CRIT))
     vpart = jnp.where(has_edge, delta, -1).astype(jnp.int32)
     status = _onehot_set(status, delta, HEAD, has_edge)
@@ -81,17 +99,13 @@ def _lower_star_kernel(nbrs_ref, ov_ref, oth_ref, fid_ref, status_ref,
         status, partner, _ = carry
         avail = status == AVAIL
         fa = (fid >= 0) & avail[:, jnp.maximum(fid, 0)]
-        nuf = fa.sum(-1)
-        m1 = avail & (nuf == 1)
-        any1 = m1.any(-1)
-        alpha = REF.lexmin(keys, m1, inf)
+        nuf = fa.sum(-1, dtype=jnp.int8)
+        alpha, any1 = pop(avail & (nuf == 1))
         fa_a = jnp.take_along_axis(fa, alpha[:, None, None], axis=1)[:, 0]
         fid_a = fid[alpha]
         face = jnp.take_along_axis(
             fid_a, jnp.argmax(fa_a, -1)[:, None], axis=-1)[:, 0]
-        m0 = avail & (nuf == 0)
-        any0 = m0.any(-1)
-        gamma = REF.lexmin(keys, m0, inf)
+        gamma, any0 = pop(avail & (nuf == 0))
         do1 = any1
         do0 = (~any1) & any0
         status = _onehot_set(status, alpha, HEAD, do1)
@@ -99,32 +113,62 @@ def _lower_star_kernel(nbrs_ref, ov_ref, oth_ref, fid_ref, status_ref,
         status = _onehot_set(status, gamma, CRIT, do0)
         partner = jnp.where(
             ((rows[None, :] == alpha[:, None]) & do1[:, None]),
-            face[:, None].astype(jnp.int32), partner)
+            face[:, None].astype(jnp.int8), partner)
         partner = jnp.where(
             ((rows[None, :] == face[:, None]) & do1[:, None]),
-            alpha[:, None].astype(jnp.int32), partner)
+            alpha[:, None].astype(jnp.int8), partner)
         done = ~(any1 | any0)
         return status, partner, done
 
     status, partner, _ = jax.lax.while_loop(
         cond, body, (status, partner, jnp.zeros(n, bool)))
+    return status, partner, vstat, vpart
+
+
+# --------------------------------------------------------------------------
+# bucket padding — compile once per (bucket, dtype), not once per length
+# --------------------------------------------------------------------------
+
+def bucket_len(n: int, tile: int) -> int:
+    """Smallest power-of-two multiple of ``tile`` >= n.
+
+    Distinct input lengths that land in one bucket share a compiled
+    program; the padding waste is < 2x and the padded lanes retire after
+    the first loop iteration (everything is NOT_L for an order of -1/0)."""
+    b = tile
+    while b < n:
+        b *= 2
+    return b
+
+
+def _maybe_int32(x, rank_bound):
+    if rank_bound is not None and int(rank_bound) < 2 ** 31:
+        return x.astype(jnp.int32)
+    return x
+
+
+# --------------------------------------------------------------------------
+# pre-pass (im2col) kernel — fallback + oracle cross-check
+# --------------------------------------------------------------------------
+
+def _prepass_kernel(nbrs_ref, ov_ref, oth_ref, fid_ref, status_ref,
+                    partner_ref, vstat_ref, vpart_ref, *, packed: bool):
+    nbrs = nbrs_ref[...]          # (TILE, 27)
+    ov = ov_ref[...][:, 0]        # (TILE,)
+    status, partner, vstat, vpart = _pair_block(
+        nbrs, ov, oth_ref[...], fid_ref[...], packed)
     status_ref[...] = status
     partner_ref[...] = partner
     vstat_ref[...] = vstat[:, None]
     vpart_ref[...] = vpart[:, None]
 
 
-@functools.partial(jax.jit, static_argnames=("tile", "interpret"))
-def lower_star_gradient_pallas(nbrs, ov, tile: int = 256,
-                               interpret: bool = True):
-    """Pallas-tiled lower-star gradient.  nbrs (n,27), ov (n,)."""
-    n = nbrs.shape[0]
-    npad = -(-n // tile) * tile
-    nbrs_p = jnp.pad(nbrs, ((0, npad - n), (0, 0)), constant_values=-1)
-    ov_p = jnp.pad(ov, (0, npad - n))[:, None]
+@functools.partial(jax.jit, static_argnames=("tile", "interpret", "packed"))
+def _prepass_call(nbrs, ov, tile: int, interpret: bool, packed: bool):
+    npad = nbrs.shape[0]          # already a tile multiple (bucket-padded)
     grid_ = (npad // tile,)
-    status, partner, vstat, vpart = pl.pallas_call(
-        _lower_star_kernel,
+    return pl.pallas_call(
+        functools.partial(_prepass_kernel, packed=packed),
         grid=grid_,
         in_specs=[
             pl.BlockSpec((tile, 27), lambda i: (i, 0)),
@@ -140,10 +184,164 @@ def lower_star_gradient_pallas(nbrs, ov, tile: int = 256,
         ],
         out_shape=[
             jax.ShapeDtypeStruct((npad, R), jnp.int8),
-            jax.ShapeDtypeStruct((npad, R), jnp.int32),
+            jax.ShapeDtypeStruct((npad, R), jnp.int8),
             jax.ShapeDtypeStruct((npad, 1), jnp.int8),
             jax.ShapeDtypeStruct((npad, 1), jnp.int32),
         ],
         interpret=interpret,
-    )(nbrs_p, ov_p, jnp.asarray(REF.OTH), jnp.asarray(REF.FID))
+    )(nbrs, ov, jnp.asarray(REF.OTH), jnp.asarray(REF.FID))
+
+
+def prepass_cache_size() -> int:
+    """Number of compiled pre-pass programs (the bucket-reuse probe)."""
+    return _prepass_call._cache_size()
+
+
+def lower_star_gradient_pallas(nbrs, ov, tile: int = 256,
+                               interpret: bool = True,
+                               rank_bound: int | None = None):
+    """Pallas-tiled lower-star gradient over a pre-gathered im2col tensor.
+
+    nbrs (n, 27), ov (n,).  The vertex axis is bucket-padded to a
+    power-of-two multiple of ``tile`` so nearby lengths reuse one compiled
+    program.  ``rank_bound`` (static, = grid.nv) enables the int32 rank
+    and packed-key fast paths.
+    """
+    n = nbrs.shape[0]
+    npad = bucket_len(n, tile)
+    nbrs = _maybe_int32(jnp.asarray(nbrs), rank_bound)
+    ov = _maybe_int32(jnp.asarray(ov), rank_bound)
+    nbrs_p = jnp.pad(nbrs, ((0, npad - n), (0, 0)), constant_values=-1)
+    ov_p = jnp.pad(ov, (0, npad - n))[:, None]
+    status, partner, vstat, vpart = _prepass_call(
+        nbrs_p, ov_p, tile, interpret, REF.use_packed_keys(rank_bound))
     return (status[:n], partner[:n], vstat[:n, 0], vpart[:n, 0])
+
+
+# --------------------------------------------------------------------------
+# fused halo-aware kernel — gather + pairing in one pass over the volume
+# --------------------------------------------------------------------------
+
+def _make_fused_kernel(tz: int, ty: int, nx: int, packed: bool):
+    def kernel(vol_ref, oth_ref, fid_ref, status_ref, partner_ref,
+               vstat_ref, vpart_ref):
+        w = vol_ref[...][0]       # (tz+2, ty+2, nx+2) halo-extended window
+        # 27 static shifted slices: the im2col table, built in VMEM.  The
+        # slice index (dz,dy,dx) with dx fastest matches _nbr_index.
+        cols = []
+        for dz in (0, 1, 2):
+            for dy in (0, 1, 2):
+                for dx in (0, 1, 2):
+                    cols.append(w[dz:dz + tz, dy:dy + ty, dx:dx + nx])
+        nbrs = jnp.stack(cols, axis=-1).reshape(tz * ty * nx, 27)
+        ov = w[1:1 + tz, 1:1 + ty, 1:1 + nx].reshape(-1)
+        status, partner, vstat, vpart = _pair_block(
+            nbrs, ov, oth_ref[...], fid_ref[...], packed)
+        status_ref[...] = status.reshape(1, tz, ty, nx, R)
+        partner_ref[...] = partner.reshape(1, tz, ty, nx, R)
+        vstat_ref[...] = vstat.reshape(1, tz, ty, nx)
+        vpart_ref[...] = vpart.reshape(1, tz, ty, nx)
+    return kernel
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("tile_z", "tile_y", "interpret", "packed"))
+def _fused_call(vol, tile_z: int, tile_y: int, interpret: bool, packed: bool):
+    """vol: (B, nzp+2, nyp+2, nx+2) halo-padded order volume (-1 outside)."""
+    B, nzh, nyh, nxh = vol.shape
+    nzp, nyp, nx = nzh - 2, nyh - 2, nxh - 2
+    tz, ty = tile_z, tile_y
+    grid_ = (B, nzp // tz, nyp // ty)
+    return pl.pallas_call(
+        _make_fused_kernel(tz, ty, nx, packed),
+        grid=grid_,
+        in_specs=[
+            # halo-overlapping window: element-indexed (Unblocked), each
+            # block reads [i*tz, i*tz+tz+2) x [j*ty, j*ty+ty+2) x all-x
+            pl.BlockSpec((1, tz + 2, ty + 2, nx + 2),
+                         lambda b, i, j: (b, i * tz, j * ty, 0),
+                         indexing_mode=pl.Unblocked()),
+            pl.BlockSpec((R, 3), lambda b, i, j: (0, 0)),
+            pl.BlockSpec((R, 3), lambda b, i, j: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, tz, ty, nx, R), lambda b, i, j: (b, i, j, 0, 0)),
+            pl.BlockSpec((1, tz, ty, nx, R), lambda b, i, j: (b, i, j, 0, 0)),
+            pl.BlockSpec((1, tz, ty, nx), lambda b, i, j: (b, i, j, 0)),
+            pl.BlockSpec((1, tz, ty, nx), lambda b, i, j: (b, i, j, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, nzp, nyp, nx, R), jnp.int8),
+            jax.ShapeDtypeStruct((B, nzp, nyp, nx, R), jnp.int8),
+            jax.ShapeDtypeStruct((B, nzp, nyp, nx), jnp.int8),
+            jax.ShapeDtypeStruct((B, nzp, nyp, nx), jnp.int32),
+        ],
+        interpret=interpret,
+    )(vol, jnp.asarray(REF.OTH), jnp.asarray(REF.FID))
+
+
+def fused_cache_size() -> int:
+    """Number of compiled fused programs (recompile regression probe)."""
+    return _fused_call._cache_size()
+
+
+def _fused_finish(outs, nz, ny):
+    status, partner, vstat, vpart = outs
+    status = status[:, :nz, :ny].reshape(-1, R)
+    partner = partner[:, :nz, :ny].reshape(-1, R)
+    vstat = vstat[:, :nz, :ny].reshape(-1)
+    vpart = vpart[:, :nz, :ny].reshape(-1)
+    return status, partner, vstat, vpart
+
+
+def _tiles_for(nz: int, ny: int, tile_z: int, tile_y: int):
+    return max(1, min(tile_z, nz)), max(1, min(tile_y, ny))
+
+
+def fused_lower_star_gradient_pallas(grid, orders, *, tile_z: int = 4,
+                                     tile_y: int = 8, interpret: bool = True,
+                                     rank_bound: int | None = None):
+    """Fused gather+pairing over a whole grid (optionally a batch of them).
+
+    grid: :class:`repro.core.grid.Grid`; orders: (nv,) or (B, nv) rank
+    fields in vid layout.  Returns packed rows over the flattened batch
+    (status (B*nv, 74) int8, partner int8, vstat (B*nv,) int8, vpart
+    int32) — no (nv, 27) tensor ever touches HBM.
+    """
+    nx, ny, nz = grid.dims
+    orders = jnp.asarray(orders)
+    o = orders.reshape(-1, nz, ny, nx)
+    rank_bound = grid.nv if rank_bound is None else rank_bound
+    o = _maybe_int32(o, rank_bound)
+    tz, ty = _tiles_for(nz, ny, tile_z, tile_y)
+    nzp = -(-nz // tz) * tz
+    nyp = -(-ny // ty) * ty
+    vol = jnp.pad(o, ((0, 0), (1, nzp - nz + 1), (1, nyp - ny + 1), (1, 1)),
+                  constant_values=-1)
+    outs = _fused_call(vol, tz, ty, interpret, REF.use_packed_keys(rank_bound))
+    return _fused_finish(outs, nz, ny)
+
+
+def fused_rows_from_halo_volume(ext, *, tile_z: int = 4, tile_y: int = 8,
+                                interpret: bool = True,
+                                rank_bound: int | None = None):
+    """Fused kernel over a z-slab whose halo planes were exchanged already.
+
+    ext: (nz_local+2, ny, nx) rank volume; the first/last z-planes are the
+    ghost planes received from the ring neighbors (-1 at the global
+    boundary) — exactly the one-plane overlap the fused BlockSpecs need,
+    so the shardmap front-end feeds the kernel directly.  Returns packed
+    rows for the nz_local*ny*nx owned vertices.
+    """
+    nzh, ny, nx = ext.shape
+    nz = nzh - 2
+    ext = _maybe_int32(jnp.asarray(ext), rank_bound)
+    tz, ty = _tiles_for(nz, ny, tile_z, tile_y)
+    nzp = -(-nz // tz) * tz
+    nyp = -(-ny // ty) * ty
+    # z halos are already present; only the far z end, y and x get -1 pad
+    vol = jnp.pad(ext[None], ((0, 0), (0, nzp - nz), (1, nyp - ny + 1),
+                              (1, 1)), constant_values=-1)
+    outs = _fused_call(vol, tz, ty, interpret,
+                       REF.use_packed_keys(rank_bound))
+    return _fused_finish(outs, nz, ny)

@@ -1,8 +1,15 @@
 """jit'd wrappers around the gradient kernels.
 
 ``backend``:
-- ``"jax"``     — pure-jnp oracle (ref.py), jit-compiled; default on CPU.
-- ``"pallas"``  — Pallas kernel, interpret mode on CPU (TPU target).
+- ``"jax"``            — pure-jnp oracle (ref.py); the 27-point stencil
+  gather and the pairing loop compile as ONE jit program (XLA fuses the
+  gather, so no (nv, 27) tensor round-trips through HBM), with int32
+  ranks and packed int64 keys whenever the grid allows.
+- ``"pallas"``         — the fused halo-aware Pallas kernel: the gather
+  happens inside the kernel from halo-overlapping volume tiles
+  (interpret mode on CPU, TPU target).
+- ``"pallas_prepass"`` — the original im2col pre-pass + vertex-tiled
+  Pallas kernel, kept as a fallback and oracle cross-check.
 """
 
 from __future__ import annotations
@@ -15,23 +22,66 @@ import jax.numpy as jnp
 from repro.core import gradient as GR
 from repro.core.grid import Grid
 from . import ref as REF
-from .lower_star import lower_star_gradient_pallas
+from .lower_star import (fused_lower_star_gradient_pallas,
+                         lower_star_gradient_pallas)
 
-_jnp_jit = jax.jit(REF.lower_star_gradient_jnp)
+BACKENDS = ("jax", "pallas", "pallas_prepass")
 
 
 def neighbor_orders_jnp(grid: Grid, order):
     return GR.neighbor_orders(grid, jnp.asarray(order), xp=jnp)
 
 
+@functools.partial(jax.jit, static_argnums=(0,))
+def _jax_full_rows(grid: Grid, order):
+    """Gather + pairing fused by XLA in one compiled program."""
+    o = order.astype(jnp.int32) if grid.nv < 2 ** 31 else order
+    nbrs = GR.neighbor_orders(grid, o, xp=jnp)
+    return REF.lower_star_gradient_jnp(nbrs, o, rank_bound=grid.nv)
+
+
+def jax_rows_cache_size() -> int:
+    """Compiled-program count of the jnp rows path (recompile probe)."""
+    return _jax_full_rows._cache_size()
+
+
+def gradient_hbm_model(dims, tile_z: int = 4, tile_y: int = 8,
+                       rank_bytes=None):
+    """Modeled HBM gather traffic in bytes/vertex for each front-end path.
+
+    Rank width follows the code: int32 when ``nv < 2**31`` (always for
+    our grids; the pre-PR int64 pre-pass was 216+216+8 = 440 B/vertex).
+
+    - ``prepass``: the im2col pre-pass materializes a (nv, 27) rank
+      tensor (27*w B/vertex written), the kernel reads it back, and the
+      order field is read once: 27*w + 27*w + w (= 220 B/vertex at w=4).
+    - ``fused``: each halo-overlapping block reads its order window
+      exactly once; the one-vertex halo inflates the read by
+      (1 + 2/tile_z)(1 + 2/tile_y)(1 + 2/nx) — ~6-12 B/vertex.  The
+      ``jax`` backend is modeled the same way: XLA fuses the 27-slice
+      gather into the pairing program, so no im2col tensor round-trips.
+    """
+    nx, ny, nz = dims
+    if rank_bytes is None:
+        rank_bytes = 4.0 if nx * ny * nz < 2 ** 31 else 8.0
+    w = float(rank_bytes)
+    tz = max(1, min(tile_z, nz))
+    ty = max(1, min(tile_y, ny))
+    overlap = (1 + 2 / tz) * (1 + 2 / ty) * (1 + 2 / nx)
+    return {"prepass": 27 * w + 27 * w + w, "fused": w * overlap}
+
+
 def lower_star_gradient(grid: Grid, order, backend: str = "jax",
                         tile: int = 256):
     """Compute per-vertex packed gradient rows for the whole grid."""
     order = jnp.asarray(order)
-    nbrs = neighbor_orders_jnp(grid, order)
     if backend == "jax":
-        return _jnp_jit(nbrs, order)
+        return _jax_full_rows(grid, order)
     if backend == "pallas":
+        return fused_lower_star_gradient_pallas(grid, order)
+    if backend == "pallas_prepass":
+        nbrs = neighbor_orders_jnp(grid, order)
         return lower_star_gradient_pallas(nbrs, order, tile=tile,
-                                          interpret=True)
-    raise ValueError(f"unknown backend {backend!r}")
+                                          interpret=True,
+                                          rank_bound=grid.nv)
+    raise ValueError(f"unknown backend {backend!r}; expected {BACKENDS}")

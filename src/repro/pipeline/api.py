@@ -108,6 +108,16 @@ class PersistencePipeline:
             self._programs[key] = prog
         return prog
 
+    def _row_offsets(self, grid: Grid):
+        """Per-grid row->sid scatter offset tables (cached with programs)."""
+        from repro.core.gradient import row_sid_offsets
+        key = ("row_offsets", grid.dims)
+        off = self._programs.get(key)
+        if off is None:
+            off = row_sid_offsets(grid)
+            self._programs[key] = off
+        return off
+
     def _finish(self, state: PipelineState,
                 report: StageReport) -> PipelineResult:
         if self.config.distributed:
@@ -163,7 +173,7 @@ class PersistencePipeline:
         prog = self._batched_program(grid)
         orders = np.stack([s.order for s in states])
         rows = prog(orders)
-        gfs = _scatter_batch(grid, rows, B)
+        gfs = _scatter_batch(grid, rows, B, offsets=self._row_offsets(grid))
         dt = (time.perf_counter() - t0) / B
         for state, report, gf in zip(states, reports, gfs):
             rep = report.child("gradient")

@@ -14,12 +14,23 @@ backend bundles:
 
 Registered backends:
 
-- ``np``       — literal Robins reference with priority queues (heapq);
-- ``jax``      — branchless masked-recomputation form, jit-compiled;
-- ``pallas``   — the Pallas lower-star kernel (interpret mode on CPU);
-- ``shardmap`` — the device-level z-slab front-end: ``shard_map`` over a
-  mesh ring with one-plane ``ppermute`` halo exchange of ranks, the same
-  program ``repro.distributed.shardmap_pipeline`` runs at scale.
+- ``np``             — literal Robins reference with priority queues;
+- ``jax``            — branchless masked-recomputation form; the stencil
+  gather and pairing compile as one jit program (packed int64 keys,
+  int32 ranks);
+- ``pallas``         — the *fused* halo-aware Pallas lower-star kernel:
+  the 27-point gather runs inside the kernel over halo-overlapping
+  volume tiles (interpret mode on CPU, TPU target);
+- ``pallas_prepass`` — the original im2col pre-pass + vertex-tiled
+  Pallas kernel, kept as a fallback and cross-check;
+- ``shardmap``       — the device-level z-slab front-end: ``shard_map``
+  over a mesh ring with one-plane ``ppermute`` halo exchange of ranks,
+  the same program ``repro.distributed.shardmap_pipeline`` runs at
+  scale.
+
+Batched rows programs are jitted end to end and their *batch dimension
+is bucket-padded* (see ``_bucket_batch``), so nearby batch sizes reuse
+one compiled program instead of re-tracing per distinct B.
 
 ``register_backend`` is the extension point later scaling PRs (async
 collectives, multi-host, remote caches) plug into.
@@ -46,6 +57,8 @@ class BackendCaps:
     jittable: bool = False   # gradient program is jit-compiled
     sharded: bool = False    # runs under shard_map over a device mesh
     batched: bool = False    # supports one-shot batched packed-row programs
+    fused: bool = False      # stencil gather fused into the kernel (no
+    #                          materialized (nv, 27) im2col tensor)
 
 
 @dataclass(frozen=True)
@@ -95,41 +108,77 @@ def _gradient_np(grid: Grid, order, *, n_blocks: int = 1) -> GradientField:
 # jax / pallas — vectorized kernels (shared batched-row machinery)
 # --------------------------------------------------------------------------
 
+_BATCH_BUCKETS = (1, 2, 3, 4, 6, 8, 12, 16, 24, 32)
+
+
+def _bucket_batch(B: int) -> int:
+    """Smallest padding bucket >= B (then multiples of 32)."""
+    for b in _BATCH_BUCKETS:
+        if b >= B:
+            return b
+    return -(-B // 32) * 32
+
+
 def _rows_fn(grid: Grid, kernel: str) -> Callable:
     """orders (B, nv) -> packed rows over the flattened batch.
 
-    The stencil gather (``neighbor_orders``) and the per-vertex pairing
-    are both vertex-local, so a batch of B same-shape fields is just a
-    (B*nv)-vertex problem — one compiled program, one dispatch.
+    The stencil gather and the per-vertex pairing are both vertex-local,
+    so a batch of B same-shape fields is just a (B*nv)-vertex problem —
+    one compiled program, one dispatch.  The whole rows program is jitted
+    for every kernel (pallas_call composes with jit in interpret mode),
+    and the batch dimension is bucket-padded with inert all(-1) fields so
+    nearby batch sizes share one compiled program.
     """
     import jax
     import jax.numpy as jnp
     from repro.kernels import ref as REF
+    from repro.kernels.lower_star import (fused_lower_star_gradient_pallas,
+                                          lower_star_gradient_pallas)
 
-    def fn(orders):  # (B, nv) int64
-        nbrs = jax.vmap(
-            lambda o: GR.neighbor_orders(grid, o, xp=jnp))(orders)
-        flat_nbrs = nbrs.reshape(-1, 27)
-        flat_ov = orders.reshape(-1)
+    def fn(orders):  # (Bp, nv) rank fields
         if kernel == "pallas":
-            from repro.kernels.lower_star import lower_star_gradient_pallas
+            # fused path: gather happens inside the kernel, the batch is a
+            # leading grid dimension — no (B*nv, 27) tensor materializes
+            return fused_lower_star_gradient_pallas(grid, orders)
+        o = orders.astype(jnp.int32) if grid.nv < 2 ** 31 else orders
+        nbrs = jax.vmap(
+            lambda oo: GR.neighbor_orders(grid, oo, xp=jnp))(o)
+        flat_nbrs = nbrs.reshape(-1, 27)
+        flat_ov = o.reshape(-1)
+        if kernel == "pallas_prepass":
             return lower_star_gradient_pallas(flat_nbrs, flat_ov,
-                                              interpret=True)
-        return REF.lower_star_gradient_jnp(flat_nbrs, flat_ov)
+                                              interpret=True,
+                                              rank_bound=grid.nv)
+        return REF.lower_star_gradient_jnp(flat_nbrs, flat_ov,
+                                           rank_bound=grid.nv)
 
-    return jax.jit(fn) if kernel != "pallas" else fn
+    jfn = jax.jit(fn)
+
+    def wrapped(orders):
+        orders = jnp.asarray(orders)
+        B = orders.shape[0]
+        Bp = _bucket_batch(B)
+        if Bp != B:
+            # all(-1) pad fields: every simplex fails the lower-star test,
+            # so the padded lanes retire after one loop iteration
+            pad = jnp.full((Bp - B, orders.shape[1]), -1, orders.dtype)
+            orders = jnp.concatenate([orders, pad])
+        rows = jfn(orders)
+        n = B * grid.nv
+        return tuple(r[:n] for r in rows)
+
+    wrapped._jit = jfn  # compile-cache probe for the recompile tests
+    return wrapped
 
 
-def _scatter_batch(grid: Grid, rows, B: int):
-    """Split flattened-batch packed rows back into B GradientFields."""
+def _scatter_batch(grid: Grid, rows, B: int, offsets=None):
+    """Split flattened-batch packed rows back into B GradientFields.
+
+    Fully vectorized: one flat index-arithmetic scatter over all dims and
+    all batch elements (see ``GR.scatter_results_batch``)."""
     status, partner, vstat, vpart = (np.asarray(r) for r in rows)
-    nv = grid.nv
-    out = []
-    for b in range(B):
-        sl = slice(b * nv, (b + 1) * nv)
-        out.append(GR._scatter_results(grid, status[sl], partner[sl],
-                                       vstat[sl], vpart[sl]))
-    return out
+    return GR.scatter_results_batch(grid, status, partner, vstat, vpart,
+                                    B, offsets=offsets)
 
 
 def _make_kernel_gradient(kernel: str) -> Callable:
@@ -194,9 +243,16 @@ register_backend(Backend(
 
 register_backend(Backend(
     name="pallas", gradient=_make_kernel_gradient("pallas"),
-    caps=BackendCaps(jittable=True, batched=True),
-    description="Pallas lower-star kernel (interpret mode on CPU)",
+    caps=BackendCaps(jittable=True, batched=True, fused=True),
+    description="fused halo-aware Pallas lower-star kernel "
+                "(interpret mode on CPU)",
     batched_rows=lambda grid: _rows_fn(grid, "pallas")))
+
+register_backend(Backend(
+    name="pallas_prepass", gradient=_make_kernel_gradient("pallas_prepass"),
+    caps=BackendCaps(jittable=True, batched=True),
+    description="im2col pre-pass + vertex-tiled Pallas kernel (fallback)",
+    batched_rows=lambda grid: _rows_fn(grid, "pallas_prepass")))
 
 register_backend(Backend(
     name="shardmap", gradient=_gradient_shardmap,

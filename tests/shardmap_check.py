@@ -69,5 +69,6 @@ if __name__ == "__main__":
     check((6, 5, 16), 1, N_DEV)
     check((5, 4, 24), 2, N_DEV)
     check((6, 5, 16), 3, N_DEV, use_sample_sort=True, backend="pallas")
+    check((5, 4, 16), 5, N_DEV, use_sample_sort=True, backend="fused")
     check((4, 4, 8), 4, 4)
     print("ALL SHARD_MAP CHECKS PASSED")

@@ -1,0 +1,227 @@
+"""Fused front-end tests: fused-kernel parity (vs the jnp oracle AND the
+literal priority-queue reference), batched rows, the vectorized scatter,
+sid dtype narrowing, and the bucket-padding recompile regression."""
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import gradient as GR
+from repro.core.grid import Grid, vertex_order
+from repro.core.gradient import compute_gradient, compute_gradient_np
+from repro.kernels import ops
+from repro.kernels import ref as REF
+from repro.kernels.lower_star import (bucket_len,
+                                      fused_lower_star_gradient_pallas,
+                                      lower_star_gradient_pallas,
+                                      prepass_cache_size)
+
+
+# asymmetric dims + 1-thin slabs per the kernel contract
+FUSED_DIMS = [(5, 3, 7), (4, 4, 4), (7, 5, 1), (1, 5, 6), (6, 1, 5),
+              (2, 2, 2), (9, 4), (16,)]
+
+
+def _order(dims, seed=None):
+    g = Grid.of(*dims)
+    rng = np.random.default_rng(seed if seed is not None
+                                else abs(hash(dims)) % 2 ** 31)
+    return g, vertex_order(rng.standard_normal(g.nv))
+
+
+def _assert_gf_equal(a, b, tag=""):
+    for k in a.pair_up:
+        assert np.array_equal(a.pair_up[k], b.pair_up[k]), f"{tag} pair_up[{k}]"
+    for k in a.pair_down:
+        assert np.array_equal(a.pair_down[k], b.pair_down[k]), \
+            f"{tag} pair_down[{k}]"
+    for k in a.crit:
+        assert np.array_equal(a.crit[k], b.crit[k]), f"{tag} crit[{k}]"
+
+
+# --------------------------------------------------------------------------
+# fused kernel parity
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dims", FUSED_DIMS)
+def test_fused_matches_ref_oracle(dims):
+    g, order = _order(dims)
+    nbrs = ops.neighbor_orders_jnp(g, jnp.asarray(order))
+    ref = REF.lower_star_gradient_jnp(nbrs, jnp.asarray(order))
+    got = fused_lower_star_gradient_pallas(g, order)
+    for a, b, name in zip(ref, got, ["status", "partner", "vstat", "vpart"]):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                      err_msg=f"{dims} {name}")
+
+
+@pytest.mark.parametrize("dims", [(5, 3, 7), (7, 5, 1), (1, 5, 6)])
+def test_fused_backend_matches_literal_robins(dims):
+    """compute_gradient(pallas) == the literal heapq reference end to end."""
+    g, order = _order(dims, seed=11)
+    a = compute_gradient_np(g, order)
+    b = compute_gradient(g, order, backend="pallas")
+    _assert_gf_equal(a, b, f"{dims}")
+
+
+def test_prepass_backend_still_available():
+    g, order = _order((5, 4, 3), seed=12)
+    a = compute_gradient_np(g, order)
+    b = compute_gradient(g, order, backend="pallas_prepass")
+    _assert_gf_equal(a, b)
+
+
+def test_fused_batched_rows_match_per_field():
+    g = Grid.of(4, 3, 5)
+    rng = np.random.default_rng(13)
+    orders = np.stack([np.asarray(vertex_order(rng.standard_normal(g.nv)))
+                       for _ in range(3)])
+    s, p, vs, vp = fused_lower_star_gradient_pallas(g, orders)
+    for b in range(3):
+        ref = fused_lower_star_gradient_pallas(g, orders[b])
+        sl = slice(b * g.nv, (b + 1) * g.nv)
+        for x, y, name in zip(ref, (s[sl], p[sl], vs[sl], vp[sl]),
+                              ["status", "partner", "vstat", "vpart"]):
+            np.testing.assert_array_equal(np.asarray(x), np.asarray(y),
+                                          err_msg=f"batch {b} {name}")
+
+
+def test_fused_partner_is_int8():
+    g, order = _order((4, 4, 4), seed=14)
+    _, partner, _, _ = fused_lower_star_gradient_pallas(g, order)
+    assert np.asarray(partner).dtype == np.int8
+
+
+# --------------------------------------------------------------------------
+# packed-key / priority-rank oracle path
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dims", FUSED_DIMS)
+def test_oracle_packed_path_bit_exact(dims):
+    g, order = _order(dims)
+    nbrs = ops.neighbor_orders_jnp(g, jnp.asarray(order))
+    a = REF.lower_star_gradient_jnp(nbrs, jnp.asarray(order))
+    b = REF.lower_star_gradient_jnp(nbrs, jnp.asarray(order),
+                                    rank_bound=g.nv)
+    for x, y, name in zip(a, b, ["status", "partner", "vstat", "vpart"]):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y),
+                                      err_msg=f"{dims} {name}")
+
+
+# --------------------------------------------------------------------------
+# vectorized scatter + sid dtype narrowing
+# --------------------------------------------------------------------------
+
+def test_scatter_batch_matches_single():
+    g = Grid.of(3, 4, 5)
+    rng = np.random.default_rng(15)
+    orders = [np.asarray(vertex_order(rng.standard_normal(g.nv)))
+              for _ in range(3)]
+    rows = [ops.lower_star_gradient(g, o, backend="jax") for o in orders]
+    stacked = [np.concatenate([np.asarray(r[i]) for r in rows])
+               for i in range(4)]
+    gfs = GR.scatter_results_batch(g, *stacked, B=3)
+    for o, gf in zip(orders, gfs):
+        _assert_gf_equal(compute_gradient_np(g, o), gf)
+
+
+def test_gradient_field_sid_arrays_are_int32():
+    g, order = _order((4, 4, 4), seed=16)
+    for gf in (compute_gradient_np(g, order),
+               compute_gradient(g, order, backend="jax")):
+        for k, arr in gf.pair_up.items():
+            assert arr.dtype == np.int32, f"pair_up[{k}]"
+        for k, arr in gf.pair_down.items():
+            assert arr.dtype == np.int32, f"pair_down[{k}]"
+
+
+def test_row_sid_offsets_cached_per_grid():
+    a = GR.row_sid_offsets(Grid.of(4, 5, 6))
+    b = GR.row_sid_offsets(Grid.of(4, 5, 6))
+    assert a is b
+    assert set(a) == {1, 2, 3}
+    assert all(v.shape == (GR.G.NSTAR[k],) for k, v in a.items())
+
+
+# --------------------------------------------------------------------------
+# bucket padding: no recompile across lengths within one bucket
+# --------------------------------------------------------------------------
+
+def test_bucket_len():
+    assert bucket_len(1, 64) == 64
+    assert bucket_len(64, 64) == 64
+    assert bucket_len(65, 64) == 128
+    assert bucket_len(200, 64) == 256
+
+
+def test_prepass_bucket_shares_one_compile():
+    """Two lengths in one padding bucket reuse a single compiled program."""
+    rng = np.random.default_rng(17)
+
+    def rows_for(dims):
+        g = Grid.of(*dims)
+        o = jnp.asarray(vertex_order(rng.standard_normal(g.nv)))
+        nbrs = ops.neighbor_orders_jnp(g, o)
+        # tile=48: a config no other test uses, so the cache delta is ours
+        return lower_star_gradient_pallas(nbrs, o, tile=48,
+                                          rank_bound=g.nv)
+
+    rows_for((5, 4, 2))            # n=40  -> bucket 48
+    c1 = prepass_cache_size()
+    rows_for((6, 4, 2))            # n=48  -> same bucket
+    assert prepass_cache_size() == c1, "same bucket must not recompile"
+    rows_for((7, 4, 2))            # n=56  -> bucket 96
+    assert prepass_cache_size() == c1 + 1
+
+
+def test_batched_rows_bucket_shares_one_compile():
+    """Batch sizes in one bucket share the jitted rows program."""
+    from repro.pipeline.backends import _rows_fn
+    g = Grid.of(3, 3, 4)
+    rng = np.random.default_rng(18)
+
+    def orders(B):
+        return np.stack([np.asarray(vertex_order(
+            rng.standard_normal(g.nv))) for _ in range(B)])
+
+    prog = _rows_fn(g, "jax")
+    prog(orders(5))                # bucket 6
+    assert prog._jit._cache_size() == 1
+    prog(orders(6))                # same bucket
+    assert prog._jit._cache_size() == 1, "same bucket must not recompile"
+    prog(orders(7))                # bucket 8
+    assert prog._jit._cache_size() == 2
+
+
+def test_fused_batch_bucket_via_pipeline():
+    """diagrams() batches of nearby sizes reuse one fused compile and
+    still match the per-field reference."""
+    from repro.pipeline import PersistencePipeline
+    g = Grid.of(3, 3, 4)
+    rng = np.random.default_rng(19)
+    fields = [rng.standard_normal(g.nv) for _ in range(6)]
+    pipe = PersistencePipeline(backend="pallas")
+    out5 = pipe.diagrams(fields[:5], grid=g)      # bucket 6
+    out6 = pipe.diagrams(fields, grid=g)          # bucket 6 again
+    prog = pipe._programs[(g.dims, "pallas", 1)]
+    assert prog._jit._cache_size() == 1, \
+        "two batch sizes in one bucket must share the fused compile"
+    for f, res in zip(fields, out6):
+        single = pipe.diagram(f, grid=g)
+        assert single.diagram.pairs.keys() == res.diagram.pairs.keys()
+        for k in single.diagram.pairs:
+            assert np.array_equal(single.diagram.pairs[k],
+                                  res.diagram.pairs[k])
+    assert len(out5) == 5 and len(out6) == 6
+
+
+# --------------------------------------------------------------------------
+# registry capability flags
+# --------------------------------------------------------------------------
+
+def test_fused_capability_flags():
+    from repro.pipeline import available_backends, get_backend
+    assert get_backend("pallas").caps.fused
+    assert get_backend("pallas").caps.batched
+    assert not get_backend("pallas_prepass").caps.fused
+    assert "pallas_prepass" in available_backends()
