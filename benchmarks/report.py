@@ -7,12 +7,17 @@ BENCH_gradient.json).
         [--out BENCH_pipeline.json]
     PYTHONPATH=src python -m benchmarks.report --section gradient \
         [--quick] [--out BENCH_gradient.json]
+    PYTHONPATH=src python -m benchmarks.report --section stream \
+        [--quick] [--out BENCH_stream.json]
 
 The pipeline section runs ``PersistencePipeline`` over a fixed field set
 and dumps every ``StageReport`` (nested per-stage wall times + algorithm
 counters).  The gradient section A/B-times the front-end paths (im2col
 pre-pass vs fused gather) with vertices/s and the modeled HBM
-bytes/vertex, so the perf trajectory is tracked PR-over-PR.
+bytes/vertex, so the perf trajectory is tracked PR-over-PR.  The stream
+section A/B-times the out-of-core engine (``diagram_stream``) against
+the in-memory path, recording peak resident field bytes and the
+load/compute overlap from the ``StreamReport``.
 """
 
 import argparse
@@ -258,22 +263,88 @@ def gradient_bench(out_path, quick=False):
               f"{p['fused']['model_bytes_per_vertex']:.1f}")
 
 
+def stream_bench(out_path, quick=False):
+    """Streamed (out-of-core) vs in-memory throughput; BENCH_stream.json.
+
+    Runs ``PersistencePipeline.diagram`` and ``diagram_stream`` on the
+    same fields (warmed, so compile time stays out), cross-checks the
+    diagrams, and records end-to-end vertices/s plus the StreamReport
+    byte accounting (peak resident field bytes, load/compute overlap).
+    """
+    from repro.core.diagram import same_offdiagonal
+    from repro.core.grid import Grid
+    from repro.fields import make_field
+    from repro.pipeline import PersistencePipeline
+    from repro.stream import ArraySource
+
+    dims = (16, 16, 16) if quick else (32, 32, 32)
+    chunk_zs = (4, 8) if quick else (8, 16)
+    g = Grid.of(*dims)
+    pipe = PersistencePipeline(backend="jax")
+    runs = []
+    for field in ("wavelet", "random"):
+        f = make_field(field, dims, seed=0)
+        src = ArraySource(f.reshape(dims[::-1]))
+        pipe.diagram(f, grid=g)                      # warm-up: compile
+        t0 = time.perf_counter()
+        ref = pipe.diagram(f, grid=g)
+        mem_s = time.perf_counter() - t0
+        for cz in chunk_zs:
+            pipe.diagram_stream(src, chunk_z=cz)     # warm-up chunk shapes
+            t0 = time.perf_counter()
+            res = pipe.diagram_stream(src, chunk_z=cz)
+            st_s = time.perf_counter() - t0
+            assert same_offdiagonal(res.diagram, ref.diagram)
+            runs.append({
+                "field": field, "dims": list(dims), "backend": "jax",
+                "chunk_z": cz,
+                "in_memory": {"seconds": mem_s,
+                              "vertices_per_s": g.nv / mem_s,
+                              "resident_field_bytes": f.nbytes},
+                "streamed": {"seconds": st_s,
+                             "vertices_per_s": g.nv / st_s,
+                             "resident_field_bytes":
+                                 res.stream.peak_resident_field_bytes},
+                "stream_report": res.stream.to_dict(),
+            })
+    doc = {"schema": "ddms-stream-bench/v1",
+           "platform": platform.platform(),
+           "python": platform.python_version(),
+           "quick": bool(quick),
+           "runs": runs}
+    Path(out_path).write_text(json.dumps(doc, indent=1))
+    print(f"wrote {out_path}: {len(runs)} runs")
+    for r in runs:
+        m, s = r["in_memory"], r["streamed"]
+        sr = r["stream_report"]
+        print(f"  {r['field']}/cz{r['chunk_z']}: "
+              f"in-mem={m['vertices_per_s']:.0f}v/s "
+              f"streamed={s['vertices_per_s']:.0f}v/s "
+              f"({s['seconds']/m['seconds']:.2f}x time) "
+              f"resident {fmt_bytes(m['resident_field_bytes'])}->"
+              f"{fmt_bytes(s['resident_field_bytes'])} "
+              f"overlap={sr['overlap_s']*1e3:.1f}ms")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--dir", default="results/dryrun")
     ap.add_argument("--section", default="all",
                     choices=["all", "roofline", "dryrun", "pipeline",
-                             "gradient"])
+                             "gradient", "stream"])
     ap.add_argument("--out", default=None,
-                    help="output path for --section pipeline/gradient")
+                    help="output path for --section pipeline/gradient/stream")
     ap.add_argument("--quick", action="store_true",
-                    help="small sizes for CI smoke (gradient section)")
+                    help="small sizes for CI smoke (gradient/stream)")
     args = ap.parse_args()
     if args.section == "pipeline":
         pipeline_bench(args.out or "BENCH_pipeline.json")
         return
     if args.section == "gradient":
         gradient_bench(args.out or "BENCH_gradient.json", quick=args.quick)
+        return
+    if args.section == "stream":
+        stream_bench(args.out or "BENCH_stream.json", quick=args.quick)
         return
     recs = load(args.dir)
     if args.section in ("all", "dryrun"):

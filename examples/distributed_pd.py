@@ -1,31 +1,57 @@
 """Distributed persistence diagram on multiple (host) devices — the full
-DDMS pipeline: shard_map front-end (distributed sort, halo gradient, ring
-tracing) + self-correcting pairing + token-based D1.
+DDMS pipeline through the `PersistencePipeline` facade: shardmap z-slab
+front-end (halo gradient) + self-correcting pairing + token-based D1,
+checked against the sequential DMS reference.  With ``--stream`` the
+reference also runs *out-of-core* from a memmap file on disk
+(`pipe.diagram_stream`), demonstrating the `repro.stream` engine.
 
-    python examples/distributed_pd.py [--devices 8] [--dims 8 8 32]
+    PYTHONPATH=src python examples/distributed_pd.py [--devices 8] \
+        [--dims 8 8 32] [--field isabel] [--stream]
 """
 import argparse
 import os
-import sys
+import tempfile
 
 ap = argparse.ArgumentParser()
 ap.add_argument("--devices", type=int, default=8)
 ap.add_argument("--dims", nargs="+", type=int, default=[8, 8, 32])
 ap.add_argument("--field", default="isabel")
+ap.add_argument("--stream", action="store_true",
+                help="also compute out-of-core from a memmap file")
+ap.add_argument("--chunk-z", type=int, default=8,
+                help="owned z-planes per streamed chunk")
 args = ap.parse_args()
+# host-device mesh must be configured before jax initializes
 os.environ["XLA_FLAGS"] = (
     f"--xla_force_host_platform_device_count={args.devices} "
     + os.environ.get("XLA_FLAGS", ""))
-sys.path.insert(0, "src")
 
 import numpy as np  # noqa: E402
 
 from repro.core.diagram import same_offdiagonal  # noqa: E402
 from repro.core.grid import Grid  # noqa: E402
-from repro.distributed.shardmap_pipeline import (front_triplets,  # noqa
-                                                 run_front)
 from repro.fields import make_field  # noqa: E402
 from repro.pipeline import PersistencePipeline  # noqa: E402
+from repro.stream import MemmapSource  # noqa: E402
+
+
+def stream_demo(g: Grid, f: np.ndarray, ref) -> None:
+    """Out-of-core diagram from a raw float32 file, vs the in-memory run."""
+    nx, ny, nz = g.dims
+    with tempfile.TemporaryDirectory() as td:
+        path = os.path.join(td, "field.f32")
+        src = MemmapSource.write(path, f.reshape(nz, ny, nx))
+        pipe = PersistencePipeline(backend="jax")
+        res = pipe.diagram_stream(src, chunk_z=args.chunk_z)
+        sr = res.stream
+        print(f"streamed from {path}: {sr.n_chunks} chunks of "
+              f"{sr.chunk_z} planes, peak resident field bytes "
+              f"{sr.peak_resident_field_bytes} "
+              f"(field is {f.nbytes}), load/compute overlap "
+              f"{sr.overlap_s*1e3:.1f}ms")
+        ok = same_offdiagonal(res.diagram, ref.diagram)
+        print(f"streamed == in-memory: {ok}")
+        assert ok
 
 
 def main():
@@ -33,21 +59,14 @@ def main():
     f = make_field(args.field, g.dims, seed=0)
     print(f"devices={args.devices} field={args.field} dims={g.dims}")
 
-    # device-level front-end (jit + shard_map, the dry-run program)
-    cfg, out = run_front(g.dims, f, args.devices, sort_slack=4.0)
-    (sid0, _, t0, t1), (sidd, _, s0, s1) = front_triplets(g.dims, out)
-    print(f"front-end on {args.devices} devices: "
-          f"criticals per dim = {out['ncrit'].tolist()}, "
-          f"{len(sid0)} D0 triplets, {len(sidd)} dual triplets, "
-          f"sort overflow={bool(out['overflow'])}, "
-          f"unresolved={int(out['unresolved'])}")
-
-    # distributed pairing + D1 (block-level algorithms) — the sharded
-    # gradient backend + the DDMS back-end, vs the sequential reference
+    # distributed front + back ends vs the sequential reference, both
+    # through the facade (backend registry picks the engines)
     res = PersistencePipeline(backend="shardmap", n_blocks=args.devices,
                               distributed=True).diagram(f, grid=g)
     ref = PersistencePipeline(backend="jax",
                               distributed=False).diagram(f, grid=g)
+    print(f"front-end on {args.devices} devices: "
+          f"criticals = {res.stats.get('n_critical')}")
     ok = same_offdiagonal(res.diagram, ref.diagram)
     print(f"DDMS == DMS: {ok}")
     print("self-correcting pairing rounds:",
@@ -57,6 +76,9 @@ def main():
           "token hops:", res.stats.get("d1_token_hops"),
           "steals:", res.stats.get("d1_steals"))
     assert ok
+
+    if args.stream:
+        stream_demo(g, f, ref)
 
 
 if __name__ == "__main__":

@@ -390,6 +390,69 @@ def _scatter_results(grid: Grid, status: np.ndarray, partner: np.ndarray,
     return gf
 
 
+def alloc_gradient(grid: Grid) -> GradientField:
+    """Empty dense gradient arrays for incremental (chunked) scatter.
+
+    Every pair entry starts -1 and every critical flag 0; chunk scatters
+    (:func:`scatter_rows_chunk`) fill them in.  Dtypes match
+    :func:`scatter_results_batch` so streamed and in-memory fields are
+    structurally identical."""
+    d = grid.dim
+    pair_up = {k: np.full(grid.sid_space(k), -1, dtype=sid_dtype(grid, k + 1))
+               for k in range(d)}
+    pair_down = {k: np.full(grid.sid_space(k), -1,
+                            dtype=sid_dtype(grid, k - 1))
+                 for k in range(1, d + 1)}
+    crit = {k: np.zeros(grid.sid_space(k), dtype=bool) for k in range(d + 1)}
+    return GradientField(grid, pair_up, pair_down, crit)
+
+
+def scatter_rows_chunk(grid: Grid, gf: GradientField, status: np.ndarray,
+                       partner: np.ndarray, vstatus: np.ndarray,
+                       vpartner: np.ndarray, v0: int,
+                       offsets: Optional[Dict[int, np.ndarray]] = None
+                       ) -> None:
+    """Scatter the packed rows of one vertex chunk into global arrays.
+
+    status/partner are (nc, 74) for the ``nc`` vertices [v0, v0 + nc) in
+    vid order (a z-slab).  Because a simplex belongs to the lower star of
+    exactly one vertex (its order-maximal one), chunks never write the
+    same sid twice — streaming the chunks in any order rebuilds exactly
+    the single-shot :func:`scatter_results_batch` result.  Simplices
+    *based* in a neighboring slab (row shift crossing the chunk floor)
+    land there via the same flat index arithmetic; ``gf`` is dense over
+    the whole grid."""
+    off = row_sid_offsets(grid) if offsets is None else offsets
+    d = grid.dim
+    vstatus = np.asarray(vstatus)
+    vpartner = np.asarray(vpartner)
+
+    gf.crit[0][v0:v0 + len(vstatus)] = vstatus == CRIT
+    vv = np.nonzero(vstatus == TAIL)[0]
+    if len(vv):
+        vg = vv + v0
+        es = vg * G.NTYPES[1] + off[1][vpartner[vv]]
+        gf.pair_up[0][vg] = es
+        gf.pair_down[1][es] = vg
+
+    for k in range(1, d + 1):
+        st = status[:, ROW_OFF[k]: ROW_OFF[k] + G.NSTAR[k]]   # (nc, S_k)
+        vs, rs = np.nonzero(st == CRIT)
+        if len(vs):
+            gf.crit[k][(vs + v0) * G.NTYPES[k] + off[k][rs]] = True
+        vs, rs = np.nonzero(st == HEAD)
+        if len(vs):
+            p = partner[vs, ROW_OFF[k] + rs].astype(np.int64)
+            if k == 1:
+                assert (p == -2).all(), "dim-1 head must pair with vertex"
+            else:
+                head_sid = (vs + v0) * G.NTYPES[k] + off[k][rs]
+                face_sid = ((vs + v0) * G.NTYPES[k - 1]
+                            + off[k - 1][p - ROW_OFF[k - 1]])
+                gf.pair_down[k][head_sid] = face_sid
+                gf.pair_up[k - 1][face_sid] = head_sid
+
+
 def compute_gradient_np(grid: Grid, order: np.ndarray,
                         masked: bool = False) -> GradientField:
     """Reference gradient: literal Robins (or the masked form) per vertex."""

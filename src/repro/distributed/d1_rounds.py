@@ -124,7 +124,11 @@ def d1_distributed(grid: Grid, gf: GradientField, ci: CriticalInfo,
         import repro.core.grid as G
         return block_of_vertex(t // G.NTYPES[2])
 
-    ekey = edge_keys_packed(grid, ci.order)
+    # edge keys are compared, never decoded: the (o_max, o_min) packing
+    # needs orders < 2^31, and the dense edge ranks sort identically —
+    # use them for full-width rank-free key orders (streamed fronts)
+    ekey = edge_keys_packed(grid, ci.order) \
+        if int(np.max(ci.order)) < 2 ** 31 else ci.ranks[1]
     trank = ci.ranks[2]
     c1_set = {int(x) for x in c1}
     n2 = len(c2)

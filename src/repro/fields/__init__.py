@@ -1,1 +1,1 @@
-from .generators import make_field, FIELDS  # noqa: F401
+from .generators import FIELDS, make_field, make_field_chunk  # noqa: F401

@@ -10,6 +10,19 @@ array in the grid's vid order (x fastest).
 - magnetic  : multi-scale noisy (reconnection-like; most pairs overall)
 - truss     : periodic lattice with defects (rich symmetric topology)
 - pressure  : band-limited turbulence-like noise
+
+Every generator also has a *chunk-seekable* form (:func:`make_field_chunk`):
+``make_field_chunk(name, dims, seed, zlo, zhi)`` returns exactly
+``make_field(name, dims, seed)`` restricted to z-planes ``[zlo, zhi)``,
+holding only O(chunk) memory — the synthetic back-end of
+``repro.stream.FunctionSource``, which lets the out-of-core engine run
+benchmark fields at resolutions where the full array would not fit.
+Deterministic fields evaluate their closed form on the slab coordinates;
+rng-backed fields replay the generator bit stream in O(chunk)-sized
+blocks, keeping only the requested planes (numpy ``Generator`` draws are
+split-invariant: drawing n then m values equals drawing n+m).  The one
+exception is ``pressure``, whose global FFT has no local form — its chunk
+path materializes the full field once and slices (documented, exact).
 """
 
 from __future__ import annotations
@@ -20,67 +33,101 @@ import numpy as np
 
 from repro.core.grid import Grid
 
+_BLOCK = 1 << 16  # rng replay block (elements); bounds chunk-path memory
 
-def _coords(g: Grid):
+
+def _coords_range(g: Grid, lo: int, hi: int):
+    """Normalized (x, y, z) coordinates of vids [lo, hi)."""
     nx, ny, nz = g.dims
-    v = np.arange(g.nv)
+    v = np.arange(lo, hi)
     x = (v % nx) / max(nx - 1, 1)
     y = ((v // nx) % ny) / max(ny - 1, 1)
     z = (v // (nx * ny)) / max(nz - 1, 1)
     return x, y, z
 
 
-def elevation(g: Grid, rng):
-    x, y, z = _coords(g)
+def _coords(g: Grid):
+    return _coords_range(g, 0, g.nv)
+
+
+def _replay(rng, draw: Callable, nv: int, lo: int, hi: int) -> np.ndarray:
+    """Draw ``nv`` values in blocks, returning only [lo, hi).
+
+    Always consumes exactly ``nv`` draws so the generator lands at the
+    same stream position as the full-field ``draw(nv)`` call — fields
+    that draw several full-grid arrays in sequence stay aligned."""
+    out = np.empty(hi - lo)
+    pos = 0
+    while pos < nv:
+        n = min(_BLOCK, nv - pos)
+        block = draw(n)
+        a, b = max(lo, pos), min(hi, pos + n)
+        if a < b:
+            out[a - lo: b - lo] = block[a - pos: b - pos]
+        pos += n
+    return out
+
+
+# --------------------------------------------------------------------------
+# field formulas: each as f(g, rng, lo, hi) over the vid range [lo, hi)
+# --------------------------------------------------------------------------
+
+def _elevation(g, rng, lo, hi):
+    x, y, z = _coords_range(g, lo, hi)
     return (x + 10 * y + 100 * z).astype(np.float32)
 
 
-def wavelet(g: Grid, rng):
-    x, y, z = _coords(g)
+def _wavelet(g, rng, lo, hi):
+    x, y, z = _coords_range(g, lo, hi)
     r2 = (x - .5) ** 2 + (y - .5) ** 2 + (z - .5) ** 2
     f = np.cos(12 * x) * np.cos(10 * y) * np.cos(8 * z) * np.exp(-2 * r2)
     return f.astype(np.float32)
 
 
-def random(g: Grid, rng):
-    return rng.standard_normal(g.nv).astype(np.float32)
+def _random(g, rng, lo, hi):
+    return _replay(rng, rng.standard_normal, g.nv, lo, hi).astype(np.float32)
 
 
-def isabel(g: Grid, rng):
-    x, y, z = _coords(g)
-    f = np.zeros(g.nv)
+def _isabel(g, rng, lo, hi):
+    x, y, z = _coords_range(g, lo, hi)
+    f = np.zeros(hi - lo)
     for _ in range(4):
         cx, cy, cz = rng.uniform(0.2, 0.8, 3)
         s = rng.uniform(0.08, 0.25)
         a = rng.uniform(0.5, 1.5)
         f += a * np.exp(-((x - cx) ** 2 + (y - cy) ** 2 + (z - cz) ** 2)
                         / (2 * s * s))
-    return (f + 0.01 * rng.standard_normal(g.nv)).astype(np.float32)
+    noise = _replay(rng, rng.standard_normal, g.nv, lo, hi)
+    return (f + 0.01 * noise).astype(np.float32)
 
 
-def backpack(g: Grid, rng):
-    x, y, z = _coords(g)
-    noise = rng.standard_normal(g.nv)
+def _backpack(g, rng, lo, hi):
+    x, y, z = _coords_range(g, lo, hi)
+    noise = _replay(rng, rng.standard_normal, g.nv, lo, hi)
     weight = np.exp(-4 * ((x - 0.15) ** 2 + (y - 0.2) ** 2 + z ** 2))
     return (noise * weight + 0.5 * x).astype(np.float32)
 
 
-def magnetic(g: Grid, rng):
-    x, y, z = _coords(g)
+def _magnetic(g, rng, lo, hi):
+    x, y, z = _coords_range(g, lo, hi)
     f = np.sin(20 * x) * np.sin(18 * y) * np.sin(16 * z)
-    f = f + 0.8 * rng.standard_normal(g.nv)
+    noise = _replay(rng, rng.standard_normal, g.nv, lo, hi)
+    f = f + 0.8 * noise
     return f.astype(np.float32)
 
 
-def truss(g: Grid, rng):
-    x, y, z = _coords(g)
+def _truss(g, rng, lo, hi):
+    x, y, z = _coords_range(g, lo, hi)
     f = np.sin(8 * np.pi * x) ** 2 + np.sin(8 * np.pi * y) ** 2 \
         + np.sin(8 * np.pi * z) ** 2
-    defects = 0.2 * rng.standard_normal(g.nv) * (rng.random(g.nv) < 0.02)
+    # two sequential full-grid draw streams; _replay keeps them aligned
+    amp = _replay(rng, rng.standard_normal, g.nv, lo, hi)
+    where = _replay(rng, rng.random, g.nv, lo, hi)
+    defects = 0.2 * amp * (where < 0.02)
     return (f + defects).astype(np.float32)
 
 
-def pressure(g: Grid, rng):
+def _pressure_full(g: Grid, rng) -> np.ndarray:
     nx, ny, nz = g.dims
     white = rng.standard_normal((nz, ny, nx))
     spec = np.fft.rfftn(white)
@@ -93,6 +140,37 @@ def pressure(g: Grid, rng):
     return f.reshape(-1).astype(np.float32)
 
 
+def _pressure(g, rng, lo, hi):
+    # global FFT: no local form — exact but NOT O(chunk) for partial reads
+    f = _pressure_full(g, rng)
+    return f[lo:hi]
+
+
+_RANGE_FIELDS: Dict[str, Callable] = {
+    "elevation": _elevation, "wavelet": _wavelet, "random": _random,
+    "isabel": _isabel, "backpack": _backpack, "magnetic": _magnetic,
+    "truss": _truss, "pressure": _pressure,
+}
+
+
+# public full-field forms (legacy signature: field(g, rng) -> (nv,) float32)
+
+def _full(name: str) -> Callable:
+    def field(g: Grid, rng):
+        return _RANGE_FIELDS[name](g, rng, 0, g.nv)
+    field.__name__ = name
+    return field
+
+
+elevation = _full("elevation")
+wavelet = _full("wavelet")
+random = _full("random")
+isabel = _full("isabel")
+backpack = _full("backpack")
+magnetic = _full("magnetic")
+truss = _full("truss")
+pressure = _full("pressure")
+
 FIELDS: Dict[str, Callable] = {
     "elevation": elevation, "wavelet": wavelet, "random": random,
     "isabel": isabel, "backpack": backpack, "magnetic": magnetic,
@@ -104,3 +182,20 @@ def make_field(name: str, dims, seed: int = 0) -> np.ndarray:
     g = Grid.of(*dims)
     rng = np.random.default_rng(seed)
     return FIELDS[name](g, rng)
+
+
+def make_field_chunk(name: str, dims, seed: int, zlo: int,
+                     zhi: int) -> np.ndarray:
+    """z-planes [zlo, zhi) of ``make_field(name, dims, seed)``, bit-exact.
+
+    Returns a (zhi - zlo, ny, nx) float32 volume computed from O(chunk)
+    memory (``pressure`` excepted — see module doc).  This is the seekable
+    generator behind ``repro.stream.FunctionSource.synthetic``."""
+    g = Grid.of(*dims)
+    nx, ny, nz = g.dims
+    if not (0 <= zlo < zhi <= nz):
+        raise IndexError(f"slab [{zlo}, {zhi}) out of range for nz={nz}")
+    rng = np.random.default_rng(seed)
+    plane = nx * ny
+    out = _RANGE_FIELDS[name](g, rng, zlo * plane, zhi * plane)
+    return out.reshape(zhi - zlo, ny, nx)

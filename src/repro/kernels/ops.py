@@ -23,6 +23,7 @@ from repro.core import gradient as GR
 from repro.core.grid import Grid
 from . import ref as REF
 from .lower_star import (fused_lower_star_gradient_pallas,
+                         fused_rows_from_halo_volume,
                          lower_star_gradient_pallas)
 
 BACKENDS = ("jax", "pallas", "pallas_prepass")
@@ -69,6 +70,46 @@ def gradient_hbm_model(dims, tile_z: int = 4, tile_y: int = 8,
     ty = max(1, min(tile_y, ny))
     overlap = (1 + 2 / tz) * (1 + 2 / ty) * (1 + 2 / nx)
     return {"prepass": 27 * w + 27 * w + w, "fused": w * overlap}
+
+
+@jax.jit
+def _halo_rows_jax(ext):
+    """Gather + pairing for the owned slab of a halo-extended key volume.
+
+    ext: (nzl+2, ny, nx) order/key volume whose first/last z-planes are
+    ghosts (-1 at the global boundary).  Jitted per shape; rank-free int64
+    keys compare exactly like dense ranks, so ``rank_bound=None``."""
+    nzh, ny, nx = ext.shape
+    eg = Grid.of(nx, ny, nzh)
+    nbrs = GR.neighbor_orders(eg, ext.reshape(-1), xp=jnp)
+    nbrs = nbrs.reshape(nzh, ny * nx, 27)[1:-1].reshape(-1, 27)
+    ov = ext[1:-1].reshape(-1)
+    return REF.lower_star_gradient_jnp(nbrs, ov, rank_bound=None)
+
+
+def lower_star_rows_halo(ext, backend: str = "jax"):
+    """Packed gradient rows for one halo-extended z-slab (streaming entry).
+
+    The out-of-core scheduler (``repro.stream``) calls this once per
+    chunk: ``ext`` is the chunk's (nzl+2, ny, nx) packed-key volume with
+    exchanged/loaded ghost planes (-1 outside the grid), exactly the
+    layout the fused kernel's overlapping BlockSpecs want.  Keys are
+    *rank-free* — full-width int64, so the int32/packed-key narrowings
+    stay off (``rank_bound=None``) on every path."""
+    ext = jnp.asarray(ext)
+    if backend == "jax":
+        return _halo_rows_jax(ext)
+    if backend == "pallas":
+        return fused_rows_from_halo_volume(ext, rank_bound=None)
+    if backend == "pallas_prepass":
+        nzh, ny, nx = ext.shape
+        eg = Grid.of(nx, ny, nzh)
+        nbrs = GR.neighbor_orders(eg, ext.reshape(-1), xp=jnp)
+        nbrs = nbrs.reshape(nzh, ny * nx, 27)[1:-1].reshape(-1, 27)
+        return lower_star_gradient_pallas(nbrs, ext[1:-1].reshape(-1),
+                                          interpret=True, rank_bound=None)
+    raise ValueError(f"unknown streaming backend {backend!r}; expected "
+                     f"{BACKENDS}")
 
 
 def lower_star_gradient(grid: Grid, order, backend: str = "jax",

@@ -51,11 +51,15 @@ class PipelineConfig:
 
 @dataclass
 class PipelineResult:
-    """Diagram + structured stage report (``stats`` = legacy flat view)."""
+    """Diagram + structured stage report (``stats`` = legacy flat view).
+
+    ``stream`` carries the :class:`repro.stream.StreamReport` byte/overlap
+    accounting when the result came from :meth:`diagram_stream`."""
 
     diagram: Diagram
     stats: Dict[str, float] = field(default_factory=dict)
     report: Optional[StageReport] = None
+    stream: Optional[object] = None
 
 
 class PersistencePipeline:
@@ -133,6 +137,67 @@ class PersistencePipeline:
         report = StageReport("pipeline")
         run_stages(state, self.config, report)
         return self._finish(state, report)
+
+    # -- streamed (out-of-core) path ---------------------------------------
+
+    def diagram_stream(self, source, *, chunk_z: Optional[int] = None,
+                       chunk_budget: Optional[int] = None) -> PipelineResult:
+        """Persistence diagram of a field served chunk-by-chunk.
+
+        ``source`` is a :class:`repro.stream.FieldSource` (in-memory
+        array, ``np.memmap`` file, or on-demand generator) — the field is
+        never materialized as one array.  The front-end streams
+        ghost-extended z-slabs through the backend's kernel on rank-free
+        packed (value, vid) keys, holding at most ~2 chunks of field data
+        (double buffering; asserted by ``result.stream``), and the
+        back-end pairing runs on the stitched critical set.  Output is
+        bit-identical to :meth:`diagram` on the same field.
+
+        ``chunk_z`` (owned z-planes per chunk) or ``chunk_budget`` (bytes
+        of loaded field per chunk) select the decomposition; the default
+        is a 64 MiB budget.  Requires a backend with the ``streamed``
+        capability."""
+        from repro.core.critical import extract_critical
+        from repro.stream import (SparseOrder, as_source, diagram_vertices,
+                                  stream_front)
+
+        if not self.backend.caps.streamed:
+            from .backends import available_backends
+            ok = sorted(n for n, b in available_backends().items()
+                        if b.caps.streamed)
+            raise ValueError(
+                f"backend {self.backend.name!r} has no streamed kernel; "
+                f"streaming backends: {ok}")
+        src = as_source(source)
+        grid = Grid.of(*src.dims)
+        if chunk_z is None and chunk_budget is None:
+            chunk_budget = 64 << 20
+        report = StageReport("pipeline")
+
+        with report.stage("gradient") as rep:
+            out = stream_front(src, kernel=self.backend.name,
+                               chunk_z=chunk_z, chunk_budget=chunk_budget,
+                               stage_report=rep)
+            rep.count(n_critical=sum(out.gf.n_critical().values()))
+
+        # the back-end compares orders, never their absolute values, so
+        # the dense key array stands in for the vertex order verbatim
+        state = PipelineState(grid, np.zeros(0, np.float32),
+                              order=out.keys, gf=out.gf)
+        with report.stage("extract_sort"):
+            state.ci = extract_critical(grid, out.gf, out.keys)
+        run_stages(state, self.config, report, stages=BACK_STAGES)
+
+        # exact global ranks, but only for the vertices the diagram
+        # touches (chunked counting pass — still no global argsort)
+        with report.stage("rank_translate"):
+            order = SparseOrder.from_keys(
+                out.keys, diagram_vertices(grid, state.pairs,
+                                           state.essential))
+        if self.config.distributed:
+            report.count(n_blocks=self.config.n_blocks)
+        dg = Diagram(grid, order, state.pairs, state.essential)
+        return PipelineResult(dg, report.flat(), report, stream=out.report)
 
     # -- batched path ------------------------------------------------------
 

@@ -59,6 +59,9 @@ class BackendCaps:
     batched: bool = False    # supports one-shot batched packed-row programs
     fused: bool = False      # stencil gather fused into the kernel (no
     #                          materialized (nv, 27) im2col tensor)
+    streamed: bool = False   # kernel accepts per-chunk halo volumes with
+    #                          rank-free keys (out-of-core front-end,
+    #                          PersistencePipeline.diagram_stream)
 
 
 @dataclass(frozen=True)
@@ -237,20 +240,21 @@ register_backend(Backend(
 
 register_backend(Backend(
     name="jax", gradient=_make_kernel_gradient("jax"),
-    caps=BackendCaps(jittable=True, batched=True),
+    caps=BackendCaps(jittable=True, batched=True, streamed=True),
     description="branchless masked-recomputation form, jit-compiled",
     batched_rows=lambda grid: _rows_fn(grid, "jax")))
 
 register_backend(Backend(
     name="pallas", gradient=_make_kernel_gradient("pallas"),
-    caps=BackendCaps(jittable=True, batched=True, fused=True),
+    caps=BackendCaps(jittable=True, batched=True, fused=True,
+                     streamed=True),
     description="fused halo-aware Pallas lower-star kernel "
                 "(interpret mode on CPU)",
     batched_rows=lambda grid: _rows_fn(grid, "pallas")))
 
 register_backend(Backend(
     name="pallas_prepass", gradient=_make_kernel_gradient("pallas_prepass"),
-    caps=BackendCaps(jittable=True, batched=True),
+    caps=BackendCaps(jittable=True, batched=True, streamed=True),
     description="im2col pre-pass + vertex-tiled Pallas kernel (fallback)",
     batched_rows=lambda grid: _rows_fn(grid, "pallas_prepass")))
 

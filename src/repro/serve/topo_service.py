@@ -14,6 +14,13 @@ queue; callers get ``concurrent.futures.Future``s.
     # or, synchronously:
     results = svc.map(fields)
 
+Failure isolation: a request that blows up only fails its *own* future.
+A failed batch is re-served request-by-request (so a poisoned field
+cannot take its batch siblings down), results land through
+cancellation-tolerant setters, and the worker thread survives any
+exception.  ``FieldSource`` requests (fields larger than memory) are
+accepted too and answered via ``PersistencePipeline.diagram_stream``.
+
 This is deliberately dependency-free (queue + thread): the seam where a
 real RPC front (async collectives, multi-host dispatch, result caching)
 plugs in later.
@@ -24,7 +31,7 @@ from __future__ import annotations
 import queue
 import threading
 import time
-from concurrent.futures import Future
+from concurrent.futures import Future, InvalidStateError
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence
 
@@ -32,6 +39,7 @@ import numpy as np
 
 from repro.core.grid import Grid
 from repro.pipeline import PersistencePipeline, PipelineResult
+from repro.stream.chunks import FieldSource
 
 
 @dataclass
@@ -43,22 +51,33 @@ class ServiceStats:
     batched_requests: int = 0        # requests answered in a batch of > 1
     max_batch: int = 0
     errors: int = 0
+    retried: int = 0                 # re-served alone after a batch failure
+    stream_requests: int = 0         # FieldSource requests (out-of-core)
 
     def as_dict(self) -> Dict[str, int]:
         return dict(requests=self.requests, batches=self.batches,
                     batched_requests=self.batched_requests,
-                    max_batch=self.max_batch, errors=self.errors)
+                    max_batch=self.max_batch, errors=self.errors,
+                    retried=self.retried,
+                    stream_requests=self.stream_requests)
 
 
 @dataclass
 class _Request:
-    f: np.ndarray
+    f: object                        # ndarray or FieldSource
     grid: Optional[Grid]
     future: Future = field(default_factory=Future)
 
     @property
+    def is_stream(self) -> bool:
+        return isinstance(self.f, FieldSource) \
+            and not isinstance(self.f, np.ndarray)
+
+    @property
     def shape_key(self):
         dims = self.grid.dims if self.grid is not None else None
+        if self.is_stream:
+            return ("stream", self.f.dims)
         return (self.f.shape, dims)
 
 
@@ -93,8 +112,14 @@ class TopoService:
     # -- client API --------------------------------------------------------
 
     def submit(self, f, grid: Optional[Grid] = None) -> Future:
-        """Enqueue one field; the Future resolves to a PipelineResult."""
-        req = _Request(np.asarray(f), grid)
+        """Enqueue one field; the Future resolves to a PipelineResult.
+
+        ``f`` may also be a :class:`repro.stream.FieldSource` — such
+        requests are answered out-of-core via ``diagram_stream`` (served
+        individually; batching amortizes compiled programs, which
+        streamed chunks already share)."""
+        is_src = isinstance(f, FieldSource) and not isinstance(f, np.ndarray)
+        req = _Request(f if is_src else np.asarray(f), grid)
         with self._lock:
             if self._closed:
                 raise RuntimeError("TopoService is closed")
@@ -154,9 +179,29 @@ class TopoService:
             stop = batch[-1] is None
             reqs = [r for r in batch if r is not None]
             if reqs:
-                self._serve(reqs)
+                try:
+                    self._serve(reqs)
+                except BaseException as e:  # the worker must outlive ANY
+                    # request failure: fail whatever is still unresolved
+                    # and keep draining the queue
+                    for r in reqs:
+                        if _fail(r.future, e):
+                            self.stats.errors += 1
             if stop:
                 return
+
+    def _serve_one(self, r: _Request) -> None:
+        """Answer a single request, routing sources to the streamed path."""
+        try:
+            if r.is_stream:
+                res = self.pipeline.diagram_stream(r.f)
+            else:
+                res = self.pipeline.diagram(r.f, grid=r.grid)
+        except Exception as e:
+            self.stats.errors += 1
+            _fail(r.future, e)
+        else:
+            _resolve(r.future, res)
 
     def _serve(self, reqs: List[_Request]) -> None:
         self.stats.requests += len(reqs)
@@ -166,16 +211,49 @@ class TopoService:
             groups.setdefault(r.shape_key, []).append(r)
         for group in groups.values():
             self.stats.batches += 1
+            if group[0].is_stream:
+                # streams are served one by one (no batching to report)
+                self.stats.stream_requests += len(group)
+                for r in group:
+                    self._serve_one(r)
+                continue
             self.stats.max_batch = max(self.stats.max_batch, len(group))
             if len(group) > 1:
                 self.stats.batched_requests += len(group)
             try:
                 results = self.pipeline.diagrams(
                     [r.f for r in group], grid=group[0].grid)
-            except Exception as e:  # pragma: no cover - error propagation
-                self.stats.errors += len(group)
+            except Exception:
+                # a failed batch is re-served request-by-request so one
+                # poisoned field fails only its own future; siblings in
+                # the batch still get answers
+                self.stats.retried += len(group)
                 for r in group:
-                    r.future.set_exception(e)
+                    self._serve_one(r)
                 continue
             for r, res in zip(group, results):
-                r.future.set_result(res)
+                _resolve(r.future, res)
+
+
+def _resolve(future: Future, result) -> None:
+    """set_result that tolerates cancelled or already-settled futures."""
+    if future.done():
+        return
+    try:
+        if future.set_running_or_notify_cancel():
+            future.set_result(result)
+    except (RuntimeError, InvalidStateError):
+        pass  # settled concurrently; never let delivery kill the worker
+
+
+def _fail(future: Future, exc: BaseException) -> bool:
+    """set_exception unless the future is already done/cancelled."""
+    if future.done():
+        return False
+    try:
+        if future.set_running_or_notify_cancel():
+            future.set_exception(exc)
+            return True
+    except (RuntimeError, InvalidStateError):
+        pass
+    return False

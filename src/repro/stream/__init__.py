@@ -1,0 +1,14 @@
+"""Out-of-core streaming execution engine (paper Sec. V-C analogue).
+
+Chunked field sources + z-slab ghost decomposition (``chunks``), the
+double-buffered block scheduler running the fused/jax gradient kernels
+per chunk on rank-free (value, vid) keys (``scheduler``), and the
+``PersistencePipeline.diagram_stream`` front door in ``repro.pipeline``.
+"""
+
+from .chunks import (ArraySource, Chunk, FieldSource,  # noqa: F401
+                     FunctionSource, MemmapSource, as_source,
+                     pack_value_keys, plan_chunks, sortable32)
+from .scheduler import (SparseOrder, StreamReport,  # noqa: F401
+                        StreamResult, diagram_vertices, ranks_for_vids,
+                        stream_front)

@@ -1,0 +1,273 @@
+"""Chunked field sources + z-slab block decomposition for out-of-core runs.
+
+The paper computes persistence for fields far larger than any single
+memory (6G vertices, Sec. VI): both DIPHA and DDMS rest on a block
+decomposition with ghost layers.  This module is the jax_pallas analogue
+of the *data* half of that story:
+
+- :class:`FieldSource` — the protocol the streaming engine reads from: a
+  shaped scalar field that can serve any contiguous **z-slab** of planes
+  on demand, without ever materializing the whole array.  Shipped
+  sources: an in-memory array (reference/testing), an ``np.memmap``
+  backed file (fields on disk), and a pure-function source that
+  *generates* a chunk on demand (synthetic benchmark fields at any
+  resolution — see ``repro.fields.make_field_chunk``).
+- :func:`plan_chunks` — the z-slab decomposition with 1-vertex ghost
+  layers: every chunk owns ``[zlo, zhi)`` planes and reads one extra
+  plane on each side (clipped at the global boundary), which is exactly
+  the halo the fused lower-star kernel's overlapping BlockSpecs expect.
+- :func:`pack_value_keys` — rank-free packed ``(value, vid)`` keys: a
+  monotone injection of the global vertex order into non-negative int64
+  words.  The kernels only ever *compare* orders, so these keys replace
+  dense ranks bit-identically — and unlike ranks they are computable
+  per chunk with zero global communication (no global argsort, the
+  out-of-core analogue of ``repro.distributed.order.rankfree_keys``).
+
+Key layout: ``((sortable32(f) + 2^31) << 31) | vid`` — 32 bits of
+sign-magnitude-folded float32 above 31 bits of vertex id.  All keys are
+``>= 0`` so the kernels' ``-1`` outside-the-grid sentinel stays below
+every real key.  Constraints (checked): float32 values, ``nv < 2^31``
+(larger grids need a two-word key; the fold maps -0.0 and +0.0 to the
+same word, so ties break by vid exactly like the stable argsort in
+``vertex_order``).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, List, Optional, Protocol, Tuple, runtime_checkable
+
+import numpy as np
+
+from repro.core.grid import Grid
+
+MAX_STREAM_NV = 2 ** 31  # vid must fit 31 bits of the packed key
+
+
+# --------------------------------------------------------------------------
+# rank-free packed keys
+# --------------------------------------------------------------------------
+
+def sortable32(f: np.ndarray) -> np.ndarray:
+    """Monotone float32 -> int64 map (IEEE754 sign-magnitude fold).
+
+    Order-preserving, and ``-0.0`` folds onto ``+0.0`` so float ties
+    (including signed zeros) are broken purely by vid downstream."""
+    f = np.ascontiguousarray(f, dtype=np.float32)
+    fi = f.view(np.int32).astype(np.int64)
+    return np.where(fi < 0, -(fi + 2 ** 31), fi)
+
+
+def pack_value_keys(values: np.ndarray, vids: np.ndarray) -> np.ndarray:
+    """Non-negative int64 keys ordered exactly like (value, vid).
+
+    ``values`` float32, ``vids`` int64 global vertex ids < 2^31.  The
+    result is order-isomorphic to ``vertex_order`` ranks: sorting keys
+    is sorting (value, vid) lexicographically."""
+    vids = np.asarray(vids, dtype=np.int64)
+    return ((sortable32(values).reshape(-1) + 2 ** 31) << np.int64(31)) | vids
+
+
+# --------------------------------------------------------------------------
+# FieldSource protocol + implementations
+# --------------------------------------------------------------------------
+
+@runtime_checkable
+class FieldSource(Protocol):
+    """A scalar field served z-slab by z-slab.
+
+    ``dims`` is the grid vertex shape ``(nx, ny, nz)`` (vid = x + nx*(y +
+    ny*z), i.e. numpy plane layout ``[z, y, x]``).  ``read_slab(zlo,
+    zhi)`` returns a fresh float32 array of shape ``(zhi - zlo, ny, nx)``
+    — the only access path the streaming engine uses, so any storage
+    (array, file, object store, generator) plugs in here."""
+
+    @property
+    def dims(self) -> Tuple[int, int, int]: ...
+
+    def read_slab(self, zlo: int, zhi: int) -> np.ndarray: ...
+
+
+def _check_dims(dims) -> Tuple[int, int, int]:
+    g = Grid.of(*dims)
+    if g.nv >= MAX_STREAM_NV:
+        raise ValueError(
+            f"streamed grids need nv < 2^31 for packed (value, vid) keys; "
+            f"got nv={g.nv} for dims {g.dims}")
+    return g.dims
+
+
+def _check_slab(dims, zlo: int, zhi: int) -> None:
+    nz = dims[2]
+    if not (0 <= zlo < zhi <= nz):
+        raise IndexError(f"slab [{zlo}, {zhi}) out of range for nz={nz}")
+
+
+class ArraySource:
+    """In-memory field as a :class:`FieldSource` (reference / testing).
+
+    Accepts a flat (nv,) field with explicit ``dims`` or a (nz, ny, nx)
+    volume.  float32 only — the packed keys are exact for float32."""
+
+    def __init__(self, f: np.ndarray, dims: Optional[Tuple[int, ...]] = None):
+        f = np.asarray(f)
+        if dims is None:
+            if f.ndim != 3:
+                raise ValueError(
+                    "ArraySource needs dims= for flat fields; pass a "
+                    "(nz, ny, nx) volume to infer them")
+            dims = f.shape[::-1]
+        self._dims = _check_dims(dims)
+        if f.dtype != np.float32:
+            raise TypeError(
+                f"stream sources are float32-only (packed keys are exact "
+                f"for float32); got {f.dtype}")
+        nx, ny, nz = self._dims
+        self._f3 = f.reshape(nz, ny, nx)
+
+    @property
+    def dims(self) -> Tuple[int, int, int]:
+        return self._dims
+
+    def read_slab(self, zlo: int, zhi: int) -> np.ndarray:
+        _check_slab(self._dims, zlo, zhi)
+        return np.array(self._f3[zlo:zhi], dtype=np.float32)
+
+
+class MemmapSource:
+    """A raw float32 field file read through ``np.memmap``.
+
+    The file holds the field in vid order (x fastest, z slowest) at
+    ``offset`` bytes; only the planes of each requested slab are paged
+    in, and ``read_slab`` copies them into a fresh array so no memmap
+    pages stay pinned by downstream code."""
+
+    def __init__(self, path, dims, *, offset: int = 0):
+        self._dims = _check_dims(dims)
+        self.path = path
+        self.offset = int(offset)
+        self._mm: Optional[np.memmap] = None
+
+    @property
+    def dims(self) -> Tuple[int, int, int]:
+        return self._dims
+
+    def _map(self) -> np.memmap:
+        if self._mm is None:
+            nx, ny, nz = self._dims
+            self._mm = np.memmap(self.path, dtype=np.float32, mode="r",
+                                 offset=self.offset, shape=(nz, ny, nx))
+        return self._mm
+
+    def read_slab(self, zlo: int, zhi: int) -> np.ndarray:
+        _check_slab(self._dims, zlo, zhi)
+        return np.array(self._map()[zlo:zhi], dtype=np.float32)
+
+    @staticmethod
+    def write(path, f: np.ndarray, dims=None) -> "MemmapSource":
+        """Dump a field to a raw float32 file and return a source on it."""
+        src = ArraySource(np.asarray(f, dtype=np.float32), dims)
+        nx, ny, nz = src.dims
+        np.asarray(src.read_slab(0, nz)).tofile(path)
+        return MemmapSource(path, src.dims)
+
+
+class FunctionSource:
+    """Pure-function source: ``fn(zlo, zhi) -> (zhi-zlo, ny, nx)`` float32.
+
+    The chunk is *generated* on demand — the field never exists anywhere.
+    ``FunctionSource.synthetic(name, dims, seed)`` wraps the
+    chunk-seekable benchmark generators (``repro.fields
+    .make_field_chunk``), which reproduce ``make_field`` slices exactly."""
+
+    def __init__(self, fn: Callable[[int, int], np.ndarray], dims):
+        self._dims = _check_dims(dims)
+        self._fn = fn
+
+    @property
+    def dims(self) -> Tuple[int, int, int]:
+        return self._dims
+
+    def read_slab(self, zlo: int, zhi: int) -> np.ndarray:
+        _check_slab(self._dims, zlo, zhi)
+        nx, ny, _ = self._dims
+        out = np.asarray(self._fn(zlo, zhi), dtype=np.float32)
+        want = (zhi - zlo, ny, nx)
+        if out.shape != want:
+            raise ValueError(
+                f"chunk function returned shape {out.shape}, want {want}")
+        return out
+
+    @staticmethod
+    def synthetic(name: str, dims, seed: int = 0) -> "FunctionSource":
+        from repro.fields import make_field_chunk
+        g = Grid.of(*dims)
+        return FunctionSource(
+            lambda zlo, zhi: make_field_chunk(name, g.dims, seed, zlo, zhi),
+            g.dims)
+
+
+def as_source(f, dims=None) -> FieldSource:
+    """Coerce ndarray inputs to an :class:`ArraySource`; pass sources through."""
+    if isinstance(f, (ArraySource, MemmapSource, FunctionSource)):
+        return f
+    if isinstance(f, np.ndarray):
+        return ArraySource(f, dims)
+    if isinstance(f, FieldSource):   # structural: any read_slab/dims object
+        return f
+    raise TypeError(
+        f"expected a FieldSource or ndarray, got {type(f).__name__}")
+
+
+# --------------------------------------------------------------------------
+# z-slab decomposition with ghost layers
+# --------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class Chunk:
+    """One z-slab: owned planes [zlo, zhi), loaded planes [glo, ghi).
+
+    The loaded range extends one ghost plane past each owned boundary
+    (clipped at the grid), giving the lower-star kernel the complete
+    27-neighborhood of every owned vertex."""
+
+    index: int
+    zlo: int
+    zhi: int
+    glo: int
+    ghi: int
+
+    @property
+    def nz(self) -> int:
+        return self.zhi - self.zlo
+
+    def vid0(self, dims) -> int:
+        """Global vid of the first owned vertex."""
+        return self.zlo * dims[0] * dims[1]
+
+    def load_bytes(self, dims) -> int:
+        """float32 bytes of the loaded (ghost-extended) slab."""
+        return (self.ghi - self.glo) * dims[0] * dims[1] * 4
+
+
+def plan_chunks(dims, *, chunk_z: Optional[int] = None,
+                chunk_budget: Optional[int] = None) -> List[Chunk]:
+    """Decompose the grid into z-slabs of ``chunk_z`` owned planes.
+
+    ``chunk_budget`` (bytes of loaded field data per chunk, ghosts
+    included) is the alternative knob: the largest ``chunk_z`` whose
+    ghost-extended slab fits the budget (always >= 1 plane).  Exactly one
+    of the two must be given."""
+    dims = Grid.of(*dims).dims
+    nx, ny, nz = dims
+    plane_bytes = nx * ny * 4
+    if (chunk_z is None) == (chunk_budget is None):
+        raise ValueError("pass exactly one of chunk_z= / chunk_budget=")
+    if chunk_z is None:
+        chunk_z = max(1, int(chunk_budget) // plane_bytes - 2)
+    chunk_z = max(1, min(int(chunk_z), nz))
+    out = []
+    for i, zlo in enumerate(range(0, nz, chunk_z)):
+        zhi = min(zlo + chunk_z, nz)
+        out.append(Chunk(i, zlo, zhi, max(0, zlo - 1), min(nz, zhi + 1)))
+    return out

@@ -226,6 +226,94 @@ def test_topo_service_error_propagates():
             fut.result(timeout=30)
 
 
+def test_topo_service_error_isolation():
+    """Regression: a failing request must fail only its own future — the
+    worker thread and the rest of the batch keep going."""
+    from repro.serve import TopoService
+    g, f = _field(seed=21)
+    with TopoService(backend="np", max_batch=8, max_wait_s=0.1) as svc:
+        good = [svc.submit(f.reshape(g.dims[::-1])) for _ in range(2)]
+        bad = svc.submit(np.zeros(13))         # its own (failing) group
+        for ft in good:
+            assert ft.result(timeout=120).diagram is not None
+        with pytest.raises(ValueError, match="cannot infer"):
+            bad.result(timeout=30)
+        # the worker survived the failure and still serves
+        after = svc.submit(f.reshape(g.dims[::-1])).result(timeout=120)
+        assert after.diagram is not None
+        assert svc.stats.errors == 1
+
+
+def test_topo_service_batch_failure_falls_back_per_request():
+    """Regression: if the batched call explodes, every sibling is
+    re-served individually and still gets a result."""
+    from repro.serve import TopoService
+    g, f = _field(seed=22)
+    svc = TopoService(backend="jax", max_batch=8, max_wait_s=0.2)
+    try:
+        def boom(*a, **k):
+            raise RuntimeError("batched program crashed")
+        svc.pipeline.diagrams = boom
+        futs = [svc.submit(_field(seed=30 + i)[1].reshape(g.dims[::-1]))
+                for i in range(3)]
+        ress = [ft.result(timeout=300) for ft in futs]
+        assert all(r.diagram is not None for r in ress)
+        assert svc.stats.retried == 3
+        assert svc.stats.errors == 0
+    finally:
+        svc.close()
+
+
+def test_topo_service_recovery_skips_resolved_siblings():
+    """Regression: a BaseException escaping _serve after one group was
+    already answered must not re-fail the finished futures (that used to
+    raise inside the recovery handler and kill the worker, leaving the
+    poisoned future pending forever)."""
+    from repro.serve import TopoService
+    g, f = _field(seed=24)
+    bad_dims = (4, 4, 4)
+    svc = TopoService(backend="np", max_batch=8, max_wait_s=0.3)
+    try:
+        orig = svc.pipeline.diagrams
+
+        def maybe_boom(fields, grid=None):
+            if np.asarray(fields[0]).shape == bad_dims:
+                raise SystemExit("escapes the Exception handler")
+            return orig(fields, grid=grid)
+
+        svc.pipeline.diagrams = maybe_boom
+        good = svc.submit(f.reshape(g.dims[::-1]))          # group 1
+        bad = svc.submit(np.zeros(bad_dims, np.float32))    # group 2 booms
+        assert good.result(timeout=120).diagram is not None
+        with pytest.raises(SystemExit):
+            bad.result(timeout=30)
+        svc.pipeline.diagrams = orig
+        ok = svc.submit(f.reshape(g.dims[::-1])).result(timeout=120)
+        assert ok.diagram is not None                       # worker alive
+    finally:
+        svc.close()
+
+
+def test_topo_service_worker_survives_nonstandard_errors():
+    """Even an exception escaping _serve (e.g. from grouping) must not
+    kill the worker: remaining futures fail, later requests succeed."""
+    from repro.serve import TopoService
+    g, f = _field(seed=23)
+    svc = TopoService(backend="np", max_batch=4, max_wait_s=0.05)
+    try:
+        def explode(*a, **k):
+            raise KeyboardInterrupt("worst case")
+        svc._serve = explode           # simulate a harness-level failure
+        fut = svc.submit(f.reshape(g.dims[::-1]))
+        with pytest.raises(BaseException):
+            fut.result(timeout=30)
+        del svc._serve                 # restore the real method
+        ok = svc.submit(f.reshape(g.dims[::-1])).result(timeout=120)
+        assert ok.diagram is not None
+    finally:
+        svc.close()
+
+
 # --------------------------------------------------------------------------
 # config validation
 # --------------------------------------------------------------------------

@@ -1,11 +1,13 @@
-"""Property-based tests (hypothesis) on the system's core invariants."""
+"""Property-based tests on the system's core invariants.
+
+With ``hypothesis`` installed these are real property tests (random
+shrinking search over grids and fields).  Without it — the CI container
+does not ship it — the same properties run as deterministic seeded fuzz
+over a fixed case matrix drawn from the identical search space, so this
+file is never a full skip."""
 
 import numpy as np
 import pytest
-
-hypothesis = pytest.importorskip(
-    "hypothesis", reason="optional dependency 'hypothesis' not installed")
-from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core.diagram import diff_report, same_offdiagonal
 from repro.core.dms import compute_dms, oracle_to_diagram
@@ -13,42 +15,24 @@ from repro.core.gradient import check_gradient_valid, compute_gradient_np
 from repro.core.grid import Grid, vertex_order
 from repro.core.reduction import compute_oracle
 
-
-dims_strategy = st.one_of(
-    st.tuples(st.integers(2, 14)),
-    st.tuples(st.integers(2, 6), st.integers(2, 6)),
-    st.tuples(st.integers(2, 4), st.integers(2, 4), st.integers(2, 4)),
-)
-
-
-@st.composite
-def grid_and_field(draw):
-    dims = draw(dims_strategy)
-    g = Grid.of(*dims)
-    seed = draw(st.integers(0, 2**31 - 1))
-    rng = np.random.default_rng(seed)
-    # integer-valued fields exercise the tie-breaking (simulation of
-    # simplicity) path; float fields exercise the generic path
-    if draw(st.booleans()):
-        f = rng.integers(0, max(2, g.nv // 3), size=g.nv).astype(np.float64)
-    else:
-        f = rng.standard_normal(g.nv)
-    return g, f
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
 
 
-@given(grid_and_field())
-@settings(max_examples=25, deadline=None)
-def test_gradient_always_valid(gx):
-    g, f = gx
+# --------------------------------------------------------------------------
+# the properties (shared by both harnesses)
+# --------------------------------------------------------------------------
+
+def check_gradient_always_valid(g: Grid, f: np.ndarray) -> None:
     order = vertex_order(f)
     gf = compute_gradient_np(g, order)
     check_gradient_valid(g, gf, order)
 
 
-@given(grid_and_field())
-@settings(max_examples=15, deadline=None)
-def test_dms_matches_oracle(gx):
-    g, f = gx
+def check_dms_matches_oracle(g: Grid, f: np.ndarray) -> None:
     res = compute_dms(g, f)
     orc = oracle_to_diagram(compute_oracle(g, f), g)
     assert same_offdiagonal(res.diagram, orc), diff_report(res.diagram, orc)
@@ -57,15 +41,92 @@ def test_dms_matches_oracle(gx):
                               orc.essential_orders(p))
 
 
-@given(grid_and_field())
-@settings(max_examples=15, deadline=None)
-def test_diagram_invariants(gx):
+def check_diagram_invariants(g: Grid, f: np.ndarray) -> None:
     """Birth < death in order space; Betti numbers of a box; pair counts
     bounded by critical counts (Morse inequalities)."""
-    g, f = gx
     res = compute_dms(g, f)
     dg = res.diagram
     assert dg.betti() == {k: (1 if k == 0 else 0) for k in range(g.dim + 1)}
     for p in range(g.dim):
         pts = dg.points_order(p)
         assert (pts[:, 0] < pts[:, 1]).all()
+
+
+# --------------------------------------------------------------------------
+# deterministic seeded-fuzz case matrix (mirrors the hypothesis strategy)
+# --------------------------------------------------------------------------
+
+def _fuzz_case(seed: int):
+    """One (grid, field) draw from the same space the strategy samples:
+    1-D/2-D/3-D dims, integer-valued (tie-heavy) or float fields."""
+    rng = np.random.default_rng(1000 + seed)
+    ndim = int(rng.integers(1, 4))
+    if ndim == 1:
+        dims = (int(rng.integers(2, 15)),)
+    elif ndim == 2:
+        dims = tuple(int(x) for x in rng.integers(2, 7, size=2))
+    else:
+        dims = tuple(int(x) for x in rng.integers(2, 5, size=3))
+    g = Grid.of(*dims)
+    if rng.integers(0, 2):
+        f = rng.integers(0, max(2, g.nv // 3), size=g.nv).astype(np.float64)
+    else:
+        f = rng.standard_normal(g.nv)
+    return g, f
+
+
+FUZZ_GRADIENT = 25
+FUZZ_DMS = 15
+
+
+if HAVE_HYPOTHESIS:
+
+    dims_strategy = st.one_of(
+        st.tuples(st.integers(2, 14)),
+        st.tuples(st.integers(2, 6), st.integers(2, 6)),
+        st.tuples(st.integers(2, 4), st.integers(2, 4), st.integers(2, 4)),
+    )
+
+    @st.composite
+    def grid_and_field(draw):
+        dims = draw(dims_strategy)
+        g = Grid.of(*dims)
+        seed = draw(st.integers(0, 2**31 - 1))
+        rng = np.random.default_rng(seed)
+        # integer-valued fields exercise the tie-breaking (simulation of
+        # simplicity) path; float fields exercise the generic path
+        if draw(st.booleans()):
+            f = rng.integers(0, max(2, g.nv // 3),
+                             size=g.nv).astype(np.float64)
+        else:
+            f = rng.standard_normal(g.nv)
+        return g, f
+
+    @given(grid_and_field())
+    @settings(max_examples=FUZZ_GRADIENT, deadline=None)
+    def test_gradient_always_valid(gx):
+        check_gradient_always_valid(*gx)
+
+    @given(grid_and_field())
+    @settings(max_examples=FUZZ_DMS, deadline=None)
+    def test_dms_matches_oracle(gx):
+        check_dms_matches_oracle(*gx)
+
+    @given(grid_and_field())
+    @settings(max_examples=FUZZ_DMS, deadline=None)
+    def test_diagram_invariants(gx):
+        check_diagram_invariants(*gx)
+
+else:
+
+    @pytest.mark.parametrize("seed", range(FUZZ_GRADIENT))
+    def test_gradient_always_valid(seed):
+        check_gradient_always_valid(*_fuzz_case(seed))
+
+    @pytest.mark.parametrize("seed", range(FUZZ_DMS))
+    def test_dms_matches_oracle(seed):
+        check_dms_matches_oracle(*_fuzz_case(seed))
+
+    @pytest.mark.parametrize("seed", range(FUZZ_DMS))
+    def test_diagram_invariants(seed):
+        check_diagram_invariants(*_fuzz_case(seed))
