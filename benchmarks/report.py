@@ -9,6 +9,8 @@ BENCH_gradient.json).
         [--quick] [--out BENCH_gradient.json]
     PYTHONPATH=src python -m benchmarks.report --section stream \
         [--quick] [--out BENCH_stream.json]
+    PYTHONPATH=src python -m benchmarks.report --section api \
+        [--quick] [--out BENCH_api.json]
 
 The pipeline section runs ``PersistencePipeline`` over a fixed field set
 and dumps every ``StageReport`` (nested per-stage wall times + algorithm
@@ -326,16 +328,116 @@ def stream_bench(out_path, quick=False):
               f"overlap={sr['overlap_s']*1e3:.1f}ms")
 
 
+def api_bench(out_path, quick=False):
+    """Declarative request-path overhead + wire format; BENCH_api.json.
+
+    Interleaves the legacy entry point (``pipe.diagram``, now a shim)
+    with the declarative path (``pipe.run(TopoRequest(...))``) on a
+    warmed pipeline and compares medians — the request/lower/compile
+    resolver is pure Python and must stay within 5% of the legacy call
+    (asserted).  Also records plan-cache hit counters and the wire
+    round-trip (``to_bytes``/``from_bytes``) size and time.
+    """
+    import statistics
+
+    import numpy as np
+
+    from repro.core.grid import Grid
+    from repro.fields import make_field
+    from repro.pipeline import (DiagramResult, PersistencePipeline,
+                                PlanCache, TopoRequest)
+
+    dims = (8, 8, 8) if quick else (16, 16, 16)
+    reps = 5 if quick else 9
+    g = Grid.of(*dims)
+    f = make_field("wavelet", dims, seed=0)
+    cache = PlanCache()
+    pipe = PersistencePipeline(backend="jax", plan_cache=cache)
+    req = TopoRequest(field=f, grid=g)
+    pipe.diagram(f, grid=g)      # warm-up: compile + trace out of the loop
+    pipe.run(req)
+
+    def timed(fn):
+        t0 = time.perf_counter()
+        out = fn()
+        return time.perf_counter() - t0, out
+
+    legacy, declarative = [], []
+    res = None
+    for i in range(reps):        # interleaved A/B, order alternated to
+        # cancel systematic first-runner bias (this box has ~2x noise)
+        if i % 2 == 0:
+            legacy.append(timed(lambda: pipe.diagram(f, grid=g))[0])
+            dt, res = timed(lambda: pipe.run(req))
+            declarative.append(dt)
+        else:
+            dt, res = timed(lambda: pipe.run(req))
+            declarative.append(dt)
+            legacy.append(timed(lambda: pipe.diagram(f, grid=g))[0])
+    m_leg = min(legacy)
+    m_dec = min(declarative)
+    med = {"legacy": statistics.median(legacy),
+           "request": statistics.median(declarative)}
+
+    # The 5% gate measures the *added* request-path machinery directly
+    # (request resolve -> lower -> compile on a warm cache) against the
+    # end-to-end time: on a box with ~2x run-to-run variance, the A/B
+    # end-to-end delta above is dominated by noise (both entry points
+    # execute the same resolver), so it is recorded but not gated.
+    n_res = 200
+    t0 = time.perf_counter()
+    for _ in range(n_res):
+        pipe.lower(req).compile(pipe.plan_cache)
+    resolver_s = (time.perf_counter() - t0) / n_res
+    overhead = resolver_s / m_leg
+
+    t0 = time.perf_counter()
+    blob = res.to_bytes()
+    enc_s = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    back = DiagramResult.from_bytes(blob)
+    dec_s = time.perf_counter() - t0
+    assert back.betti() == res.betti()
+
+    doc = {"schema": "ddms-api-bench/v1",
+           "platform": platform.platform(),
+           "python": platform.python_version(),
+           "quick": bool(quick),
+           "dims": list(dims), "reps": reps,
+           "legacy_min_s": m_leg, "request_min_s": m_dec,
+           "legacy_median_s": med["legacy"],
+           "request_median_s": med["request"],
+           "resolver_s": resolver_s,
+           "request_overhead_frac": overhead,
+           "plan_cache": cache.stats(),
+           "wire": {"bytes": len(blob), "encode_s": enc_s,
+                    "decode_s": dec_s,
+                    "pairs": int(sum(len(res.pairs(p, min_persistence=0))
+                                     for p in range(g.dim)))}}
+    Path(out_path).write_text(json.dumps(doc, indent=1))
+    print(f"wrote {out_path}: legacy={m_leg*1e3:.2f}ms "
+          f"request={m_dec*1e3:.2f}ms "
+          f"resolver={resolver_s*1e6:.0f}us ({overhead*100:.3f}% of call) "
+          f"wire={len(blob)}B enc={enc_s*1e6:.0f}us dec={dec_s*1e6:.0f}us "
+          f"cache={cache.stats()}")
+    assert overhead < 0.05, \
+        f"request-path overhead {overhead*100:.2f}% exceeds the 5% budget"
+    # one compile per (dims, backend, n_blocks) across all of the above
+    assert cache.build_counts[(g.dims, "jax", 1)] == 1
+    return doc
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--dir", default="results/dryrun")
     ap.add_argument("--section", default="all",
                     choices=["all", "roofline", "dryrun", "pipeline",
-                             "gradient", "stream"])
+                             "gradient", "stream", "api"])
     ap.add_argument("--out", default=None,
-                    help="output path for --section pipeline/gradient/stream")
+                    help="output path for --section "
+                         "pipeline/gradient/stream/api")
     ap.add_argument("--quick", action="store_true",
-                    help="small sizes for CI smoke (gradient/stream)")
+                    help="small sizes for CI smoke (gradient/stream/api)")
     args = ap.parse_args()
     if args.section == "pipeline":
         pipeline_bench(args.out or "BENCH_pipeline.json")
@@ -345,6 +447,9 @@ def main():
         return
     if args.section == "stream":
         stream_bench(args.out or "BENCH_stream.json", quick=args.quick)
+        return
+    if args.section == "api":
+        api_bench(args.out or "BENCH_api.json", quick=args.quick)
         return
     recs = load(args.dir)
     if args.section in ("all", "dryrun"):

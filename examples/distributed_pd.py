@@ -31,7 +31,7 @@ import numpy as np  # noqa: E402
 from repro.core.diagram import same_offdiagonal  # noqa: E402
 from repro.core.grid import Grid  # noqa: E402
 from repro.fields import make_field  # noqa: E402
-from repro.pipeline import PersistencePipeline  # noqa: E402
+from repro.pipeline import PersistencePipeline, TopoRequest  # noqa: E402
 from repro.stream import MemmapSource  # noqa: E402
 
 
@@ -42,7 +42,7 @@ def stream_demo(g: Grid, f: np.ndarray, ref) -> None:
         path = os.path.join(td, "field.f32")
         src = MemmapSource.write(path, f.reshape(nz, ny, nx))
         pipe = PersistencePipeline(backend="jax")
-        res = pipe.diagram_stream(src, chunk_z=args.chunk_z)
+        res = pipe.run(TopoRequest(field=src, chunk_z=args.chunk_z))
         sr = res.stream
         print(f"streamed from {path}: {sr.n_chunks} chunks of "
               f"{sr.chunk_z} planes, peak resident field bytes "
@@ -60,11 +60,13 @@ def main():
     print(f"devices={args.devices} field={args.field} dims={g.dims}")
 
     # distributed front + back ends vs the sequential reference, both
-    # through the facade (backend registry picks the engines)
-    res = PersistencePipeline(backend="shardmap", n_blocks=args.devices,
-                              distributed=True).diagram(f, grid=g)
-    ref = PersistencePipeline(backend="jax",
-                              distributed=False).diagram(f, grid=g)
+    # through the declarative front door (one resolver, all paths)
+    ddms = PersistencePipeline(backend="shardmap", n_blocks=args.devices,
+                               distributed=True)
+    print(ddms.lower(TopoRequest(field=f, grid=g)).describe())
+    res = ddms.run(TopoRequest(field=f, grid=g))
+    ref = PersistencePipeline(backend="jax", distributed=False).run(
+        TopoRequest(field=f, grid=g))
     print(f"front-end on {args.devices} devices: "
           f"criticals = {res.stats.get('n_critical')}")
     ok = same_offdiagonal(res.diagram, ref.diagram)

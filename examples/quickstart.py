@@ -1,5 +1,5 @@
 """Quickstart: compute the persistence diagram of a 3-D scalar field with
-the ``PersistencePipeline`` facade and verify it against the
+the declarative ``TopoRequest`` front door and verify it against the
 boundary-matrix reduction oracle.
 
     PYTHONPATH=src python examples/quickstart.py [--dims 12 12 12]
@@ -16,7 +16,7 @@ from repro.core.dms import oracle_to_diagram  # noqa: E402
 from repro.core.grid import Grid  # noqa: E402
 from repro.core.reduction import compute_oracle  # noqa: E402
 from repro.fields import make_field  # noqa: E402
-from repro.pipeline import PersistencePipeline  # noqa: E402
+from repro.pipeline import PersistencePipeline, TopoRequest  # noqa: E402
 
 
 def main():
@@ -25,25 +25,33 @@ def main():
     ap.add_argument("--field", default="wavelet")
     ap.add_argument("--backend", default="jax",
                     help="pipeline backend: np | jax | pallas | shardmap")
+    ap.add_argument("--top-k", type=int, default=5,
+                    help="how many most-persistent pairs to print")
     ap.add_argument("--check", action="store_true",
                     help="verify against the O(n^3) reduction oracle")
     args = ap.parse_args()
     g = Grid.of(*args.dims)
     f = make_field(args.field, g.dims, seed=0)
     pipe = PersistencePipeline(backend=args.backend)
-    res = pipe.diagram(f, grid=g)
+    req = TopoRequest(field=f, grid=g)
+    print(pipe.lower(req).describe())       # the inspectable AOT plan
+    res = pipe.run(req)
     dg = res.diagram
     print(f"field '{args.field}' on {g.dims}: {g.nv} vertices "
           f"(backend={pipe.backend.name})")
     for p in range(g.dim):
-        pts = dg.points_value(p, f)
+        pts = res.pairs(p)                  # value-space query
         pts = pts[pts[:, 0] != pts[:, 1]]
         print(f"  D{p}: {len(pts)} off-diagonal pairs"
               + (f", max persistence {np.max(pts[:,1]-pts[:,0]):.3f}"
                  if len(pts) else ""))
-    print("  Betti:", dg.betti())
+    top = res.pairs(0, top_k=args.top_k)
+    print(f"  top-{args.top_k} D0 pairs:",
+          np.array2string(top, precision=3))
+    print("  Betti:", res.betti())
     print("  stage times:",
           {c.name: f"{c.seconds:.3f}s" for c in res.report.children})
+    print(f"  wire payload: {len(res.to_bytes())} bytes")
     if args.check:
         orc = oracle_to_diagram(compute_oracle(g, f), g)
         assert same_offdiagonal(dg, orc), diff_report(dg, orc)

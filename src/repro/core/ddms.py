@@ -36,10 +36,11 @@ def compute_ddms_sim(grid: Grid, f: np.ndarray, n_blocks: int = 4,
                      anticipation: bool = True, budget: Optional[int] = None,
                      gradient_backend: str = "np") -> DMSResult:
     """Distributed DMS via the unified pipeline (see module docstring)."""
-    from repro.pipeline import PersistencePipeline
+    from repro.pipeline import PersistencePipeline, TopoRequest
     res = PersistencePipeline(backend=gradient_backend, n_blocks=n_blocks,
                               distributed=True, anticipation=anticipation,
-                              budget=budget).diagram(f, grid=grid)
+                              budget=budget).run(TopoRequest(field=f,
+                                                             grid=grid))
     stats = dict(res.stats)
     stats.setdefault("n_blocks", n_blocks)
     return DMSResult(res.diagram, stats)

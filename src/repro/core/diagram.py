@@ -32,11 +32,9 @@ class Diagram:
 
     def points_order(self, p: int, drop_diagonal: bool = True) -> np.ndarray:
         """(n,2) points (birth order, death order) for dimension p."""
-        pr = self.pairs.get(p)
-        if pr is None or len(pr) == 0:
+        b, d = self.pair_max_vertices(p)
+        if len(b) == 0:
             return np.zeros((0, 2), dtype=np.int64)
-        b = np.asarray(self.grid.simplex_max_vertex(p, pr[:, 0], self.order))
-        d = np.asarray(self.grid.simplex_max_vertex(p + 1, pr[:, 1], self.order))
         ob, od = self.order[b], self.order[d]
         pts = np.stack([ob, od], axis=1)
         if drop_diagonal:
@@ -46,13 +44,30 @@ class Diagram:
     def points_value(self, p: int, f: np.ndarray) -> np.ndarray:
         """(n,2) points (birth f-value, death f-value) for dimension p
         (f(sigma) = highest vertex value, paper Sec. II-E)."""
-        pr = self.pairs.get(p)
-        if pr is None or len(pr) == 0:
+        b, d = self.pair_max_vertices(p)
+        if len(b) == 0:
             return np.zeros((0, 2), dtype=f.dtype)
         fr = f.reshape(-1)
-        b = np.asarray(self.grid.simplex_max_vertex(p, pr[:, 0], self.order))
-        d = np.asarray(self.grid.simplex_max_vertex(p + 1, pr[:, 1], self.order))
         return np.stack([fr[b], fr[d]], axis=1)
+
+    def pair_max_vertices(self, p: int) -> Tuple[np.ndarray, np.ndarray]:
+        """(birth vertices, death vertices) of the dim-p pairs — the
+        filtration-defining max vertex of each simplex (Sec. II-E)."""
+        pr = self.pairs.get(p)
+        if pr is None or len(pr) == 0:
+            z = np.zeros(0, dtype=np.int64)
+            return z, z
+        b = np.asarray(self.grid.simplex_max_vertex(p, pr[:, 0], self.order))
+        d = np.asarray(self.grid.simplex_max_vertex(p + 1, pr[:, 1],
+                                                    self.order))
+        return b, d
+
+    def essential_max_vertices(self, p: int) -> np.ndarray:
+        """Max vertices of the essential dim-p classes (unsorted)."""
+        es = self.essential.get(p)
+        if es is None or len(es) == 0:
+            return np.zeros(0, dtype=np.int64)
+        return np.asarray(self.grid.simplex_max_vertex(p, es, self.order))
 
     def essential_orders(self, p: int) -> np.ndarray:
         es = self.essential.get(p)

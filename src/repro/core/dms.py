@@ -43,9 +43,9 @@ def _as_pairs(lst) -> np.ndarray:
 def compute_dms(grid: Grid, f: np.ndarray,
                 gradient_backend: str = "np") -> DMSResult:
     """Sequential DMS via the unified pipeline (see module docstring)."""
-    from repro.pipeline import PersistencePipeline
-    res = PersistencePipeline(backend=gradient_backend,
-                              distributed=False).diagram(f, grid=grid)
+    from repro.pipeline import PersistencePipeline, TopoRequest
+    res = PersistencePipeline(backend=gradient_backend, distributed=False) \
+        .run(TopoRequest(field=f, grid=grid))
     return DMSResult(res.diagram, res.stats)
 
 

@@ -1,6 +1,16 @@
-"""Unified persistence-diagram pipeline: staged execution, backend
-registry, and a batched facade.
+"""Unified persistence-diagram pipeline: one declarative front door.
 
+- :mod:`repro.pipeline.request`  — :class:`TopoRequest`, the frozen
+  declarative spec (field-or-source, grid, homology dims, persistence
+  simplification, execution options) and :func:`resolve_grid`, the one
+  grid-inference rule;
+- :mod:`repro.pipeline.plan`     — the AOT split mirroring jax:
+  ``lower(request) -> Plan`` (inspectable, hashable) and
+  ``Plan.compile() -> Executable`` bound through the shared, evictable
+  :class:`PlanCache`;
+- :mod:`repro.pipeline.result`   — :class:`DiagramResult`: queryable
+  (``pairs(dim, min_persistence=, top_k=)``, ``betti()``) and
+  serializable (versioned ``to_bytes``/``from_bytes`` wire format);
 - :mod:`repro.pipeline.stages`   — the paper's stage chain (order ->
   gradient -> extraction -> D0 -> D_{d-1} -> D1) as composable stage
   objects with structured :class:`StageReport` timing/counters;
@@ -8,17 +18,24 @@ registry, and a batched facade.
   (np / jax / pallas / shardmap) behind one protocol with capability
   flags; ``register_backend`` is the extension point;
 - :mod:`repro.pipeline.api`      — the :class:`PersistencePipeline`
-  facade with single (``diagram``) and batched (``diagrams``) paths and
-  a compiled-program cache.
+  facade: ``run``/``run_batch`` dispatch every path (in-memory,
+  batched, streamed, distributed) through one resolver; ``diagram`` /
+  ``diagrams`` / ``diagram_stream`` remain as thin shims.
 
-See docs/pipeline.md for the architecture and the migration notes from
-``compute_dms`` / ``compute_ddms_sim`` (which remain as thin wrappers).
+See docs/pipeline.md for the architecture and the migration table from
+the legacy entry points.
 """
+
+from repro.stream.scheduler import StreamReport  # noqa: F401
 
 from .api import (PersistencePipeline, PipelineConfig,  # noqa: F401
                   PipelineResult)
 from .backends import (Backend, BackendCaps,  # noqa: F401
                        UnknownBackendError, available_backends,
                        get_backend, register_backend)
+from .plan import (Executable, Plan, PlanCache,  # noqa: F401
+                   default_plan_cache)
+from .request import TopoRequest, resolve_grid  # noqa: F401
+from .result import WIRE_VERSION, DiagramResult  # noqa: F401
 from .stages import (ALL_STAGES, BACK_STAGES, FRONT_STAGES,  # noqa: F401
                      PipelineState, StageReport, run_stages)

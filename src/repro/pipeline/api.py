@@ -1,27 +1,36 @@
-"""`PersistencePipeline` — the one front door for diagram computation.
+"""`PersistencePipeline` — one declarative front door for diagrams.
+
+    from repro.pipeline import PersistencePipeline, TopoRequest
 
     pipe = PersistencePipeline(backend="jax")
-    res = pipe.diagram(f, grid=g)          # one field
-    ress = pipe.diagrams([f0, f1, f2], grid=g)   # batched, shared compile
+    res  = pipe.run(TopoRequest(field=f, grid=g, top_k=50))
+    ress = pipe.run_batch([TopoRequest(field=f) for f in fields])
 
-The facade owns (a) the stage chain from :mod:`repro.pipeline.stages`,
-(b) the backend picked from :mod:`repro.pipeline.backends`, and (c) a
-compiled-program cache keyed by ``(shape, backend, n_blocks)`` so
-repeated and batched requests do not pay tracing/compilation again.
-``diagrams`` additionally amortizes the stencil-gather pre-pass: a batch
-of B same-shape fields runs the gather + lower-star pairing as one
-(B*nv)-vertex program in a single dispatch.
+Every path — in-memory, batched, streamed (out-of-core), distributed —
+dispatches through one resolver with an explicit AOT split mirroring
+jax:
 
-``compute_dms`` and ``compute_ddms_sim`` (repro.core) are thin wrappers
-over this class; the request-batching service on top of it lives in
-``repro.serve.topo_service``.
+    request --lower--> Plan --compile--> Executable --execute--> result
+
+``lower`` resolves the request against the pipeline defaults into an
+inspectable, hashable :class:`~repro.pipeline.plan.Plan` (backend,
+engines, stage chain, streamed/in-memory decomposition); ``compile``
+binds the compiled batched-rows program and scatter offset tables via
+the shared, evictable :class:`~repro.pipeline.plan.PlanCache` (one
+compile per ``(dims, backend, n_blocks)`` across repeated and batched
+requests).  Results are queryable :class:`~repro.pipeline.result
+.DiagramResult`s with a versioned wire format.
+
+``diagram`` / ``diagrams`` / ``diagram_stream`` remain as thin shims
+over ``run`` (bit-identical output), as do ``compute_dms`` /
+``compute_ddms_sim`` in ``repro.core``.
 """
 
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence, Tuple
+from dataclasses import dataclass
+from typing import List, Optional, Sequence, Union
 
 import numpy as np
 
@@ -29,8 +38,13 @@ from repro.core.diagram import Diagram
 from repro.core.grid import Grid, vertex_order
 
 from .backends import Backend, get_backend
-from .stages import (BACK_STAGES, FRONT_STAGES, PipelineState, StageReport,
+from .plan import Executable, Plan, PlanCache, default_plan_cache
+from .request import TopoRequest, strip_field
+from .result import DiagramResult, PipelineResult  # noqa: F401  (re-export)
+from .stages import (ALL_STAGES, FRONT_STAGES, PipelineState, StageReport,
                      run_stages)
+
+_STAGES_BY_NAME = {st.name: st for st in ALL_STAGES}
 
 
 @dataclass(frozen=True)
@@ -49,17 +63,23 @@ class PipelineConfig:
                 f"n_blocks must be >= 1, got {self.n_blocks}")
 
 
-@dataclass
-class PipelineResult:
-    """Diagram + structured stage report (``stats`` = legacy flat view).
+def _back_stage_names(grid_dim: int, homology_dims) -> tuple:
+    """Resolve the back-end stage chain for the requested dimensions.
 
-    ``stream`` carries the :class:`repro.stream.StreamReport` byte/overlap
-    accounting when the result came from :meth:`diagram_stream`."""
-
-    diagram: Diagram
-    stats: Dict[str, float] = field(default_factory=dict)
-    report: Optional[StageReport] = None
-    stream: Optional[object] = None
+    D0 always runs (it is cheap and its saddle set feeds the dual
+    stage); the dual and D1 engines are dropped when no requested
+    dimension needs their output."""
+    dims = set(homology_dims)
+    names = ["d0"]
+    need_d1 = (grid_dim == 3 and bool(dims & {1, 2})) \
+        or (grid_dim == 2 and 1 in dims)
+    need_dual = (grid_dim >= 2 and bool(dims & {grid_dim - 1, grid_dim})) \
+        or (grid_dim == 3 and need_d1) or grid_dim == 1
+    if need_dual:
+        names.append("d_top")
+    if need_d1 or grid_dim <= 1:
+        names.append("d1")
+    return tuple(names)
 
 
 class PersistencePipeline:
@@ -68,24 +88,29 @@ class PersistencePipeline:
     Parameters
     ----------
     backend : registry name ("np", "jax", "pallas", "shardmap") or a
-        :class:`Backend` instance.
+        :class:`Backend` instance — the default for requests that do
+        not name one.
     n_blocks : z-slab block count for the distributed engines.
     distributed : use the round-synchronous self-correcting pairing and
         the token-based D1 (the DDMS back-end).  Defaults to
         ``n_blocks > 1``.
     anticipation, budget : D1 engine knobs (distributed only).
+    plan_cache : the compiled-artifact cache; defaults to the
+        process-wide shared :func:`default_plan_cache`.
     """
 
     def __init__(self, backend: str = "np", *, n_blocks: int = 1,
                  distributed: Optional[bool] = None,
-                 anticipation: bool = True, budget: Optional[int] = None):
+                 anticipation: bool = True, budget: Optional[int] = None,
+                 plan_cache: Optional[PlanCache] = None):
         be = backend if isinstance(backend, Backend) else get_backend(backend)
         self.config = PipelineConfig(
             backend=be, n_blocks=n_blocks,
             distributed=(n_blocks > 1) if distributed is None else distributed,
             anticipation=anticipation, budget=budget)
-        # (dims, backend name, n_blocks) -> compiled batched-rows program
-        self._programs: Dict[Tuple, object] = {}
+        # `is None`, not truthiness: an empty PlanCache is falsy (len 0)
+        self.plan_cache = plan_cache if plan_cache is not None \
+            else default_plan_cache()
 
     # -- helpers -----------------------------------------------------------
 
@@ -93,89 +118,232 @@ class PersistencePipeline:
     def backend(self) -> Backend:
         return self.config.backend
 
-    def _resolve_grid(self, f, grid: Optional[Grid]) -> Grid:
-        if grid is not None:
-            return grid
-        f = np.asarray(f)
-        if f.ndim > 1:
-            # numpy index order is [z, y, x]; vid = x + nx*(y + ny*z)
-            return Grid.of(*f.shape[::-1])
-        raise ValueError(
-            "cannot infer the grid from a flat field; pass grid= or a "
-            "field shaped (nz, ny, nx)")
+    @property
+    def _programs(self) -> "_ProgramsView":
+        """Legacy view of the shared :class:`PlanCache` under the old
+        per-pipeline ``_programs`` keys (kept for probes/tests)."""
+        return _ProgramsView(self.plan_cache)
 
-    def _batched_program(self, grid: Grid):
-        key = (grid.dims, self.backend.name, self.config.n_blocks)
-        prog = self._programs.get(key)
-        if prog is None:
-            prog = self.backend.batched_rows(grid)
-            self._programs[key] = prog
-        return prog
+    def _get_backend(self, name: str) -> Backend:
+        """Resolve a plan's backend name, preferring the pipeline's own
+        held instance (which may be an unregistered Backend object)."""
+        if name == self.config.backend.name:
+            return self.config.backend
+        return get_backend(name)
 
-    def _row_offsets(self, grid: Grid):
-        """Per-grid row->sid scatter offset tables (cached with programs)."""
-        from repro.core.gradient import row_sid_offsets
-        key = ("row_offsets", grid.dims)
-        off = self._programs.get(key)
-        if off is None:
-            off = row_sid_offsets(grid)
-            self._programs[key] = off
-        return off
+    def _as_request(self, request, grid=None, **options) -> TopoRequest:
+        if isinstance(request, TopoRequest):
+            if grid is not None or options:
+                raise TypeError(
+                    "pass options inside the TopoRequest, not alongside it")
+            return request
+        return TopoRequest(field=request, grid=grid, **options)
 
-    def _finish(self, state: PipelineState,
-                report: StageReport) -> PipelineResult:
-        if self.config.distributed:
-            report.count(n_blocks=self.config.n_blocks)
-        return PipelineResult(state.diagram(), report.flat(), report)
+    # -- AOT split: lower / compile ----------------------------------------
 
-    # -- single-field path -------------------------------------------------
+    def lower(self, request: Union[TopoRequest, np.ndarray], grid=None,
+              **options) -> Plan:
+        """Resolve a request against this pipeline's defaults into an
+        inspectable, hashable :class:`Plan` (no field data touched
+        beyond grid inference, nothing compiled)."""
+        return self._lower_resolved(
+            self._as_request(request, grid, **options).resolve())
 
-    def diagram(self, f, grid: Optional[Grid] = None) -> PipelineResult:
-        """Persistence diagram of one scalar field."""
-        grid = self._resolve_grid(f, grid)
-        state = PipelineState(grid, np.asarray(f))
-        report = StageReport("pipeline")
-        run_stages(state, self.config, report)
-        return self._finish(state, report)
-
-    # -- streamed (out-of-core) path ---------------------------------------
-
-    def diagram_stream(self, source, *, chunk_z: Optional[int] = None,
-                       chunk_budget: Optional[int] = None) -> PipelineResult:
-        """Persistence diagram of a field served chunk-by-chunk.
-
-        ``source`` is a :class:`repro.stream.FieldSource` (in-memory
-        array, ``np.memmap`` file, or on-demand generator) — the field is
-        never materialized as one array.  The front-end streams
-        ghost-extended z-slabs through the backend's kernel on rank-free
-        packed (value, vid) keys, holding at most ~2 chunks of field data
-        (double buffering; asserted by ``result.stream``), and the
-        back-end pairing runs on the stitched critical set.  Output is
-        bit-identical to :meth:`diagram` on the same field.
-
-        ``chunk_z`` (owned z-planes per chunk) or ``chunk_budget`` (bytes
-        of loaded field per chunk) select the decomposition; the default
-        is a 64 MiB budget.  Requires a backend with the ``streamed``
-        capability."""
-        from repro.core.critical import extract_critical
-        from repro.stream import (SparseOrder, as_source, diagram_vertices,
-                                  stream_front)
-
-        if not self.backend.caps.streamed:
+    def _lower_resolved(self, req: TopoRequest) -> Plan:
+        """``lower`` for a request ``resolve()`` already validated."""
+        cfg = self.config
+        backend = req.backend if req.backend is not None else cfg.backend.name
+        n_blocks = req.n_blocks if req.n_blocks is not None else cfg.n_blocks
+        if req.distributed is not None:
+            distributed = req.distributed
+        elif req.n_blocks is not None:
+            distributed = req.n_blocks > 1
+        else:
+            distributed = cfg.distributed
+        anticipation = req.anticipation if req.anticipation is not None \
+            else cfg.anticipation
+        budget = req.budget if req.budget is not None else cfg.budget
+        be = self._get_backend(backend)
+        streamed = req.is_stream
+        if streamed and not be.caps.streamed:
             from .backends import available_backends
             ok = sorted(n for n, b in available_backends().items()
                         if b.caps.streamed)
             raise ValueError(
-                f"backend {self.backend.name!r} has no streamed kernel; "
+                f"backend {backend!r} has no streamed kernel; "
                 f"streaming backends: {ok}")
-        src = as_source(source)
-        grid = Grid.of(*src.dims)
+        g = req.grid
+        hdims = req.homology_dims if req.homology_dims is not None \
+            else tuple(range(g.dim + 1))
+        front = tuple(st.name for st in FRONT_STAGES)
+        if streamed:
+            front = ("gradient", "extract_sort")
+        return Plan(dims=g.dims, backend=backend, n_blocks=n_blocks,
+                    distributed=distributed, anticipation=anticipation,
+                    budget=budget, streamed=streamed,
+                    chunk_z=req.chunk_z, chunk_budget=req.chunk_budget,
+                    homology_dims=hdims,
+                    stage_names=front + _back_stage_names(g.dim, hdims))
+
+    def compile(self, request, grid=None, **options) -> Executable:
+        """``lower`` + bind compiled artifacts via the shared cache."""
+        return self._compile(self.lower(request, grid, **options))
+
+    def _compile(self, plan: Plan) -> Executable:
+        return plan.compile(self.plan_cache,
+                            backend=self._get_backend(plan.backend))
+
+    # -- the one resolver --------------------------------------------------
+
+    def run(self, request: Union[TopoRequest, np.ndarray], grid=None,
+            **options) -> DiagramResult:
+        """Execute one request end to end (in-memory or streamed).
+
+        Accepts a :class:`TopoRequest`, or an ndarray/``FieldSource``
+        plus keyword options which are packed into one."""
+        req = self._as_request(request, grid, **options).resolve()
+        plan = self._lower_resolved(req)
+        if plan.streamed:
+            # the streamed front-end drives its own per-chunk kernels;
+            # the batched rows program would be compiled for nothing
+            return self._run_stream(req, plan)
+        return self._run_memory(req, plan, self._compile(plan))
+
+    def run_batch(self, requests: Sequence[Union[TopoRequest, np.ndarray]]
+                  ) -> List[DiagramResult]:
+        """Execute a batch, amortizing compiled programs across requests.
+
+        Same-plan, same-shape in-memory groups run the stencil-gather +
+        lower-star pairing front-end as ONE (B*nv)-vertex dispatch on
+        batch-capable backends; everything else falls back to per-
+        request ``run``.  Results come back in submission order."""
+        reqs = [self._as_request(r).resolve() for r in requests]
+        if not reqs:
+            return []
+        plans = [self._lower_resolved(r) for r in reqs]
+        groups: dict = {}
+        for i, (req, plan) in enumerate(zip(reqs, plans)):
+            groups.setdefault((plan.key, req.field_shape), []).append(i)
+        out: List[Optional[DiagramResult]] = [None] * len(reqs)
+        for idxs in groups.values():
+            plan = plans[idxs[0]]
+            if plan.streamed:
+                for i in idxs:
+                    out[i] = self._run_stream(reqs[i], plan)
+                continue
+            ex = self._compile(plan)
+            if len(idxs) == 1 or ex.rows_program is None:
+                for i in idxs:
+                    out[i] = self._run_memory(reqs[i], plan, ex)
+                continue
+            for i, res in zip(idxs, self._run_group(
+                    [reqs[i] for i in idxs], plan, ex)):
+                out[i] = res
+        return out
+
+    # -- execution paths ---------------------------------------------------
+
+    def _cfg(self, plan: Plan) -> PipelineConfig:
+        return PipelineConfig(
+            backend=self._get_backend(plan.backend), n_blocks=plan.n_blocks,
+            distributed=plan.distributed, anticipation=plan.anticipation,
+            budget=plan.budget)
+
+    def _stages(self, plan: Plan, names) -> tuple:
+        return tuple(_STAGES_BY_NAME[n] for n in names)
+
+    def _finish(self, state: PipelineState, report: StageReport,
+                req: TopoRequest, plan: Plan, cfg: PipelineConfig,
+                stream=None, diagram: Optional[Diagram] = None,
+                values_fn=None) -> DiagramResult:
+        if cfg.distributed:
+            report.count(n_blocks=cfg.n_blocks)
+        dg = diagram if diagram is not None else state.diagram()
+        if values_fn is None:
+            f = np.asarray(state.f).reshape(-1)
+            values_fn = (lambda vids: f[vids]) if f.size else None
+        res = DiagramResult(
+            dg, report.flat(), report if req.include_report else None,
+            stream=stream, request=strip_field(req), plan=plan,
+            _values_fn=values_fn)
+        # materialize the canonical query arrays now (tiny — critical
+        # simplices only) so the result does not pin the full field /
+        # dense key array for its lifetime
+        res.arrays()
+        res._values_fn = None
+        return res
+
+    def _run_memory(self, req: TopoRequest, plan: Plan,
+                    ex: Executable) -> DiagramResult:
+        if ex.rows_program is not None:
+            # the compiled rows program IS the single-field gradient
+            # (a B=1 bucket): one code path for singles and batches
+            return self._run_group([req], plan, ex)[0]
+        cfg = self._cfg(plan)
+        state = PipelineState(req.grid, np.asarray(req.field))
+        report = StageReport("pipeline")
+        run_stages(state, cfg, report,
+                   stages=self._stages(plan, plan.stage_names))
+        return self._finish(state, report, req, plan, cfg)
+
+    def _run_group(self, reqs: List[TopoRequest], plan: Plan,
+                   ex: Executable) -> List[DiagramResult]:
+        """Batched front-end: one compiled rows program over the stacked
+        batch, then per-request back-ends."""
+        from .backends import _scatter_batch
+        cfg = self._cfg(plan)
+        grid = reqs[0].grid
+        B = len(reqs)
+        reports = [StageReport("pipeline") for _ in reqs]
+        states = [PipelineState(grid, np.asarray(r.field)) for r in reqs]
+
+        # order per field (cheap, numpy) — timed per report
+        for state, report in zip(states, reports):
+            with report.stage("order"):
+                state.f = np.asarray(state.f).reshape(-1)
+                state.order = np.asarray(vertex_order(state.f))
+
+        # one batched gradient dispatch for the whole batch
+        t0 = time.perf_counter()
+        orders = np.stack([s.order for s in states])
+        rows = ex.rows_program(orders)
+        gfs = _scatter_batch(grid, rows, B, offsets=ex.row_offsets)
+        dt = (time.perf_counter() - t0) / B
+        for state, report, gf in zip(states, reports, gfs):
+            rep = report.child("gradient")
+            rep.seconds = dt
+            rep.count(n_critical=sum(gf.n_critical().values()),
+                      batch_size=B)
+            state.gf = gf
+
+        # per-request critical extraction + back-end
+        rest = self._stages(plan, ("extract_sort",)
+                            + plan.stage_names[len(FRONT_STAGES):])
+        out = []
+        for req, state, report in zip(reqs, states, reports):
+            run_stages(state, cfg, report, stages=rest)
+            out.append(self._finish(state, report, req, plan, cfg))
+        return out
+
+    def _run_stream(self, req: TopoRequest, plan: Plan) -> DiagramResult:
+        """Out-of-core path: chunked front-end on rank-free keys, back-
+        end on the stitched critical set, SparseOrder rank recovery."""
+        from repro.core.critical import extract_critical
+        from repro.stream import (SparseOrder, as_source, diagram_vertices,
+                                  stream_front)
+
+        cfg = self._cfg(plan)
+        # the explicit grid carries the dims for flat-array sources
+        # (resolve() already rejected source/grid dim conflicts)
+        src = as_source(req.field, dims=req.grid.dims)
+        grid = req.grid
+        chunk_z, chunk_budget = plan.chunk_z, plan.chunk_budget
         if chunk_z is None and chunk_budget is None:
             chunk_budget = 64 << 20
         report = StageReport("pipeline")
 
         with report.stage("gradient") as rep:
-            out = stream_front(src, kernel=self.backend.name,
+            out = stream_front(src, kernel=plan.backend,
                                chunk_z=chunk_z, chunk_budget=chunk_budget,
                                stage_report=rep)
             rep.count(n_critical=sum(out.gf.n_critical().values()))
@@ -186,7 +354,8 @@ class PersistencePipeline:
                               order=out.keys, gf=out.gf)
         with report.stage("extract_sort"):
             state.ci = extract_critical(grid, out.gf, out.keys)
-        run_stages(state, self.config, report, stages=BACK_STAGES)
+        run_stages(state, cfg, report,
+                   stages=self._stages(plan, plan.stage_names[2:]))
 
         # exact global ranks, but only for the vertices the diagram
         # touches (chunked counting pass — still no global argsort)
@@ -194,63 +363,57 @@ class PersistencePipeline:
             order = SparseOrder.from_keys(
                 out.keys, diagram_vertices(grid, state.pairs,
                                            state.essential))
-        if self.config.distributed:
-            report.count(n_blocks=self.config.n_blocks)
         dg = Diagram(grid, order, state.pairs, state.essential)
-        return PipelineResult(dg, report.flat(), report, stream=out.report)
+        return self._finish(
+            state, report, req, plan, cfg, stream=out.report, diagram=dg,
+            values_fn=out.values_for_vids)
 
-    # -- batched path ------------------------------------------------------
+    # -- legacy entry points (thin shims over run) -------------------------
+
+    def diagram(self, f, grid: Optional[Grid] = None) -> DiagramResult:
+        """Persistence diagram of one scalar field (shim over ``run``)."""
+        return self.run(TopoRequest(field=f, grid=grid))
+
+    def diagram_stream(self, source, *, chunk_z: Optional[int] = None,
+                       chunk_budget: Optional[int] = None) -> DiagramResult:
+        """Persistence diagram of a field served chunk-by-chunk (shim
+        over ``run`` with ``stream=True``).
+
+        ``source`` is a :class:`repro.stream.FieldSource` (in-memory
+        array, ``np.memmap`` file, or on-demand generator) — the field
+        is never materialized as one array; at most ~2 chunks of field
+        data are resident (asserted by ``result.stream``).  Output is
+        bit-identical to :meth:`diagram` on the same field.  Requires a
+        backend with the ``streamed`` capability."""
+        return self.run(TopoRequest(field=source, stream=True,
+                                    chunk_z=chunk_z,
+                                    chunk_budget=chunk_budget))
 
     def diagrams(self, fields: Sequence, grid: Optional[Grid] = None
-                 ) -> List[PipelineResult]:
-        """Diagrams of a batch of same-shape fields.
-
-        With a batch-capable backend the front-end runs as ONE compiled
-        program over the stacked batch (vertex-local work: the stencil
-        gather and the lower-star pairing fuse across fields); the
-        per-field back-ends then run on the split results.  Other
-        backends fall back to the per-field path.
-        """
+                 ) -> List[DiagramResult]:
+        """Diagrams of a batch of same-shape fields (shim over
+        ``run_batch``; same-shape is the legacy contract)."""
         fields = list(fields)
         if not fields:
             return []
-        grid = self._resolve_grid(fields[0], grid)
         shapes = {np.asarray(f).shape for f in fields}
         if len(shapes) > 1:
             raise ValueError(
                 f"diagrams() needs same-shape fields, got {sorted(shapes)}")
-        if self.backend.batched_rows is None or len(fields) == 1:
-            return [self.diagram(f, grid) for f in fields]
+        return self.run_batch(
+            [TopoRequest(field=f, grid=grid) for f in fields])
 
-        from .backends import _scatter_batch
-        B = len(fields)
-        reports = [StageReport("pipeline") for _ in fields]
-        states = [PipelineState(grid, np.asarray(f)) for f in fields]
 
-        # order per field (cheap, numpy) — timed per report
-        for state, report in zip(states, reports):
-            with report.stage("order"):
-                state.f = np.asarray(state.f).reshape(-1)
-                state.order = np.asarray(vertex_order(state.f))
+class _ProgramsView:
+    """Mapping adapter exposing the shared PlanCache under the legacy
+    ``pipe._programs`` keys: ``(dims, backend, n_blocks)`` -> rows
+    program, ``("row_offsets", dims)`` -> scatter offset tables."""
 
-        # one batched gradient dispatch for the whole batch
-        t0 = time.perf_counter()
-        prog = self._batched_program(grid)
-        orders = np.stack([s.order for s in states])
-        rows = prog(orders)
-        gfs = _scatter_batch(grid, rows, B, offsets=self._row_offsets(grid))
-        dt = (time.perf_counter() - t0) / B
-        for state, report, gf in zip(states, reports, gfs):
-            rep = report.child("gradient")
-            rep.seconds = dt
-            rep.count(n_critical=sum(gf.n_critical().values()),
-                      batch_size=B)
-            state.gf = gf
+    def __init__(self, cache: PlanCache):
+        self._cache = cache
 
-        # per-field critical extraction + back-end
-        out = []
-        rest = FRONT_STAGES[2:] + BACK_STAGES
-        for state, report in zip(states, reports):
-            run_stages(state, self.config, report, stages=rest)
-            out.append(self._finish(state, report))
-        return out
+    def __contains__(self, key) -> bool:
+        return key in self._cache
+
+    def __getitem__(self, key):
+        return self._cache.peek(key)

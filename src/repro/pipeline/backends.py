@@ -6,11 +6,14 @@ backend bundles:
 
 - ``gradient(grid, order, *, n_blocks=1)`` -> :class:`GradientField`;
 - an optional *batched rows* program ``batched_rows(grid)`` returning a
-  compiled ``orders (B, nv) -> packed rows`` function used by
-  ``PersistencePipeline.diagrams`` to amortize the stencil-gather
-  pre-pass over a batch of same-shape fields;
-- capability flags (``jittable`` / ``sharded`` / ``batched``) that the
-  facade and the serving layer use to pick execution strategies.
+  compiled ``orders (B, nv) -> packed rows`` function; ``Plan.compile``
+  binds it through the shared :class:`~repro.pipeline.plan.PlanCache`
+  (one compile per ``(dims, backend, n_blocks)``) and
+  ``PersistencePipeline.run_batch`` uses it to amortize the
+  stencil-gather pre-pass over a batch of same-shape requests;
+- capability flags (``jittable`` / ``sharded`` / ``batched`` /
+  ``fused`` / ``streamed``) that ``lower()`` and the serving layer use
+  to pick execution strategies (a streamed plan requires ``streamed``).
 
 Registered backends:
 

@@ -1,0 +1,240 @@
+"""AOT split of the pipeline, mirroring jax: ``lower`` then ``compile``.
+
+``PersistencePipeline.lower(request)`` resolves a :class:`TopoRequest`
+against the pipeline's defaults into a :class:`Plan` — the *decision
+record*: grid decomposition, backend, pairing engines, streamed or
+in-memory execution, and the exact stage chain (stages whose outputs
+the request does not ask for are dropped, e.g. ``homology_dims=(0,)``
+on a 3-D grid skips the D1 engine).  Plans are frozen, hashable, and
+inspectable (``describe()``) without touching field data.
+
+``Plan.compile()`` binds the compiled artifacts — the backend's batched
+packed-rows program and the per-grid row→sid scatter offset tables —
+through a shared, evictable :class:`PlanCache` (this replaces the
+ad-hoc per-pipeline ``_programs`` dict).  Compiled programs are keyed
+by ``(dims, backend, n_blocks)``: two plans differing only in result
+options or engine knobs share one compile, which is the compile-count
+contract the regression tests assert.
+"""
+
+from __future__ import annotations
+
+import threading
+from collections import OrderedDict
+from dataclasses import dataclass, field
+from typing import Callable, Dict, Optional, Tuple
+
+from repro.core.grid import Grid
+
+from .backends import Backend, get_backend
+
+
+# --------------------------------------------------------------------------
+# PlanCache — shared, evictable compiled-artifact cache
+# --------------------------------------------------------------------------
+
+class PlanCache:
+    """LRU cache of compiled plan artifacts, shared across pipelines.
+
+    Entries are built once per key by the supplied builder; ``maxsize``
+    bounds the number of resident artifacts (compiled programs hold
+    device executables — evicting the least recently used keeps
+    long-running services from accumulating every shape they ever saw).
+    Thread-safe: the serving worker and client threads share one cache.
+    """
+
+    def __init__(self, maxsize: int = 128):
+        if maxsize < 1:
+            raise ValueError(f"maxsize must be >= 1, got {maxsize}")
+        self.maxsize = maxsize
+        self._entries: "OrderedDict[tuple, object]" = OrderedDict()
+        self._lock = threading.RLock()
+        self._building: Dict[tuple, threading.Event] = {}
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+        self.compiles = 0
+        # key -> how many times the builder ran for it while resident
+        # (compile counter; stays at 1 per key unless the entry was
+        # evicted and rebuilt).  Pruned with its entry on eviction so
+        # the process-wide singleton stays bounded; ``compiles`` keeps
+        # the lifetime total.
+        self.build_counts: Dict[tuple, int] = {}
+
+    def get_or_build(self, key: tuple, builder: Callable[[], object]):
+        """Return the cached entry, building it once if absent.
+
+        The builder (a trace/compile, possibly seconds) runs *outside*
+        the cache lock: concurrent lookups of other keys never block on
+        it, and concurrent builders of the same key wait on a per-key
+        event so each key still compiles exactly once."""
+        while True:
+            with self._lock:
+                if key in self._entries:
+                    self.hits += 1
+                    self._entries.move_to_end(key)
+                    return self._entries[key]
+                pending = self._building.get(key)
+                if pending is None:
+                    self._building[key] = threading.Event()
+                    self.misses += 1
+                    break
+            pending.wait()     # someone else is building this key
+        try:
+            out = builder()
+        except BaseException:
+            with self._lock:
+                self._building.pop(key).set()  # let waiters retry/raise
+            raise
+        with self._lock:
+            self._entries[key] = out
+            self.compiles += 1
+            self.build_counts[key] = self.build_counts.get(key, 0) + 1
+            while len(self._entries) > self.maxsize:
+                old, _ = self._entries.popitem(last=False)
+                self.build_counts.pop(old, None)
+                self.evictions += 1
+            self._building.pop(key).set()
+        return out
+
+    def __contains__(self, key: tuple) -> bool:
+        with self._lock:
+            return key in self._entries
+
+    def peek(self, key: tuple):
+        """Read without building (KeyError if absent); no LRU touch."""
+        with self._lock:
+            return self._entries[key]
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def clear(self) -> None:
+        with self._lock:
+            self._entries.clear()
+            self.build_counts.clear()
+
+    def stats(self) -> Dict[str, int]:
+        with self._lock:
+            return dict(size=len(self._entries), hits=self.hits,
+                        misses=self.misses, evictions=self.evictions,
+                        compiles=self.compiles)
+
+
+_DEFAULT_CACHE = PlanCache()
+_MEMO_LOCK = threading.Lock()   # guards per-instance backend rows memos
+
+
+def default_plan_cache() -> PlanCache:
+    """The process-wide shared cache used when a pipeline gets none."""
+    return _DEFAULT_CACHE
+
+
+# --------------------------------------------------------------------------
+# Plan / Executable
+# --------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class Plan:
+    """Resolved execution plan: everything decided, nothing compiled.
+
+    Frozen and hashable — ``plan.key`` is the full identity,
+    ``plan.compile_key`` the (coarser) compiled-program identity."""
+
+    dims: Tuple[int, ...]                 # grid vertex dims (nx, ny, nz)
+    backend: str                          # registry name
+    n_blocks: int
+    distributed: bool
+    anticipation: bool
+    budget: Optional[int]
+    streamed: bool
+    chunk_z: Optional[int] = None
+    chunk_budget: Optional[int] = None
+    homology_dims: Tuple[int, ...] = ()
+    stage_names: Tuple[str, ...] = ()
+
+    @property
+    def key(self) -> tuple:
+        return (self.dims, self.backend, self.n_blocks, self.distributed,
+                self.anticipation, self.budget, self.streamed,
+                self.chunk_z, self.chunk_budget, self.homology_dims)
+
+    @property
+    def compile_key(self) -> tuple:
+        """Compiled artifacts are shared at this granularity: one compile
+        per (dims, backend, n_blocks) regardless of result options."""
+        return (self.dims, self.backend, self.n_blocks)
+
+    @property
+    def grid(self) -> Grid:
+        return Grid.of(*self.dims)
+
+    def describe(self) -> str:
+        """Human-readable one-plan summary (inspectable AOT artifact)."""
+        mode = "streamed" if self.streamed else "in-memory"
+        engine = "distributed" if self.distributed else "sequential"
+        return (f"Plan(dims={self.dims}, backend={self.backend!r}, "
+                f"{mode}, {engine} back-end, n_blocks={self.n_blocks}, "
+                f"homology_dims={self.homology_dims}, "
+                f"stages={' -> '.join(self.stage_names)})")
+
+    def compile(self, cache: Optional[PlanCache] = None,
+                backend: Optional[Backend] = None) -> "Executable":
+        """Bind compiled artifacts (batched rows program + row→sid offset
+        tables) through ``cache`` (the shared default if None).
+
+        ``backend`` overrides the registry lookup — the pipeline passes
+        its own held instance so unregistered :class:`Backend` objects
+        (test doubles, locally-built backends) keep working."""
+        # `is None`, not truthiness: an empty PlanCache is falsy (len 0)
+        cache = default_plan_cache() if cache is None else cache
+        be = get_backend(self.backend) if backend is None else backend
+        grid = self.grid
+        rows_program = None
+        if be.batched_rows is not None:
+            try:
+                registered = get_backend(self.backend)
+            except Exception:
+                registered = None
+            if be is registered:
+                rows_program = cache.get_or_build(
+                    self.compile_key, lambda: be.batched_rows(grid))
+            else:
+                # an unregistered (or shadowing same-named) Backend
+                # instance must never exchange compiled programs with
+                # the registry entry through the shared cache — memoize
+                # on the instance itself instead (one lock is fine:
+                # unregistered-backend compiles are rare)
+                with _MEMO_LOCK:
+                    memo = getattr(be, "_rows_memo", None)
+                    if memo is None:
+                        memo = {}
+                        object.__setattr__(be, "_rows_memo", memo)
+                    if self.compile_key not in memo:
+                        memo[self.compile_key] = be.batched_rows(grid)
+                    rows_program = memo[self.compile_key]
+        from repro.core.gradient import row_sid_offsets
+        offsets = cache.get_or_build(("row_offsets", self.dims),
+                                     lambda: row_sid_offsets(grid))
+        return Executable(plan=self, backend=be,
+                          rows_program=rows_program, row_offsets=offsets,
+                          cache=cache)
+
+
+@dataclass(frozen=True)
+class Executable:
+    """A plan with its compiled artifacts bound, ready to execute.
+
+    ``rows_program`` is the backend's jitted ``orders (B, nv) -> packed
+    rows`` program (None for non-batch backends such as ``np`` /
+    ``shardmap``); ``row_offsets`` the per-grid row→sid scatter tables.
+    Both come out of the shared :class:`PlanCache`, so repeated and
+    batched requests of one ``(dims, backend, n_blocks)`` reuse a single
+    compile."""
+
+    plan: Plan
+    backend: Backend
+    rows_program: Optional[Callable] = None
+    row_offsets: object = None
+    cache: PlanCache = field(default_factory=default_plan_cache, repr=False,
+                             compare=False)

@@ -1,0 +1,210 @@
+"""`TopoRequest` — the declarative front door of the pipeline.
+
+One frozen spec describes *everything* a client may ask of the engine:
+the field (in-memory array or out-of-core :class:`~repro.stream.chunks
+.FieldSource`), the grid, which homology dimensions to compute,
+result simplification (``min_persistence`` / ``top_k``), execution
+options (backend / n_blocks / distributed / streaming chunking), and
+output options.  Unset execution options inherit the pipeline's
+defaults at :meth:`PersistencePipeline.lower` time, so the same request
+can be handed to differently-configured pipelines.
+
+The request is *data*, not behavior: ``resolve()`` performs grid
+inference + validation and returns a new frozen request; the pipeline
+turns a resolved request into an inspectable :class:`~repro.pipeline
+.plan.Plan` (``lower``), a compiled :class:`~repro.pipeline.plan
+.Executable` (``compile``), and finally a queryable
+:class:`~repro.pipeline.result.DiagramResult` (``run``).
+
+``resolve_grid`` is the single grid-inference helper (numpy layout is
+``[z, y, x]``, so a shaped field infers ``dims = shape[::-1]``) — the
+one copy that used to be re-implemented by the facade, the service, and
+the examples.
+"""
+
+from __future__ import annotations
+
+import copy
+import dataclasses
+from dataclasses import dataclass
+from typing import Any, Optional, Tuple
+
+import numpy as np
+
+from repro.core.grid import Grid
+
+
+def _is_source(field) -> bool:
+    """True for FieldSource-shaped objects that are not plain arrays."""
+    if isinstance(field, np.ndarray):
+        return False
+    return hasattr(field, "read_slab") and hasattr(field, "dims")
+
+
+def resolve_grid(field, grid: Optional[Grid] = None) -> Grid:
+    """THE grid-inference rule, hoisted out of every call site.
+
+    An explicit ``grid`` wins; a :class:`FieldSource` carries its own
+    ``dims``; a shaped ndarray infers ``dims = shape[::-1]`` (numpy
+    index order is ``[z, y, x]``, vid = x + nx*(y + ny*z)); a flat
+    field cannot be inferred."""
+    if grid is not None:
+        return grid
+    if _is_source(field):
+        return Grid.of(*field.dims)
+    f = np.asarray(field)
+    if f.ndim > 1:
+        return Grid.of(*f.shape[::-1])
+    raise ValueError(
+        "cannot infer the grid from a flat field; pass grid= or a "
+        "field shaped (nz, ny, nx)")
+
+
+@dataclass(frozen=True, eq=False)
+class TopoRequest:
+    """Declarative persistence-diagram request (frozen spec).
+
+    Parameters
+    ----------
+    field : ndarray (flat or ``(nz, ny, nx)``) or a ``FieldSource``
+        (out-of-core).  A source implies the streamed execution path.
+    grid : explicit :class:`Grid`; inferred by :meth:`resolve` if None.
+    homology_dims : homology dimensions to compute (None = all).  The
+        plan drops back-end stages whose outputs are not requested
+        (e.g. ``(0,)`` on a 3-D grid skips the D1 engine entirely).
+    min_persistence, top_k : default result simplification, applied by
+        :meth:`DiagramResult.pairs` when the caller passes no override
+        (clients rarely need every low-persistence pair).
+    backend, n_blocks, distributed, anticipation, budget : execution
+        options; ``None`` inherits the pipeline's configured default.
+        Exception: a request that sets ``n_blocks`` but not
+        ``distributed`` re-derives ``distributed = n_blocks > 1``
+        (mirroring the ``PersistencePipeline`` constructor) — set
+        ``distributed`` explicitly to pin the pairing engine.
+    stream : force (True) / forbid (False) the out-of-core path;
+        ``None`` streams iff the field is a source or a chunk knob is
+        set.
+    chunk_z, chunk_budget : streamed decomposition knobs (at most one).
+    include_report : attach the :class:`StageReport` to the result
+        (False keeps serialized payloads lean).
+    """
+
+    field: Any
+    grid: Optional[Grid] = None
+    homology_dims: Optional[Tuple[int, ...]] = None
+    min_persistence: Optional[float] = None
+    top_k: Optional[int] = None
+    backend: Optional[str] = None
+    n_blocks: Optional[int] = None
+    distributed: Optional[bool] = None
+    anticipation: Optional[bool] = None
+    budget: Optional[int] = None
+    stream: Optional[bool] = None
+    chunk_z: Optional[int] = None
+    chunk_budget: Optional[int] = None
+    include_report: bool = True
+
+    def __post_init__(self):
+        if self.field is None:
+            raise TypeError("TopoRequest needs a field (ndarray or "
+                            "FieldSource); got None")
+        if self.min_persistence is not None and self.min_persistence < 0:
+            raise ValueError(
+                f"min_persistence must be >= 0, got {self.min_persistence}")
+        if self.top_k is not None and self.top_k < 1:
+            raise ValueError(f"top_k must be >= 1, got {self.top_k}")
+        if self.n_blocks is not None and self.n_blocks < 1:
+            raise ValueError(f"n_blocks must be >= 1, got {self.n_blocks}")
+        if self.chunk_z is not None and self.chunk_budget is not None:
+            raise ValueError(
+                "pass at most one of chunk_z= / chunk_budget=")
+        if self.chunk_z is not None and self.chunk_z < 1:
+            raise ValueError(f"chunk_z must be >= 1, got {self.chunk_z}")
+        if self.chunk_budget is not None and self.chunk_budget < 1:
+            raise ValueError(
+                f"chunk_budget must be >= 1 byte, got {self.chunk_budget}")
+        if self.homology_dims is not None:
+            dims = tuple(int(d) for d in self.homology_dims)
+            if not dims:
+                raise ValueError("homology_dims must not be empty")
+            if any(d < 0 or d > 3 for d in dims):
+                raise ValueError(
+                    f"homology_dims must lie in [0, 3], got {dims}")
+            object.__setattr__(self, "homology_dims", tuple(sorted(set(dims))))
+
+    # -- derived views -------------------------------------------------------
+
+    @property
+    def is_stream(self) -> bool:
+        """Whether this request takes the out-of-core path."""
+        if self.stream is not None:
+            return bool(self.stream)
+        return _is_source(self.field) or self.chunk_z is not None \
+            or self.chunk_budget is not None
+
+    def resolve(self) -> "TopoRequest":
+        """Grid inference + cross-field validation; returns a new frozen
+        request with ``grid`` filled in (idempotent)."""
+        if self.stream is False and _is_source(self.field):
+            raise ValueError(
+                "stream=False conflicts with a FieldSource field; sources "
+                "are only served by the streamed path")
+        if not self.is_stream and (self.chunk_z is not None
+                                   or self.chunk_budget is not None):
+            raise ValueError(
+                "chunk_z/chunk_budget only apply to streamed requests")
+        if self.grid is not None:
+            if _is_source(self.field):
+                src_dims = Grid.of(*self.field.dims).dims
+                if tuple(self.grid.dims) != src_dims:
+                    raise ValueError(
+                        f"grid dims {self.grid.dims} conflict with the "
+                        f"FieldSource's own dims {src_dims}; a source is "
+                        f"authoritative — omit grid= or make them match")
+            else:
+                f = np.asarray(self.field)
+                if f.ndim > 1 \
+                        and Grid.of(*f.shape[::-1]).dims != self.grid.dims:
+                    raise ValueError(
+                        f"grid dims {self.grid.dims} conflict with the "
+                        f"field shape {f.shape} (= dims "
+                        f"{Grid.of(*f.shape[::-1]).dims}); reshape the "
+                        f"field or fix grid=")
+                if f.ndim == 1 and f.size != self.grid.nv:
+                    raise ValueError(
+                        f"flat field has {f.size} values but grid "
+                        f"{self.grid.dims} has {self.grid.nv} vertices")
+        grid = resolve_grid(self.field, self.grid)
+        if self.homology_dims is not None:
+            bad = [d for d in self.homology_dims if d > grid.dim]
+            if bad:
+                raise ValueError(
+                    f"homology_dims {bad} exceed the grid dimension "
+                    f"{grid.dim} for dims {grid.dims}")
+        if grid is self.grid:
+            return self
+        return dataclasses.replace(self, grid=grid)
+
+    def replace(self, **kw) -> "TopoRequest":
+        """``dataclasses.replace`` convenience (requests are frozen)."""
+        return dataclasses.replace(self, **kw)
+
+    @property
+    def field_shape(self) -> tuple:
+        """Batching key for the field payload (source dims or array shape)."""
+        if _is_source(self.field):
+            return ("stream",) + tuple(self.field.dims)
+        return tuple(np.asarray(self.field).shape)
+
+
+def strip_field(req: TopoRequest) -> TopoRequest:
+    """A copy of ``req`` with the field payload dropped (``field=None``).
+
+    Results keep their originating request for query defaults and
+    provenance; stripping the payload keeps a kept result from pinning
+    the (possibly huge) field array for its lifetime.  Bypasses
+    ``__init__`` deliberately — a stripped request is a record, not a
+    runnable spec."""
+    r = copy.copy(req)
+    object.__setattr__(r, "field", None)
+    return r

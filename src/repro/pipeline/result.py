@@ -1,0 +1,291 @@
+"""`DiagramResult` — queryable, serializable persistence-diagram results.
+
+Replaces the loose ``PipelineResult`` trio (diagram / stats / report)
+with one result object that
+
+- keeps the raw :class:`~repro.core.diagram.Diagram` plus the
+  structured :class:`StageReport` and (for streamed runs) the typed
+  :class:`~repro.stream.scheduler.StreamReport`;
+- answers *queries* computed from the order/keys over the critical set
+  only — ``pairs(dim, min_persistence=…, top_k=…)`` in value or order
+  space, ``essential(dim)``, ``betti()`` — so clients who need only the
+  high-persistence classes never touch the full pair lists (in the
+  spirit of Vidal & Tierny's progressive/approximate diagrams); the
+  tiny canonical arrays are materialized when the pipeline finishes, so
+  a kept result never pins the full field or dense key array;
+- serializes to a **versioned wire format** (``to_bytes`` /
+  ``from_bytes``): a fixed header (magic ``DDMS``, version, grid dims)
+  followed by dtype-tagged named arrays, DIPHA-style, so services
+  return payloads instead of live objects and round-trips are
+  bit-exact.
+
+Wire format v1 (all little-endian)::
+
+    header:  magic  b"DDMS" | version u16 | grid_ndim u8 | flags u8
+             dims 3 x u64   | n_arrays u32
+    array:   name_len u16 | name utf-8
+             dtype_len u8 | numpy dtype.str ascii (e.g. "<i8", "<f4")
+             ndim u8 | shape ndim x u64 | nbytes u64 | raw C-order data
+
+Per computed homology dimension ``p`` the arrays are
+``d{p}.pairs_sids`` (n, 2) simplex ids, ``d{p}.pairs_orders`` (n, 2)
+vertex orders, ``d{p}.pairs_values`` (n, 2) field values, and the
+``essential_*`` triple of the same; plus the global ``homology_dims``.
+Unknown (future-version) arrays are preserved by ``from_bytes`` so the
+format can grow without breaking old readers.
+"""
+
+from __future__ import annotations
+
+import struct
+from dataclasses import dataclass, field
+from typing import Callable, Dict, Optional, Tuple
+
+import numpy as np
+
+from repro.core.diagram import Diagram
+from repro.stream.scheduler import StreamReport
+
+from .plan import Plan
+from .request import TopoRequest
+from .stages import StageReport
+
+WIRE_MAGIC = b"DDMS"
+WIRE_VERSION = 1
+
+
+@dataclass
+class DiagramResult:
+    """Diagram + structured reports + lazy queries + wire serialization.
+
+    The first four fields keep the legacy ``PipelineResult`` layout
+    (``diagram`` / ``stats`` / ``report`` / ``stream``) so existing
+    consumers keep working; ``stream`` is now properly typed as
+    ``Optional[StreamReport]``.  ``diagram`` is None for results
+    deserialized from the wire — queries still work off the decoded
+    arrays."""
+
+    diagram: Optional[Diagram]
+    stats: Dict[str, float] = field(default_factory=dict)
+    report: Optional[StageReport] = None
+    stream: Optional[StreamReport] = None
+    request: Optional[TopoRequest] = None
+    plan: Optional[Plan] = None
+    _arrays: Dict[str, np.ndarray] = field(default_factory=dict, repr=False)
+    # vertex ids -> field values (in-memory: the flat field; streamed:
+    # unpacked from the (value, vid) keys); None when values are unknown
+    _values_fn: Optional[Callable] = field(default=None, repr=False)
+
+    # -- identity ------------------------------------------------------------
+
+    @property
+    def grid_dims(self) -> Tuple[int, ...]:
+        if self.diagram is not None:
+            return self.diagram.grid.dims
+        return tuple(int(d) for d in self._arrays["grid_dims"])
+
+    @property
+    def homology_dims(self) -> Tuple[int, ...]:
+        """Homology dimensions this result actually computed."""
+        if "homology_dims" in self._arrays:
+            return tuple(int(d) for d in self._arrays["homology_dims"])
+        if self.plan is not None and self.plan.homology_dims:
+            return self.plan.homology_dims
+        g = self.diagram.grid
+        return tuple(range(g.dim + 1))
+
+    # -- lazy canonical arrays ----------------------------------------------
+
+    def _build_arrays(self) -> None:
+        """Materialize the canonical per-dimension arrays from the live
+        diagram (sorted by (birth order, death order) for determinism)."""
+        dg = self.diagram
+        if dg is None:
+            raise ValueError("no diagram and no decoded arrays")
+        grid, order, vf = dg.grid, dg.order, self._values_fn
+        req = self.request
+        out: Dict[str, np.ndarray] = {
+            "grid_dims": np.asarray(grid.dims, dtype=np.int64),
+            "homology_dims": np.asarray(self.homology_dims, dtype=np.int64),
+            # request query defaults, so decoded payloads answer pairs()
+            # exactly like the live result (nan / -1 = unset)
+            "query_defaults": np.asarray(
+                [np.nan if req is None or req.min_persistence is None
+                 else req.min_persistence,
+                 -1 if req is None or req.top_k is None else req.top_k],
+                dtype=np.float64),
+        }
+        for p in self.homology_dims:
+            pr = dg.pairs.get(p)
+            if pr is None or len(pr) == 0:
+                sids = np.zeros((0, 2), np.int64)
+                ords = np.zeros((0, 2), np.int64)
+                vals = np.zeros((0, 2), np.float64)
+            else:
+                pr = np.asarray(pr, dtype=np.int64)
+                bv, dv = dg.pair_max_vertices(p)
+                ob = np.asarray(order[bv], dtype=np.int64)
+                od = np.asarray(order[dv], dtype=np.int64)
+                idx = np.lexsort((od, ob))
+                sids, ords = pr[idx], np.stack([ob, od], axis=1)[idx]
+                vals = (np.stack([vf(bv), vf(dv)], axis=1)[idx]
+                        if vf is not None else None)
+            out[f"d{p}.pairs_sids"] = sids
+            out[f"d{p}.pairs_orders"] = ords
+            if vals is not None:
+                out[f"d{p}.pairs_values"] = vals
+            es = np.asarray(dg.essential.get(p, np.zeros(0, np.int64)),
+                            dtype=np.int64)
+            if len(es):
+                ev = dg.essential_max_vertices(p)
+                eo = np.asarray(order[ev], dtype=np.int64)
+                idx = np.argsort(eo)
+                es, eo = es[idx], eo[idx]
+                evals = vf(ev)[idx] if vf is not None else None
+            else:
+                eo = np.zeros(0, np.int64)
+                evals = np.zeros(0, np.float64) if vf is not None else None
+            out[f"d{p}.essential_sids"] = es
+            out[f"d{p}.essential_orders"] = eo
+            if evals is not None:
+                out[f"d{p}.essential_values"] = evals
+        out.update(self._arrays)  # never clobber decoded arrays
+        self._arrays = out
+
+    def arrays(self) -> Dict[str, np.ndarray]:
+        """The canonical named arrays (built on first use)."""
+        if "grid_dims" not in self._arrays:
+            self._build_arrays()
+        return self._arrays
+
+    def _dim_arrays(self, dim: int, kind: str, space: str) -> np.ndarray:
+        if space not in ("value", "order"):
+            raise ValueError(f"space must be 'value' or 'order', got {space!r}")
+        arrs = self.arrays()
+        if dim not in self.homology_dims:
+            raise ValueError(
+                f"dimension {dim} was not computed (homology_dims="
+                f"{self.homology_dims})")
+        key = f"d{dim}.{kind}_{'values' if space == 'value' else 'orders'}"
+        if key not in arrs:
+            raise ValueError(
+                f"no field values attached to this result; query with "
+                f"space='order' instead")
+        return arrs[key]
+
+    # -- queries -------------------------------------------------------------
+
+    def _default_queries(self) -> tuple:
+        """(min_persistence, top_k) defaults: from the originating
+        request, or from the decoded ``query_defaults`` wire array."""
+        if self.request is not None:
+            return self.request.min_persistence, self.request.top_k
+        qd = self._arrays.get("query_defaults")
+        if qd is None:
+            return None, None
+        mp = None if np.isnan(qd[0]) else float(qd[0])
+        tk = None if qd[1] < 0 else int(qd[1])
+        return mp, tk
+
+    def pairs(self, dim: int = 0, *, min_persistence: Optional[float] = None,
+              top_k: Optional[int] = None, space: str = "value"
+              ) -> np.ndarray:
+        """(n, 2) (birth, death) points of dimension ``dim``.
+
+        ``min_persistence`` keeps pairs with ``death - birth >=`` the
+        threshold (same space as the points); ``top_k`` keeps the k most
+        persistent.  Defaults come from the originating request (and
+        survive the wire); the request's *value-space* ``min_persistence``
+        is not applied to order-space queries.  Rows are sorted by
+        descending persistence, ties by birth."""
+        d_mp, d_tk = self._default_queries()
+        if min_persistence is None and space == "value":
+            min_persistence = d_mp
+        if top_k is None:
+            top_k = d_tk
+        pts = self._dim_arrays(dim, "pairs", space)
+        pers = pts[:, 1] - pts[:, 0]
+        if min_persistence is not None and min_persistence > 0:
+            keep = pers >= min_persistence
+            pts, pers = pts[keep], pers[keep]
+        idx = np.argsort(-pers, kind="stable")
+        if top_k is not None:
+            idx = idx[:top_k]
+        return pts[idx]
+
+    def essential(self, dim: int = 0, *, space: str = "value") -> np.ndarray:
+        """(n,) birth coordinates of the infinite classes of ``dim``."""
+        return self._dim_arrays(dim, "essential", space)
+
+    def betti(self) -> Dict[int, int]:
+        """Betti numbers = essential-class counts per computed dim."""
+        arrs = self.arrays()
+        return {p: len(arrs[f"d{p}.essential_sids"])
+                for p in self.homology_dims}
+
+    # -- wire format ---------------------------------------------------------
+
+    def to_bytes(self) -> bytes:
+        """Serialize to the versioned DDMS wire format (see module doc)."""
+        arrs = self.arrays()
+        dims = self.grid_dims
+        parts = [WIRE_MAGIC,
+                 struct.pack("<HBB", WIRE_VERSION, len(dims), 0),
+                 struct.pack("<3Q", *dims),
+                 struct.pack("<I", len(arrs))]
+        for name in sorted(arrs):
+            a = np.ascontiguousarray(arrs[name])
+            nb = name.encode("utf-8")
+            ds = a.dtype.str.encode("ascii")
+            parts.append(struct.pack("<H", len(nb)) + nb)
+            parts.append(struct.pack("<B", len(ds)) + ds)
+            parts.append(struct.pack("<B", a.ndim)
+                         + struct.pack(f"<{a.ndim}Q", *a.shape))
+            parts.append(struct.pack("<Q", a.nbytes))
+            parts.append(a.tobytes())
+        return b"".join(parts)
+
+    @classmethod
+    def from_bytes(cls, payload: bytes) -> "DiagramResult":
+        """Decode a wire payload into a queryable result (no live
+        Diagram; ``pairs``/``essential``/``betti`` work off the arrays)."""
+        buf = memoryview(payload)
+        if bytes(buf[:4]) != WIRE_MAGIC:
+            raise ValueError(
+                f"not a DDMS payload (magic {bytes(buf[:4])!r})")
+        version, ndim, _flags = struct.unpack_from("<HBB", buf, 4)
+        if version > WIRE_VERSION:
+            raise ValueError(
+                f"wire version {version} is newer than supported "
+                f"({WIRE_VERSION})")
+        dims = struct.unpack_from("<3Q", buf, 8)
+        (n_arrays,) = struct.unpack_from("<I", buf, 32)
+        off = 36
+        arrs: Dict[str, np.ndarray] = {}
+        for _ in range(n_arrays):
+            (nlen,) = struct.unpack_from("<H", buf, off)
+            off += 2
+            name = bytes(buf[off:off + nlen]).decode("utf-8")
+            off += nlen
+            (dlen,) = struct.unpack_from("<B", buf, off)
+            off += 1
+            dtype = np.dtype(bytes(buf[off:off + dlen]).decode("ascii"))
+            off += dlen
+            (andim,) = struct.unpack_from("<B", buf, off)
+            off += 1
+            shape = struct.unpack_from(f"<{andim}Q", buf, off)
+            off += 8 * andim
+            (nbytes,) = struct.unpack_from("<Q", buf, off)
+            off += 8
+            a = np.frombuffer(buf[off:off + nbytes], dtype=dtype)
+            arrs[name] = a.reshape(shape).copy()
+            off += nbytes
+        if off != len(payload):
+            raise ValueError(
+                f"trailing bytes in payload ({len(payload) - off})")
+        arrs.setdefault("grid_dims", np.asarray(dims, dtype=np.int64))
+        return cls(diagram=None, _arrays=arrs)
+
+
+# Legacy name: the loose result trio is now the queryable DiagramResult.
+PipelineResult = DiagramResult

@@ -1,2 +1,2 @@
-from .engine import generate  # noqa: F401
+from .engine import generate, serve_topo, topo_payload  # noqa: F401
 from .topo_service import ServiceStats, TopoService  # noqa: F401

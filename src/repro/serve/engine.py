@@ -1,5 +1,20 @@
-"""Batched serving: prefill the prompt, then greedy/temperature decode with
-the arch-appropriate cache (KV / SWA ring / MLA latent / SSM state)."""
+"""Batched serving engines.
+
+Two workloads share this module's contract — *serve payloads, not live
+objects*:
+
+- :func:`generate` — LM decode: prefill the prompt, then greedy /
+  temperature decode with the arch-appropriate cache (KV / SWA ring /
+  MLA latent / SSM state); returns plain token arrays.
+- :func:`serve_topo` / :func:`topo_payload` — the persistence-diagram
+  RPC boundary: execute a :class:`~repro.pipeline.TopoRequest` through
+  the declarative ``lower``/``compile``/``run`` path and return the
+  versioned :class:`~repro.pipeline.DiagramResult` wire format
+  (``bytes``), decodable anywhere with ``DiagramResult.from_bytes`` —
+  no live ``Diagram``/``Grid`` objects cross the wire.  The batching
+  wrapper on top is :class:`repro.serve.topo_service.TopoService`
+  (``wire=True``).
+"""
 
 from __future__ import annotations
 
@@ -11,6 +26,31 @@ import numpy as np
 
 from repro.models import transformer as T
 from repro.models.config import ModelConfig
+
+
+# --------------------------------------------------------------------------
+# persistence-diagram payload serving
+# --------------------------------------------------------------------------
+
+def topo_payload(result) -> bytes:
+    """Serialize a :class:`DiagramResult` for the RPC boundary."""
+    return result.to_bytes()
+
+
+def serve_topo(request, *, pipeline=None) -> bytes:
+    """Execute one :class:`TopoRequest` and return its wire payload.
+
+    ``pipeline`` is an optional pre-configured
+    :class:`PersistencePipeline`; a default (shared plan cache) one is
+    built otherwise."""
+    from repro.pipeline import PersistencePipeline
+    pipe = pipeline or PersistencePipeline(backend="jax")
+    return topo_payload(pipe.run(request))
+
+
+# --------------------------------------------------------------------------
+# LM decode serving
+# --------------------------------------------------------------------------
 
 
 def generate(cfg: ModelConfig, params, prompts: np.ndarray, steps: int,

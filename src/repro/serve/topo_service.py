@@ -1,25 +1,31 @@
-"""Request-batching persistence-diagram service — the diagram analogue of
-``serve/engine.py``.
+"""Request-batching persistence-diagram service over the declarative API.
 
-``TopoService`` accepts concurrent scalar-field requests, coalesces them
-into shape-homogeneous batches, and answers each batch with ONE
-``PersistencePipeline.diagrams`` call, so the compiled front-end program
-and the stencil-gather pre-pass are amortized across requests (the
-backend's ``batched`` capability).  A single worker thread drains the
-queue; callers get ``concurrent.futures.Future``s.
+``TopoService`` accepts concurrent requests — plain ndarrays,
+out-of-core :class:`FieldSource`s, or full :class:`TopoRequest` specs —
+coalesces compatible ones into shape-homogeneous batches, and answers
+each batch with ONE ``PersistencePipeline`` dispatch, so the compiled
+front-end program and the stencil-gather pre-pass are amortized across
+requests.  Every path routes through the pipeline's
+``lower``/``compile``/``run`` resolver and the shared plan cache.  A
+single worker thread drains the queue; callers get
+``concurrent.futures.Future``s.
 
     with TopoService(backend="jax", max_batch=8) as svc:
         futs = [svc.submit(f) for f in fields]
+        futs.append(svc.submit(TopoRequest(field=f2, top_k=50)))
         results = [ft.result() for ft in futs]
-    # or, synchronously:
-    results = svc.map(fields)
+    # or, synchronously (mixed payloads + per-request grids):
+    results = svc.map([f0, source, req], grid=[g0, None, None])
+
+With ``wire=True`` futures resolve to *serialized payloads* (the
+versioned ``DiagramResult`` wire format via ``repro.serve.engine``)
+instead of live objects — the RPC-boundary mode.
 
 Failure isolation: a request that blows up only fails its *own* future.
 A failed batch is re-served request-by-request (so a poisoned field
 cannot take its batch siblings down), results land through
 cancellation-tolerant setters, and the worker thread survives any
-exception.  ``FieldSource`` requests (fields larger than memory) are
-accepted too and answered via ``PersistencePipeline.diagram_stream``.
+exception.
 
 This is deliberately dependency-free (queue + thread): the seam where a
 real RPC front (async collectives, multi-host dispatch, result caching)
@@ -33,13 +39,13 @@ import threading
 import time
 from concurrent.futures import Future, InvalidStateError
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, List, Optional, Sequence, Union
 
 import numpy as np
 
 from repro.core.grid import Grid
-from repro.pipeline import PersistencePipeline, PipelineResult
-from repro.stream.chunks import FieldSource
+from repro.pipeline import (DiagramResult, PersistencePipeline,
+                            PipelineResult, TopoRequest)  # noqa: F401
 
 
 @dataclass
@@ -62,23 +68,41 @@ class ServiceStats:
                     stream_requests=self.stream_requests)
 
 
+def _as_request(f, grid: Optional[Grid]) -> "tuple[TopoRequest, bool]":
+    """Coerce a submit payload to (TopoRequest, is_plain_ndarray)."""
+    if isinstance(f, TopoRequest):
+        if grid is not None:
+            f = f.replace(grid=grid)
+        return f, False
+    if isinstance(f, np.ndarray) or np.isscalar(f) \
+            or isinstance(f, (list, tuple)):
+        return TopoRequest(field=np.asarray(f), grid=grid), True
+    return TopoRequest(field=f, grid=grid), False  # FieldSource
+
+
 @dataclass
 class _Request:
-    f: object                        # ndarray or FieldSource
-    grid: Optional[Grid]
+    req: TopoRequest
+    plain: bool                      # bare ndarray, default options
     future: Future = field(default_factory=Future)
 
     @property
-    def is_stream(self) -> bool:
-        return isinstance(self.f, FieldSource) \
-            and not isinstance(self.f, np.ndarray)
-
-    @property
-    def shape_key(self):
-        dims = self.grid.dims if self.grid is not None else None
-        if self.is_stream:
-            return ("stream", self.f.dims)
-        return (self.f.shape, dims)
+    def group_key(self):
+        """Batching key: streams serve alone; plain ndarrays group by
+        (shape, grid); option-carrying requests also group by their
+        execution options so one ``run_batch`` sees one plan."""
+        r = self.req
+        dims = r.grid.dims if r.grid is not None else None
+        if r.is_stream:
+            return ("stream", r.field_shape)
+        if self.plain:
+            return ("plain", r.field_shape, dims)
+        # result-only options (min_persistence / top_k / include_report)
+        # stay per-request through run_batch, so they must NOT split
+        # batches — only plan-affecting options key the group
+        opts = (r.homology_dims, r.backend, r.n_blocks, r.distributed,
+                r.anticipation, r.budget)
+        return ("req", r.field_shape, dims, opts)
 
 
 class TopoService:
@@ -88,19 +112,22 @@ class TopoService:
     ----------
     pipeline : an existing pipeline, or None to build one from
         ``pipeline_kw`` (e.g. ``backend="jax"``, ``n_blocks=4``).
-    max_batch : max requests coalesced into one ``diagrams`` call.
+    max_batch : max requests coalesced into one batched dispatch.
     max_wait_s : how long the worker waits to grow a batch once it holds
         at least one request (latency/throughput knob).
+    wire : resolve futures to serialized wire payloads (bytes) instead
+        of live :class:`DiagramResult` objects.
     """
 
     def __init__(self, pipeline: Optional[PersistencePipeline] = None, *,
                  max_batch: int = 8, max_wait_s: float = 0.002,
-                 **pipeline_kw):
+                 wire: bool = False, **pipeline_kw):
         if max_batch < 1:
             raise ValueError(f"max_batch must be >= 1, got {max_batch}")
         self.pipeline = pipeline or PersistencePipeline(**pipeline_kw)
         self.max_batch = max_batch
         self.max_wait_s = max_wait_s
+        self.wire = wire
         self.stats = ServiceStats()
         self._queue: "queue.Queue[Optional[_Request]]" = queue.Queue()
         self._closed = False
@@ -112,28 +139,42 @@ class TopoService:
     # -- client API --------------------------------------------------------
 
     def submit(self, f, grid: Optional[Grid] = None) -> Future:
-        """Enqueue one field; the Future resolves to a PipelineResult.
+        """Enqueue one request; the Future resolves to a
+        :class:`DiagramResult` (or wire bytes when ``wire=True``).
 
-        ``f`` may also be a :class:`repro.stream.FieldSource` — such
-        requests are answered out-of-core via ``diagram_stream`` (served
-        individually; batching amortizes compiled programs, which
-        streamed chunks already share)."""
-        is_src = isinstance(f, FieldSource) and not isinstance(f, np.ndarray)
-        req = _Request(f if is_src else np.asarray(f), grid)
+        ``f`` may be an ndarray, a :class:`repro.stream.FieldSource`
+        (answered out-of-core via the streamed path), or a full
+        :class:`TopoRequest` carrying its own options."""
+        req, plain = _as_request(f, grid)
+        r = _Request(req, plain)
         with self._lock:
             if self._closed:
                 raise RuntimeError("TopoService is closed")
-            self._queue.put(req)
-        return req.future
+            self._queue.put(r)
+        return r.future
 
-    def diagram(self, f, grid: Optional[Grid] = None) -> PipelineResult:
+    def diagram(self, f, grid: Optional[Grid] = None) -> DiagramResult:
         """Synchronous single request."""
         return self.submit(f, grid).result()
 
-    def map(self, fields: Sequence, grid: Optional[Grid] = None
-            ) -> List[PipelineResult]:
-        """Submit a burst of fields, gather results in order."""
-        futs = [self.submit(f, grid) for f in fields]
+    def map(self, fields: Sequence,
+            grid: Union[Grid, Sequence[Optional[Grid]], None] = None
+            ) -> List[DiagramResult]:
+        """Submit a burst of requests, gather results in order.
+
+        ``fields`` may mix ndarrays, ``FieldSource``s, and
+        ``TopoRequest``s; ``grid`` is either one shared :class:`Grid`
+        or a per-request sequence (None entries infer/defer)."""
+        fields = list(fields)           # generators are welcome
+        if isinstance(grid, (list, tuple)):
+            if len(grid) != len(fields):
+                raise ValueError(
+                    f"per-request grids: got {len(grid)} grids for "
+                    f"{len(fields)} fields")
+            grids: Sequence[Optional[Grid]] = grid
+        else:
+            grids = [grid] * len(fields)
+        futs = [self.submit(f, g) for f, g in zip(fields, grids)]
         return [ft.result() for ft in futs]
 
     def close(self) -> None:
@@ -190,28 +231,41 @@ class TopoService:
             if stop:
                 return
 
+    def _deliver(self, r: _Request, res: DiagramResult) -> None:
+        if self.wire:
+            from .engine import topo_payload
+            _resolve(r.future, topo_payload(res))
+        else:
+            _resolve(r.future, res)
+
     def _serve_one(self, r: _Request) -> None:
-        """Answer a single request, routing sources to the streamed path."""
+        """Answer a single request through the one resolver."""
         try:
-            if r.is_stream:
-                res = self.pipeline.diagram_stream(r.f)
-            else:
-                res = self.pipeline.diagram(r.f, grid=r.grid)
+            res = self.pipeline.run(r.req)
         except Exception as e:
             self.stats.errors += 1
             _fail(r.future, e)
         else:
-            _resolve(r.future, res)
+            self._deliver(r, res)
+
+    def _serve_batched(self, group: List[_Request]) -> List[DiagramResult]:
+        """One batched dispatch for a compatible group."""
+        if all(r.plain for r in group):
+            # the legacy batched entry point (itself a shim over
+            # run_batch) — kept as the dispatch seam for plain fields
+            return self.pipeline.diagrams(
+                [r.req.field for r in group], grid=group[0].req.grid)
+        return self.pipeline.run_batch([r.req for r in group])
 
     def _serve(self, reqs: List[_Request]) -> None:
         self.stats.requests += len(reqs)
-        # group shape-homogeneous runs so diagrams() sees one shape
+        # group compatible runs so one dispatch sees one plan + shape
         groups: Dict[object, List[_Request]] = {}
         for r in reqs:
-            groups.setdefault(r.shape_key, []).append(r)
+            groups.setdefault(r.group_key, []).append(r)
         for group in groups.values():
             self.stats.batches += 1
-            if group[0].is_stream:
+            if group[0].req.is_stream:
                 # streams are served one by one (no batching to report)
                 self.stats.stream_requests += len(group)
                 for r in group:
@@ -221,8 +275,7 @@ class TopoService:
             if len(group) > 1:
                 self.stats.batched_requests += len(group)
             try:
-                results = self.pipeline.diagrams(
-                    [r.f for r in group], grid=group[0].grid)
+                results = self._serve_batched(group)
             except Exception:
                 # a failed batch is re-served request-by-request so one
                 # poisoned field fails only its own future; siblings in
@@ -232,7 +285,7 @@ class TopoService:
                     self._serve_one(r)
                 continue
             for r, res in zip(group, results):
-                _resolve(r.future, res)
+                self._deliver(r, res)
 
 
 def _resolve(future: Future, result) -> None:

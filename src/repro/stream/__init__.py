@@ -8,7 +8,8 @@ per chunk on rank-free (value, vid) keys (``scheduler``), and the
 
 from .chunks import (ArraySource, Chunk, FieldSource,  # noqa: F401
                      FunctionSource, MemmapSource, as_source,
-                     pack_value_keys, plan_chunks, sortable32)
+                     pack_value_keys, plan_chunks, sortable32,
+                     unpack_value_keys)
 from .scheduler import (SparseOrder, StreamReport,  # noqa: F401
                         StreamResult, diagram_vertices, ranks_for_vids,
                         stream_front)

@@ -68,6 +68,18 @@ def pack_value_keys(values: np.ndarray, vids: np.ndarray) -> np.ndarray:
     return ((sortable32(values).reshape(-1) + 2 ** 31) << np.int64(31)) | vids
 
 
+def unpack_value_keys(keys: np.ndarray) -> np.ndarray:
+    """Recover the float32 field values packed into (value, vid) keys.
+
+    Exact inverse of the ``sortable32`` fold in :func:`pack_value_keys`,
+    except ``-0.0`` (folded onto ``+0.0``) comes back as ``+0.0``.  This
+    is how the streamed pipeline serves *value-space* diagram points
+    without ever materializing the field."""
+    s = (np.asarray(keys, dtype=np.int64) >> np.int64(31)) - 2 ** 31
+    fi = np.where(s >= 0, s, -s - 2 ** 31)
+    return fi.astype(np.int32).view(np.float32)
+
+
 # --------------------------------------------------------------------------
 # FieldSource protocol + implementations
 # --------------------------------------------------------------------------

@@ -107,6 +107,12 @@ class StreamResult:
     report: StreamReport
     chunks: List[Chunk] = field(default_factory=list)
 
+    def values_for_vids(self, vids) -> np.ndarray:
+        """Field values of ``vids``, recovered from the packed keys —
+        the field itself was never materialized (-0.0 reads as +0.0)."""
+        from .chunks import unpack_value_keys
+        return unpack_value_keys(self.keys[np.asarray(vids, np.int64)])
+
 
 def _ext_volume(keys_slab: np.ndarray, c: Chunk, dims) -> np.ndarray:
     """(nzl+2, ny, nx) halo key volume of chunk ``c`` (-1 at the boundary)."""

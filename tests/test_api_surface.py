@@ -1,0 +1,97 @@
+"""API-surface snapshot: the public names + signatures of
+``repro.pipeline`` and ``repro.serve`` are pinned to
+``tests/data/api_surface.json`` so accidental breakage (a renamed
+argument, a dropped export) fails tier-1 instead of shipping.
+
+Intentional changes regenerate the snapshot:
+
+    PYTHONPATH=src python tests/test_api_surface.py --write
+"""
+
+import inspect
+import json
+import re
+import sys
+import types
+from pathlib import Path
+
+SNAPSHOT = Path(__file__).parent / "data" / "api_surface.json"
+MODULES = ("repro.pipeline", "repro.serve")
+
+
+def _sig(obj) -> str:
+    try:
+        sig = str(inspect.signature(obj))
+    except (ValueError, TypeError):
+        return "(...)"
+    # default-value reprs may embed memory addresses — not part of the API
+    return re.sub(r" at 0x[0-9a-fA-F]+", " at 0x...", sig)
+
+
+def _describe_class(cls) -> dict:
+    out = {"kind": "class", "signature": _sig(cls), "members": {}}
+    for name, attr in sorted(vars(cls).items()):
+        if name.startswith("_"):
+            continue
+        if isinstance(attr, (staticmethod, classmethod)):
+            out["members"][name] = f"{type(attr).__name__}{_sig(attr.__func__)}"
+        elif inspect.isfunction(attr):
+            out["members"][name] = f"method{_sig(attr)}"
+        elif isinstance(attr, property):
+            out["members"][name] = "property"
+        else:
+            out["members"][name] = type(attr).__name__
+    return out
+
+
+def describe_module(modname: str) -> dict:
+    mod = __import__(modname, fromlist=["*"])
+    out = {}
+    for name in sorted(vars(mod)):
+        if name.startswith("_"):
+            continue
+        obj = getattr(mod, name)
+        if isinstance(obj, types.ModuleType):
+            continue
+        if inspect.isclass(obj):
+            out[name] = _describe_class(obj)
+        elif callable(obj):
+            out[name] = {"kind": "function", "signature": _sig(obj)}
+        else:
+            out[name] = {"kind": type(obj).__name__}
+    return out
+
+
+def current_surface() -> dict:
+    return {m: describe_module(m) for m in MODULES}
+
+
+def test_api_surface_matches_snapshot():
+    assert SNAPSHOT.exists(), \
+        f"missing {SNAPSHOT}; regenerate with " \
+        f"PYTHONPATH=src python {__file__} --write"
+    want = json.loads(SNAPSHOT.read_text())
+    got = current_surface()
+    if got != want:
+        lines = []
+        for mod in MODULES:
+            w, g = want.get(mod, {}), got.get(mod, {})
+            for name in sorted(set(w) | set(g)):
+                if w.get(name) != g.get(name):
+                    lines.append(f"{mod}.{name}:\n  snapshot: "
+                                 f"{w.get(name)}\n  current:  {g.get(name)}")
+        raise AssertionError(
+            "public API surface drifted from tests/data/api_surface.json "
+            "(regenerate with `PYTHONPATH=src python "
+            "tests/test_api_surface.py --write` if intentional):\n"
+            + "\n".join(lines))
+
+
+if __name__ == "__main__":
+    if "--write" in sys.argv:
+        SNAPSHOT.parent.mkdir(parents=True, exist_ok=True)
+        SNAPSHOT.write_text(json.dumps(current_surface(), indent=1,
+                                       sort_keys=True) + "\n")
+        print(f"wrote {SNAPSHOT}")
+    else:
+        print(json.dumps(current_surface(), indent=1, sort_keys=True))
