@@ -11,6 +11,8 @@ BENCH_gradient.json).
         [--quick] [--out BENCH_stream.json]
     PYTHONPATH=src python -m benchmarks.report --section api \
         [--quick] [--out BENCH_api.json]
+    PYTHONPATH=src python -m benchmarks.report --section approx \
+        [--quick] [--out BENCH_approx.json]
 
 The pipeline section runs ``PersistencePipeline`` over a fixed field set
 and dumps every ``StageReport`` (nested per-stage wall times + algorithm
@@ -427,17 +429,123 @@ def api_bench(out_path, quick=False):
     return doc
 
 
+def _approx_bench_field(dims):
+    """A smooth two-blob field with a mild ripple: large-scale features
+    the coarse levels keep (so approximation genuinely engages) plus
+    enough small structure for a non-trivial diagram."""
+    import numpy as np
+    nz, ny, nx = dims[::-1]
+    z, y, x = np.meshgrid(np.linspace(0, 1, nz), np.linspace(0, 1, ny),
+                          np.linspace(0, 1, nx), indexing="ij")
+    f = np.exp(-2.0 * ((x - .45) ** 2 + (y - .55) ** 2 + (z - .5) ** 2))
+    f += 0.5 * np.exp(-2.5 * ((x - .75) ** 2 + (y - .25) ** 2
+                              + (z - .6) ** 2))
+    f += 0.01 * np.cos(4 * np.pi * x) * np.cos(4 * np.pi * y) \
+        * np.cos(4 * np.pi * z)
+    return f.astype(np.float32)
+
+
+def approx_bench(out_path, quick=False):
+    """Approximate vs exact diagrams (repro.approx); BENCH_approx.json.
+
+    Runs the exact pipeline and ``epsilon``-bounded approximations on a
+    64^3 smooth field (epsilon = 1% and 5% of the field range; the
+    acceptance gate is >= 2x wall-clock speedup at 5%), machine-checks
+    the guarantee (``bottleneck_feasible`` at the reported bound) for
+    every run, and records the preview latency — time to the *first*
+    progressive result, hierarchy construction included."""
+    import numpy as np
+
+    from repro.approx import bottleneck_feasible, refine
+    from repro.core.grid import Grid
+    from repro.pipeline import PersistencePipeline, TopoRequest
+
+    dims = (32, 32, 32) if quick else (64, 64, 64)
+    pcts = (0.05, 0.10) if quick else (0.01, 0.05)  # quick: coarser grid
+    # needs a looser epsilon for the coarse path to engage in CI smoke
+    g = Grid.of(*dims)
+    f = _approx_bench_field(dims)
+    frange = float(np.ptp(f))
+    pipe = PersistencePipeline(backend="jax")
+    req = TopoRequest(field=f, grid=g)
+
+    pipe.run(req)                                 # warm: exact compile
+    t0 = time.perf_counter()
+    exact = pipe.run(req)
+    exact_s = time.perf_counter() - t0
+
+    runs = []
+    for pct in pcts:
+        eps = pct * frange
+        pipe.run(req.replace(epsilon=eps))        # warm: level compile
+        t0 = time.perf_counter()
+        res = pipe.run(req.replace(epsilon=eps))
+        s = time.perf_counter() - t0
+        # the guarantee, machine-checked into the artifact
+        guaranteed = all(
+            bottleneck_feasible(res.pairs(p, min_persistence=0),
+                                exact.pairs(p, min_persistence=0),
+                                res.error_bound + 1e-9)
+            for p in range(g.dim))
+        assert guaranteed, f"bound violated at epsilon={pct:.0%} of range"
+        runs.append({
+            "epsilon_frac_of_range": pct, "epsilon": eps,
+            "level": res.approx_level, "stride": res.approx_stride,
+            "error_bound": res.error_bound,
+            "seconds": s, "exact_seconds": exact_s,
+            "speedup": exact_s / s,
+            "bottleneck_guarantee_checked": guaranteed,
+            "n_pairs_d0": int(len(res.pairs(0, min_persistence=0))),
+        })
+
+    # preview latency: time to the FIRST progressive result (hierarchy
+    # build + coarsest level), on a warm cache
+    for r in refine(pipe, req):
+        break                                     # warm coarsest level
+    t0 = time.perf_counter()
+    preview = next(iter(refine(pipe, req)))
+    preview_s = time.perf_counter() - t0
+
+    doc = {"schema": "ddms-approx-bench/v1",
+           "platform": platform.platform(),
+           "python": platform.python_version(),
+           "quick": bool(quick),
+           "dims": list(dims), "field_range": frange,
+           "exact_seconds": exact_s,
+           "preview": {"seconds": preview_s,
+                       "level": preview.approx_level,
+                       "error_bound": preview.error_bound,
+                       "speedup": exact_s / preview_s},
+           "runs": runs}
+    Path(out_path).write_text(json.dumps(doc, indent=1))
+    print(f"wrote {out_path}: exact={exact_s*1e3:.0f}ms "
+          f"preview={preview_s*1e3:.0f}ms "
+          f"({exact_s/preview_s:.1f}x, bound={preview.error_bound:.3f})")
+    for r in runs:
+        print(f"  eps={r['epsilon_frac_of_range']:.0%} of range: "
+              f"level={r['level']} bound={r['error_bound']:.4f} "
+              f"{r['seconds']*1e3:.0f}ms speedup={r['speedup']:.2f}x "
+              f"guarantee=checked")
+    if not quick:
+        at5 = next(r for r in runs
+                   if r["epsilon_frac_of_range"] == 0.05)
+        assert at5["speedup"] >= 2.0, \
+            f"speedup {at5['speedup']:.2f}x at epsilon=5% below the 2x gate"
+    return doc
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--dir", default="results/dryrun")
     ap.add_argument("--section", default="all",
                     choices=["all", "roofline", "dryrun", "pipeline",
-                             "gradient", "stream", "api"])
+                             "gradient", "stream", "api", "approx"])
     ap.add_argument("--out", default=None,
                     help="output path for --section "
-                         "pipeline/gradient/stream/api")
+                         "pipeline/gradient/stream/api/approx")
     ap.add_argument("--quick", action="store_true",
-                    help="small sizes for CI smoke (gradient/stream/api)")
+                    help="small sizes for CI smoke "
+                         "(gradient/stream/api/approx)")
     args = ap.parse_args()
     if args.section == "pipeline":
         pipeline_bench(args.out or "BENCH_pipeline.json")
@@ -450,6 +558,9 @@ def main():
         return
     if args.section == "api":
         api_bench(args.out or "BENCH_api.json", quick=args.quick)
+        return
+    if args.section == "approx":
+        approx_bench(args.out or "BENCH_approx.json", quick=args.quick)
         return
     recs = load(args.dir)
     if args.section in ("all", "dryrun"):

@@ -52,6 +52,14 @@ def main():
     print("  stage times:",
           {c.name: f"{c.seconds:.3f}s" for c in res.report.children})
     print(f"  wire payload: {len(res.to_bytes())} bytes")
+    # one-line bounded-error preview: the coarsest multiresolution level
+    # whose guaranteed bottleneck bound meets epsilon (repro.approx) —
+    # generous here so decimation engages even at demo resolutions
+    prev = pipe.run(TopoRequest(field=f, grid=g, epsilon=0.6 * np.ptp(f)))
+    print(f"  preview (epsilon = 60% of range): level {prev.approx_level} "
+          f"({prev.approx_stride}x decimation), guaranteed error bound "
+          f"{prev.error_bound:.4f}, {len(prev.pairs(0, certain_only=True))} "
+          f"certain D0 pairs")
     if args.check:
         orc = oracle_to_diagram(compute_oracle(g, f), g)
         assert same_offdiagonal(dg, orc), diff_report(dg, orc)

@@ -1,0 +1,31 @@
+"""Progressive approximation engine: bounded-error multiresolution
+diagrams, deadline-aware refinement, and preview serving.
+
+The cheap-first-answer counterpart of the exact DDMS pipeline (after
+Vidal & Tierny's "Fast Approximation of Persistence Diagrams with
+Guarantees"): a power-of-two decimation hierarchy with provable
+per-level bottleneck-error bounds (:mod:`hierarchy`), an engine that
+picks the coarsest level meeting an ``epsilon`` and runs the standard
+pipeline on it (:mod:`engine`), a coarse-to-fine refinement driver with
+``epsilon`` / ``deadline_s`` stopping (:mod:`progressive`), and the
+exact bottleneck-distance machinery that machine-checks the guarantee
+(:mod:`metrics`).
+
+Front doors: ``TopoRequest(field=f, epsilon=...)`` (and
+``progressive=`` / ``deadline_s=``) through ``PersistencePipeline.run``
+or ``TopoService.submit`` — this package is also usable directly:
+
+    from repro.approx import Hierarchy, approximate, refine
+
+    res = approximate(pipe, TopoRequest(field=f), epsilon=0.05)
+    res.error_bound                      # guaranteed d_B bound
+    for res in refine(pipe, TopoRequest(field=f)):
+        ...                              # shrinking bounds -> exact
+"""
+
+from .engine import APPROX_META, approximate, build_hierarchy  # noqa: F401
+from .hierarchy import (Hierarchy, Level, block_minmax,  # noqa: F401
+                        coarse_dims)
+from .metrics import (bottleneck_distance, bottleneck_feasible,  # noqa: F401
+                      essential_distance)
+from .progressive import approximate_progressive, refine  # noqa: F401

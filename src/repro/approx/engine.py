@@ -1,0 +1,115 @@
+"""`approximate` — bounded-error diagrams from the multiresolution hierarchy.
+
+``approximate(pipeline, request, epsilon=...)`` picks the *coarsest*
+hierarchy level whose guaranteed bound meets ``epsilon``, runs the
+standard pipeline (same backend / engines / streaming machinery, via
+the shared :class:`PlanCache`) on the decimated field, and returns a
+:class:`DiagramResult` that *carries its guarantee*:
+
+- ``res.error_bound`` — an upper bound on the bottleneck distance
+  between the returned diagram and the exact one, in field units.  The
+  bound is provable, not empirical: the decimated samples are *fine
+  vertices* (levels nest), so every reported birth/death value is an
+  exact field value at a real vertex and the coarse diagram is the
+  diagram of the monotone block extension ``f_l`` of those samples to
+  the fine grid — stability then gives ``d_B(D(f), D(f_l)) <=
+  ||f - f_l||_inf <=`` the hierarchy's block-diameter bound.
+- ``res.uncertainty_threshold`` (= ``2 * bound``) — pairs whose
+  persistence falls below it may be diagonal artifacts;
+  ``res.pairs(dim, certain_only=True)`` keeps only pairs guaranteed to
+  correspond to real features.
+- ``approx_meta`` — a new *optional* named array in the v1 wire format
+  (bound, level, stride, fine dims), so payloads stay decodable by
+  readers that predate it and decoded payloads still answer
+  ``error_bound``.
+
+``epsilon=0`` (or a bound no level meets) degrades gracefully to the
+exact pipeline — level 0 *is* the exact computation, tagged with bound
+0.0.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import numpy as np
+
+from repro.pipeline.request import TopoRequest, strip_field
+
+from .hierarchy import Hierarchy, Level
+
+APPROX_META = "approx_meta"   # [bound, level, stride, fine nx, ny, nz]
+
+
+def _as_resolved(pipeline, request) -> TopoRequest:
+    if not isinstance(request, TopoRequest):
+        request = TopoRequest(field=request)
+    return request.resolve()
+
+
+def _base_request(req: TopoRequest) -> TopoRequest:
+    """The request with the approximation knobs stripped — what actually
+    executes (at some level) through the standard resolver."""
+    return req.replace(epsilon=None, deadline_s=None, progressive=False)
+
+
+def build_hierarchy(pipeline, req: TopoRequest) -> Hierarchy:
+    """The hierarchy for a resolved request, on the plan's backend."""
+    backend = req.backend if req.backend is not None \
+        else pipeline.backend.name
+    return Hierarchy(req.field, req.grid, backend=backend)
+
+
+def _level_request(base: TopoRequest, hierarchy: Hierarchy,
+                   lev: Level) -> TopoRequest:
+    """The decimated sub-request for one level (grid re-inferred from
+    the coarse field; chunking rescaled to the coarse z extent)."""
+    if lev.level == 0:
+        return base
+    chunk_z = base.chunk_z
+    if chunk_z is not None:
+        chunk_z = max(1, chunk_z // lev.stride)
+    return base.replace(field=hierarchy.decimate(lev.level), grid=None,
+                        chunk_z=chunk_z)
+
+
+def _attach_meta(res, req: TopoRequest, fine_dims, lev: Level):
+    """Stamp the guarantee onto a finished result (and re-point its
+    provenance at the original fine request)."""
+    nx, ny, nz = fine_dims
+    res.arrays()[APPROX_META] = np.asarray(
+        [lev.bound, lev.level, lev.stride, nx, ny, nz], dtype=np.float64)
+    res.request = strip_field(req)
+    return res
+
+
+def approximate(pipeline, request, *, epsilon: Optional[float] = None,
+                level: Optional[int] = None,
+                hierarchy: Optional[Hierarchy] = None):
+    """One bounded-error diagram of ``request`` through ``pipeline``.
+
+    Exactly one of ``epsilon`` (pick the coarsest level whose guaranteed
+    bound meets it; falls back to ``request.epsilon``) or ``level`` (run
+    a specific hierarchy level) selects the resolution.  Returns a
+    :class:`DiagramResult` whose ``error_bound`` / ``approx_level`` /
+    ``uncertainty_threshold`` carry the guarantee and whose
+    ``approx_meta`` array survives the v1 wire format."""
+    req = _as_resolved(pipeline, request)
+    if epsilon is None and level is None:
+        epsilon = req.epsilon
+    if epsilon is None and level is None:
+        raise ValueError("approximate() needs epsilon= or level= "
+                         "(or a request carrying epsilon)")
+    if epsilon is not None and level is not None:
+        raise ValueError("pass epsilon= or level=, not both")
+    base = _base_request(req)
+    if level is None and epsilon == 0 and hierarchy is None:
+        # only level 0 can qualify: skip the full-field min/max pass
+        # and run the exact pipeline directly
+        return _attach_meta(pipeline.run(base), req, req.grid.dims,
+                            Level(0, 1, req.grid.dims, 0.0))
+    h = hierarchy if hierarchy is not None \
+        else build_hierarchy(pipeline, req)
+    lev = h.level(level) if level is not None else h.pick_level(epsilon)
+    res = pipeline.run(_level_request(base, h, lev))
+    return _attach_meta(res, req, h.grid.dims, lev)

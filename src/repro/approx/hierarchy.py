@@ -1,0 +1,262 @@
+"""Power-of-two multiresolution hierarchy with provable error bounds.
+
+Vidal & Tierny ("Fast Approximation of Persistence Diagrams with
+Guarantees", PAPERS.md) show that computing the diagram of a *coarser
+version* of the field yields an approximation whose bottleneck distance
+to the exact diagram is bounded by how far the coarse field deviates
+from the fine one — the classical stability theorem
+``d_B(D(f), D(g)) <= ||f - g||_inf`` turned into an engineering knob.
+
+This module is the data half of that story for regular grids:
+
+- **Decimation.**  Level ``l`` keeps the fine vertices whose index is a
+  multiple of ``2^l`` on every axis.  The sampled subsets *nest*
+  (level ``l+1`` samples are level-``l`` samples), the coarse grid is a
+  regular grid again (``ceil(n / 2^l)`` per axis — the standard
+  pipeline runs on it unchanged), and the Freudenthal edge types of the
+  coarse grid match the fine-grid block adjacency exactly (both use the
+  nonnegative ``{0,1}^3`` offsets), which is what makes the coarse
+  diagram a diagram *of an extension field on the fine grid*.
+- **Error field.**  Each coarse vertex ``c`` of level ``l`` owns the
+  fine block ``[c*s, (c+1)*s)`` per axis (clipped).  The per-level
+  error field is the block f-diameter ``delta_l(c) = max_{v in B(c)}
+  f(v) - min_{v in B(c)} f(v)`` — an upper bound on
+  ``max_nbhd |f - f_coarse|`` since ``c``'s own sample lies in the
+  block.  The global bound ``max_c delta_l(c)`` bounds
+  ``||f - f_l||_inf`` for the flat block extension ``f_l``, hence the
+  bottleneck error of the level-``l`` diagram.  Because blocks nest
+  level-to-level, the bound is *monotonically non-increasing* under
+  refinement by construction (the progressive contract), and it is
+  computed from exact min/max field values (no float rounding can
+  understate it: the subtraction runs in float64 over float32 inputs).
+- **Pyramid.**  Min/max are computed once over the fine field (one
+  vectorized pass — numpy for the ``np`` backend, a jitted jnp
+  reduction for the jax/pallas backends; out-of-core sources stream
+  z-slabs through the same reduction) and then cascaded coarse-to-
+  coarser with stride-2 block reductions, so building every level's
+  bound costs one fine pass plus geometrically-shrinking cascades.
+
+Coarse levels plug straight back into the existing machinery: in-memory
+fields decimate to ``(ncz, ncy, ncx)`` arrays, out-of-core fields wrap
+into :class:`repro.stream.DecimatedSource` so coarse levels stream
+through the unchanged chunk scheduler.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.grid import Grid
+from repro.pipeline.request import resolve_grid
+from repro.stream.chunks import DecimatedSource, FieldSource, as_source
+
+MAX_LEVELS = 10   # stride 2^10 = 1024: beyond any grid this repo runs
+
+
+def coarse_dims(dims, stride: int) -> Tuple[int, int, int]:
+    """Vertex dims of the stride-decimated grid (``ceil(n / stride)``)."""
+    return tuple((int(d) + stride - 1) // stride for d in Grid.of(*dims).dims)
+
+
+def _is_source(field) -> bool:
+    return not isinstance(field, np.ndarray) and hasattr(field, "read_slab")
+
+
+def _pad_block(vol, s: int, xp):
+    """Edge-pad each axis to a multiple of ``s`` (replicated values stay
+    inside their own clipped block, so block min/max are unchanged)."""
+    nz, ny, nx = vol.shape
+    pz, py, px = (-nz) % s, (-ny) % s, (-nx) % s
+    if pz or py or px:
+        vol = xp.pad(vol, ((0, pz), (0, py), (0, px)), mode="edge")
+    return vol
+
+
+def _block_minmax_np(vol: np.ndarray, s: int):
+    v = _pad_block(np.asarray(vol), s, np)
+    nz, ny, nx = v.shape
+    r = v.reshape(nz // s, s, ny // s, s, nx // s, s)
+    return r.min(axis=(1, 3, 5)), r.max(axis=(1, 3, 5))
+
+
+def _jnp_block_minmax():
+    """Build the jitted jnp reduction lazily (one jit, static stride)."""
+    import jax
+    import jax.numpy as jnp
+
+    @partial(jax.jit, static_argnums=(1,))
+    def kernel(vol, s):
+        v = _pad_block(vol, s, jnp)
+        nz, ny, nx = v.shape
+        r = v.reshape(nz // s, s, ny // s, s, nx // s, s)
+        return r.min(axis=(1, 3, 5)), r.max(axis=(1, 3, 5))
+
+    return kernel
+
+
+_JNP_KERNEL = None
+
+
+def block_minmax(vol: np.ndarray, s: int, backend: str = "np"):
+    """Per-block (stride ``s``, clipped at the boundary) min and max of a
+    ``(nz, ny, nx)`` volume; shapes are the coarse dims.
+
+    ``backend``: ``np`` runs the numpy reduction; any jax-family backend
+    name (``jax`` / ``pallas`` / ``pallas_prepass`` / ``shardmap``) runs
+    one jitted XLA reduction program (reused across calls)."""
+    if s < 1:
+        raise ValueError(f"stride must be >= 1, got {s}")
+    if s == 1:
+        v = np.asarray(vol)
+        return v.copy(), v.copy()
+    if backend == "np":
+        return _block_minmax_np(vol, s)
+    global _JNP_KERNEL
+    if _JNP_KERNEL is None:
+        _JNP_KERNEL = _jnp_block_minmax()
+    mn, mx = _JNP_KERNEL(np.asarray(vol), int(s))
+    return np.asarray(mn), np.asarray(mx)
+
+
+@dataclass(frozen=True)
+class Level:
+    """One hierarchy level: stride, coarse grid dims, guaranteed bound.
+
+    ``bound`` is an upper bound (field units, float64) on the bottleneck
+    distance between the level's diagram and the exact diagram; level 0
+    is the fine grid itself (``bound == 0.0``)."""
+
+    level: int
+    stride: int
+    dims: Tuple[int, int, int]    # coarse vertex dims (nx, ny, nz)
+    bound: float
+
+    @property
+    def n_vertices(self) -> int:
+        return int(np.prod(self.dims))
+
+
+class Hierarchy:
+    """Multiresolution decimation of one field with per-level bounds.
+
+    Parameters
+    ----------
+    field : ndarray (flat or ``(nz, ny, nx)``) or a ``FieldSource``.
+    grid : explicit :class:`Grid` (inferred via ``resolve_grid`` if
+        None — flat arrays need it).
+    backend : which reduction computes the min/max pyramid (``np`` or a
+        jax-family backend name).
+    max_level : cap on the coarsest level (default: as coarse as the
+        grid allows, every axis keeping >= 2 vertices so the complex
+        dimension — and with it the set of homology dimensions — is
+        preserved at every level).
+    """
+
+    def __init__(self, field, grid: Optional[Grid] = None, *,
+                 backend: str = "np", max_level: Optional[int] = None):
+        self.grid = resolve_grid(field, grid)
+        nx, ny, nz = self.grid.dims
+        self._source = as_source(field, dims=self.grid.dims) \
+            if _is_source(field) else None
+        self._f3 = None if self._source is not None else \
+            np.asarray(field).reshape(nz, ny, nx)
+        cap = MAX_LEVELS if max_level is None else int(max_level)
+        top = 0
+        while top < cap and all(
+                d == 1 or d > 2 ** (top + 1) for d in self.grid.dims):
+            top += 1
+        self._mins: Dict[int, np.ndarray] = {}
+        self._maxs: Dict[int, np.ndarray] = {}
+        if top >= 1:
+            mn, mx = self._level1_minmax(backend)
+            self._mins[1], self._maxs[1] = mn, mx
+            for l in range(2, top + 1):
+                # level-l blocks are unions of level-(l-1) blocks, so the
+                # cascade is exact (no re-read of the fine field)
+                self._mins[l] = block_minmax(self._mins[l - 1], 2, backend)[0]
+                self._maxs[l] = block_minmax(self._maxs[l - 1], 2, backend)[1]
+        self.levels: List[Level] = [
+            Level(0, 1, self.grid.dims, 0.0)] + [
+            Level(l, 2 ** l, coarse_dims(self.grid.dims, 2 ** l),
+                  float(self.error_field(l).max()))
+            for l in range(1, top + 1)]
+
+    # -- pyramid -------------------------------------------------------------
+
+    def _level1_minmax(self, backend: str):
+        if self._f3 is not None:
+            return block_minmax(self._f3, 2, backend)
+        # out-of-core: stream fine z-slabs two planes at a time through
+        # the same block reduction; only O(nv / 8) min/max planes are
+        # kept (the level-1 pyramid — the residue the cascade needs)
+        src = self._source
+        nx, ny, nz = self.grid.dims
+        # an even plane count per slab keeps z-blocks from splitting
+        # across slab boundaries (~8 MB of float32 planes per read)
+        group = 2 * max(1, (8 << 20) // max(1, nx * ny * 4) // 2)
+        mns, mxs = [], []
+        for zlo in range(0, nz, group):
+            mn, mx = block_minmax(
+                src.read_slab(zlo, min(zlo + group, nz)), 2, backend)
+            mns.append(mn)
+            mxs.append(mx)
+        return np.concatenate(mns, axis=0), np.concatenate(mxs, axis=0)
+
+    # -- views ---------------------------------------------------------------
+
+    @property
+    def max_level(self) -> int:
+        return self.levels[-1].level
+
+    def level(self, l: int) -> Level:
+        if not (0 <= l <= self.max_level):
+            raise ValueError(
+                f"level {l} out of range: this hierarchy offers 0.."
+                f"{self.max_level} for dims {self.grid.dims}")
+        return self.levels[l]
+
+    def bound(self, l: int) -> float:
+        """Guaranteed bottleneck-error bound of level ``l`` (f units)."""
+        return self.level(l).bound
+
+    def error_field(self, l: int) -> np.ndarray:
+        """Per-coarse-vertex error field of level ``l``: the f-diameter
+        of each vertex's fine block, ``(ncz, ncy, ncx)`` float64.  The
+        float64 subtraction over exact float32 min/max values cannot
+        round below the true diameter."""
+        if l == 0:
+            nx, ny, nz = self.grid.dims
+            return np.zeros((nz, ny, nx))
+        if l not in self._mins:
+            raise ValueError(
+                f"level {l} out of range: this hierarchy offers 0.."
+                f"{max(self._mins, default=0)} for dims {self.grid.dims}")
+        return self._maxs[l].astype(np.float64) \
+            - self._mins[l].astype(np.float64)
+
+    def decimate(self, l: int):
+        """The level-``l`` field, ready for a :class:`TopoRequest`:
+        a ``(ncz, ncy, ncx)`` array for in-memory fields, a
+        :class:`DecimatedSource` for out-of-core sources (coarse levels
+        stream through the unchanged chunk machinery)."""
+        lev = self.level(l)
+        if self._source is not None:
+            if lev.stride == 1:
+                return self._source
+            return DecimatedSource(self._source, lev.stride)
+        s = lev.stride
+        return np.ascontiguousarray(self._f3[::s, ::s, ::s])
+
+    def pick_level(self, epsilon: float) -> Level:
+        """The coarsest level whose guaranteed bound meets ``epsilon``
+        (level 0 always qualifies: its bound is 0)."""
+        if epsilon < 0:
+            raise ValueError(f"epsilon must be >= 0, got {epsilon}")
+        for lev in reversed(self.levels):
+            if lev.bound <= epsilon:
+                return lev
+        return self.levels[0]

@@ -1,0 +1,76 @@
+"""Progressive refinement: coarse preview now, exact diagram on demand.
+
+``refine(pipeline, request)`` is a generator walking the hierarchy
+coarse-to-fine, yielding one guaranteed :class:`DiagramResult` per
+level with *monotonically non-increasing* error bounds (the hierarchy's
+block-diameter bounds shrink by construction as blocks split).  The
+final level is the fine grid itself, so a fully-drained refinement ends
+bit-identical to the exact pipeline.
+
+Stopping rules (combinable; at least one result is always yielded):
+
+- ``epsilon`` — stop once a level's guaranteed bound meets it (level 0
+  has bound 0, so the walk always terminates);
+- ``deadline_s`` — wall-clock budget measured from the first field
+  access: refinement stops *before* starting a level whose predecessor
+  finished past the deadline.  The coarsest preview always runs — a
+  deadline can shorten refinement, never produce nothing.
+
+Each level executes through the standard resolver, so per-level
+compiled programs land in the shared :class:`PlanCache` — a service
+refining many same-shape fields compiles each level once.  Levels whose
+bound does not improve on the previous one are skipped (they cannot
+change the guarantee and would waste the budget).
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Iterator, Optional
+
+from .engine import (_as_resolved, _attach_meta, _base_request,
+                     _level_request, build_hierarchy)
+from .hierarchy import Hierarchy
+
+
+def refine(pipeline, request, *, epsilon: Optional[float] = None,
+           deadline_s: Optional[float] = None,
+           hierarchy: Optional[Hierarchy] = None) -> Iterator:
+    """Yield successive bounded-error results, coarse to fine.
+
+    ``epsilon`` / ``deadline_s`` default to the request's own values;
+    with neither set, refinement runs all the way to the exact diagram
+    (final ``error_bound == 0.0``, bit-identical to ``pipeline.run`` of
+    the plain request)."""
+    req = _as_resolved(pipeline, request)
+    if epsilon is None:
+        epsilon = req.epsilon
+    if deadline_s is None:
+        deadline_s = req.deadline_s
+    t0 = time.monotonic()
+    h = hierarchy if hierarchy is not None \
+        else build_hierarchy(pipeline, req)
+    base = _base_request(req)
+    last_bound = None
+    for lev in reversed(h.levels):            # coarsest first
+        if last_bound is not None:
+            if deadline_s is not None \
+                    and time.monotonic() - t0 > deadline_s:
+                return
+            if lev.level > 0 and lev.bound >= last_bound:
+                continue                      # no tighter guarantee
+        res = pipeline.run(_level_request(base, h, lev))
+        yield _attach_meta(res, req, h.grid.dims, lev)
+        last_bound = lev.bound
+        if epsilon is not None and lev.bound <= epsilon:
+            return
+
+
+def approximate_progressive(pipeline, request, **kw):
+    """Drain :func:`refine` and return the final (tightest) result —
+    the single-result form the pipeline resolver uses for progressive
+    and deadline-carrying requests."""
+    res = None
+    for res in refine(pipeline, request, **kw):
+        pass
+    return res

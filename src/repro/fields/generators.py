@@ -20,9 +20,11 @@ benchmark fields at resolutions where the full array would not fit.
 Deterministic fields evaluate their closed form on the slab coordinates;
 rng-backed fields replay the generator bit stream in O(chunk)-sized
 blocks, keeping only the requested planes (numpy ``Generator`` draws are
-split-invariant: drawing n then m values equals drawing n+m).  The one
-exception is ``pressure``, whose global FFT has no local form — its chunk
-path materializes the full field once and slices (documented, exact).
+split-invariant: drawing n then m values equals drawing n+m).
+``pressure`` synthesizes its band-limited spectrum from a fixed number
+of random Fourier modes (drawn once, independent of the range), so every
+generator — pressure included — evaluates any vid range from O(chunk)
+memory with no full-field materialization.
 """
 
 from __future__ import annotations
@@ -127,23 +129,38 @@ def _truss(g, rng, lo, hi):
     return (f + defects).astype(np.float32)
 
 
-def _pressure_full(g: Grid, rng) -> np.ndarray:
-    nx, ny, nz = g.dims
-    white = rng.standard_normal((nz, ny, nx))
-    spec = np.fft.rfftn(white)
-    kz = np.fft.fftfreq(nz)[:, None, None]
-    ky = np.fft.fftfreq(ny)[None, :, None]
-    kx = np.fft.rfftfreq(nx)[None, None, :]
-    k = np.sqrt(kx * kx + ky * ky + kz * kz) + 1e-6
-    spec = spec * (k ** (-5.0 / 6.0)) * (k < 0.4)
-    f = np.fft.irfftn(spec, s=(nz, ny, nx))
-    return f.reshape(-1).astype(np.float32)
+_PRESSURE_MODES = 96
 
 
 def _pressure(g, rng, lo, hi):
-    # global FFT: no local form — exact but NOT O(chunk) for partial reads
-    f = _pressure_full(g, rng)
-    return f[lo:hi]
+    """Band-limited turbulence-like noise with a *local* closed form.
+
+    A finite sum of random Fourier modes with the same spectral envelope
+    as the old global-FFT formulation (``k^(-5/6)`` amplitudes,
+    ``|k| < 0.4`` cycles/sample) — but each mode is a plain cosine, so
+    any vid range evaluates from O(modes * chunk) work with no
+    full-field materialization.  All rng draws happen up front and do
+    not depend on [lo, hi), and the mode loop accumulates elementwise in
+    a fixed order, so chunk evaluation is bit-equal to full-field
+    slices."""
+    nx, ny, nz = g.dims
+    # random directions on the sphere, band-limited magnitudes, and
+    # k^(-5/6)-envelope amplitudes with random signs/phases
+    dirs = rng.standard_normal((_PRESSURE_MODES, 3))
+    dirs /= np.maximum(np.linalg.norm(dirs, axis=1, keepdims=True), 1e-12)
+    kmag = rng.uniform(0.02, 0.4, _PRESSURE_MODES)
+    amp = rng.standard_normal(_PRESSURE_MODES) * kmag ** (-5.0 / 6.0)
+    phase = rng.uniform(0.0, 2 * np.pi, _PRESSURE_MODES)
+    k = 2 * np.pi * dirs * kmag[:, None]     # radians per grid sample
+    v = np.arange(lo, hi)
+    x = (v % nx).astype(np.float64)
+    y = ((v // nx) % ny).astype(np.float64)
+    z = (v // (nx * ny)).astype(np.float64)
+    f = np.zeros(hi - lo)
+    for m in range(_PRESSURE_MODES):
+        f += amp[m] * np.cos(k[m, 0] * x + k[m, 1] * y + k[m, 2] * z
+                             + phase[m])
+    return (f / np.sqrt(_PRESSURE_MODES)).astype(np.float32)
 
 
 _RANGE_FIELDS: Dict[str, Callable] = {
@@ -189,8 +206,8 @@ def make_field_chunk(name: str, dims, seed: int, zlo: int,
     """z-planes [zlo, zhi) of ``make_field(name, dims, seed)``, bit-exact.
 
     Returns a (zhi - zlo, ny, nx) float32 volume computed from O(chunk)
-    memory (``pressure`` excepted — see module doc).  This is the seekable
-    generator behind ``repro.stream.FunctionSource.synthetic``."""
+    memory, for every field.  This is the seekable generator behind
+    ``repro.stream.FunctionSource.synthetic``."""
     g = Grid.of(*dims)
     nx, ny, nz = g.dims
     if not (0 <= zlo < zhi <= nz):

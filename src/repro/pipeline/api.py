@@ -108,9 +108,7 @@ class PersistencePipeline:
             backend=be, n_blocks=n_blocks,
             distributed=(n_blocks > 1) if distributed is None else distributed,
             anticipation=anticipation, budget=budget)
-        # `is None`, not truthiness: an empty PlanCache is falsy (len 0)
-        self.plan_cache = plan_cache if plan_cache is not None \
-            else default_plan_cache()
+        self.plan_cache = plan_cache or default_plan_cache()
 
     # -- helpers -----------------------------------------------------------
 
@@ -183,7 +181,9 @@ class PersistencePipeline:
                     budget=budget, streamed=streamed,
                     chunk_z=req.chunk_z, chunk_budget=req.chunk_budget,
                     homology_dims=hdims,
-                    stage_names=front + _back_stage_names(g.dim, hdims))
+                    stage_names=front + _back_stage_names(g.dim, hdims),
+                    epsilon=req.epsilon, deadline_s=req.deadline_s,
+                    progressive=req.progressive)
 
     def compile(self, request, grid=None, **options) -> Executable:
         """``lower`` + bind compiled artifacts via the shared cache."""
@@ -202,6 +202,8 @@ class PersistencePipeline:
         Accepts a :class:`TopoRequest`, or an ndarray/``FieldSource``
         plus keyword options which are packed into one."""
         req = self._as_request(request, grid, **options).resolve()
+        if req.is_approx:
+            return self._run_approx(req)
         plan = self._lower_resolved(req)
         if plan.streamed:
             # the streamed front-end drives its own per-chunk kernels;
@@ -227,6 +229,13 @@ class PersistencePipeline:
         out: List[Optional[DiagramResult]] = [None] * len(reqs)
         for idxs in groups.values():
             plan = plans[idxs[0]]
+            if plan.is_approx:
+                # approximation picks its level per field (the bound is
+                # data-dependent), so these serve one by one — each
+                # level still amortizes through the shared plan cache
+                for i in idxs:
+                    out[i] = self._run_approx(reqs[i])
+                continue
             if plan.streamed:
                 for i in idxs:
                     out[i] = self._run_stream(reqs[i], plan)
@@ -242,6 +251,18 @@ class PersistencePipeline:
         return out
 
     # -- execution paths ---------------------------------------------------
+
+    def _run_approx(self, req: TopoRequest) -> DiagramResult:
+        """Bounded-error / progressive path (``repro.approx``): picks a
+        hierarchy level for ``epsilon`` requests, walks coarse-to-fine
+        for ``progressive`` / ``deadline_s`` ones (returning the final,
+        tightest result — ``repro.approx.refine`` yields the
+        intermediates, ``TopoService`` serves them as previews)."""
+        from repro.approx.engine import approximate
+        from repro.approx.progressive import approximate_progressive
+        if req.progressive or req.deadline_s is not None:
+            return approximate_progressive(self, req)
+        return approximate(self, req)
 
     def _cfg(self, plan: Plan) -> PipelineConfig:
         return PipelineConfig(

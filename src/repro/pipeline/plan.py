@@ -97,6 +97,13 @@ class PlanCache:
             self._building.pop(key).set()
         return out
 
+    def __bool__(self) -> bool:
+        # a cache is always truthy, even when empty: ``__len__`` alone
+        # would make `cache or default_plan_cache()` silently discard a
+        # fresh isolated cache (the falsiness footgun the `is None`
+        # guards used to work around)
+        return True
+
     def __contains__(self, key: tuple) -> bool:
         with self._lock:
             return key in self._entries
@@ -152,12 +159,25 @@ class Plan:
     chunk_budget: Optional[int] = None
     homology_dims: Tuple[int, ...] = ()
     stage_names: Tuple[str, ...] = ()
+    # approximation knobs (repro.approx): the plan records them so the
+    # resolver can route to the hierarchy engine and batches never mix
+    # approximate with exact execution
+    epsilon: Optional[float] = None
+    deadline_s: Optional[float] = None
+    progressive: bool = False
 
     @property
     def key(self) -> tuple:
         return (self.dims, self.backend, self.n_blocks, self.distributed,
                 self.anticipation, self.budget, self.streamed,
-                self.chunk_z, self.chunk_budget, self.homology_dims)
+                self.chunk_z, self.chunk_budget, self.homology_dims,
+                self.epsilon, self.deadline_s, self.progressive)
+
+    @property
+    def is_approx(self) -> bool:
+        """Whether execution routes through ``repro.approx``."""
+        return self.epsilon is not None or self.progressive \
+            or self.deadline_s is not None
 
     @property
     def compile_key(self) -> tuple:
@@ -173,9 +193,18 @@ class Plan:
         """Human-readable one-plan summary (inspectable AOT artifact)."""
         mode = "streamed" if self.streamed else "in-memory"
         engine = "distributed" if self.distributed else "sequential"
+        approx = ""
+        if self.is_approx:
+            knobs = [f"epsilon={self.epsilon}"] \
+                if self.epsilon is not None else []
+            if self.progressive:
+                knobs.append("progressive")
+            if self.deadline_s is not None:
+                knobs.append(f"deadline_s={self.deadline_s}")
+            approx = f", approx({', '.join(knobs)})"
         return (f"Plan(dims={self.dims}, backend={self.backend!r}, "
                 f"{mode}, {engine} back-end, n_blocks={self.n_blocks}, "
-                f"homology_dims={self.homology_dims}, "
+                f"homology_dims={self.homology_dims}{approx}, "
                 f"stages={' -> '.join(self.stage_names)})")
 
     def compile(self, cache: Optional[PlanCache] = None,
@@ -186,8 +215,7 @@ class Plan:
         ``backend`` overrides the registry lookup — the pipeline passes
         its own held instance so unregistered :class:`Backend` objects
         (test doubles, locally-built backends) keep working."""
-        # `is None`, not truthiness: an empty PlanCache is falsy (len 0)
-        cache = default_plan_cache() if cache is None else cache
+        cache = cache or default_plan_cache()
         be = get_backend(self.backend) if backend is None else backend
         grid = self.grid
         rows_program = None

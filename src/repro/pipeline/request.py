@@ -85,6 +85,17 @@ class TopoRequest:
         ``None`` streams iff the field is a source or a chunk knob is
         set.
     chunk_z, chunk_budget : streamed decomposition knobs (at most one).
+    epsilon : guaranteed bottleneck-error budget (field units, >= 0):
+        the request is answered by ``repro.approx`` from the coarsest
+        multiresolution level whose provable bound meets it (0 — or a
+        budget no level meets — degrades to the exact pipeline).
+    deadline_s : wall-clock budget for progressive refinement — the
+        driver stops refining once it is spent (the coarsest preview
+        always completes).  Implies the progressive path.
+    progressive : refine coarse-to-fine through every hierarchy level;
+        ``run`` returns the final (tightest) result, ``TopoService``
+        resolves a preview future first, and ``repro.approx.refine``
+        yields every intermediate.
     include_report : attach the :class:`StageReport` to the result
         (False keeps serialized payloads lean).
     """
@@ -102,6 +113,9 @@ class TopoRequest:
     stream: Optional[bool] = None
     chunk_z: Optional[int] = None
     chunk_budget: Optional[int] = None
+    epsilon: Optional[float] = None
+    deadline_s: Optional[float] = None
+    progressive: bool = False
     include_report: bool = True
 
     def __post_init__(self):
@@ -123,6 +137,12 @@ class TopoRequest:
         if self.chunk_budget is not None and self.chunk_budget < 1:
             raise ValueError(
                 f"chunk_budget must be >= 1 byte, got {self.chunk_budget}")
+        if self.epsilon is not None and not self.epsilon >= 0:
+            raise ValueError(
+                f"epsilon must be >= 0 (field units), got {self.epsilon}")
+        if self.deadline_s is not None and not self.deadline_s > 0:
+            raise ValueError(
+                f"deadline_s must be > 0, got {self.deadline_s}")
         if self.homology_dims is not None:
             dims = tuple(int(d) for d in self.homology_dims)
             if not dims:
@@ -141,6 +161,13 @@ class TopoRequest:
             return bool(self.stream)
         return _is_source(self.field) or self.chunk_z is not None \
             or self.chunk_budget is not None
+
+    @property
+    def is_approx(self) -> bool:
+        """Whether this request routes through ``repro.approx`` (any
+        approximation knob set)."""
+        return self.epsilon is not None or self.progressive \
+            or self.deadline_s is not None
 
     def resolve(self) -> "TopoRequest":
         """Grid inference + cross-field validation; returns a new frozen

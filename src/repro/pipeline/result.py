@@ -33,6 +33,12 @@ vertex orders, ``d{p}.pairs_values`` (n, 2) field values, and the
 ``essential_*`` triple of the same; plus the global ``homology_dims``.
 Unknown (future-version) arrays are preserved by ``from_bytes`` so the
 format can grow without breaking old readers.
+
+Approximate results (``repro.approx``) add one *optional* named array,
+``approx_meta`` = ``[error bound, level, stride, fine nx, ny, nz]`` —
+still wire version 1: readers that predate it ignore an unknown array,
+and decoded payloads answer ``error_bound`` / ``approx_level`` /
+``pairs(certain_only=True)`` exactly like live results.
 """
 
 from __future__ import annotations
@@ -93,6 +99,39 @@ class DiagramResult:
             return self.plan.homology_dims
         g = self.diagram.grid
         return tuple(range(g.dim + 1))
+
+    # -- approximation guarantee (repro.approx) ------------------------------
+
+    @property
+    def error_bound(self) -> Optional[float]:
+        """Guaranteed bottleneck-distance bound to the exact diagram
+        (field units).  ``None`` for results the approximation engine
+        never touched; ``0.0`` for a fully-refined / level-0 result."""
+        meta = self._arrays.get("approx_meta")
+        return None if meta is None else float(meta[0])
+
+    @property
+    def approx_level(self) -> Optional[int]:
+        """Hierarchy level this result was computed at (0 = exact)."""
+        meta = self._arrays.get("approx_meta")
+        return None if meta is None else int(meta[1])
+
+    @property
+    def approx_stride(self) -> Optional[int]:
+        """Decimation stride of the level (``2 ** approx_level``)."""
+        meta = self._arrays.get("approx_meta")
+        return None if meta is None else int(meta[2])
+
+    @property
+    def uncertainty_threshold(self) -> Optional[float]:
+        """Pairs with value-space persistence at or below
+        ``2 * error_bound`` may be diagonal artifacts of the
+        approximation (a pair of persistence exactly ``2 * bound`` can
+        still be matched to the diagonal at cost ``bound``); everything
+        strictly above it is guaranteed to correspond to a real
+        feature."""
+        b = self.error_bound
+        return None if b is None else 2.0 * b
 
     # -- lazy canonical arrays ----------------------------------------------
 
@@ -188,25 +227,40 @@ class DiagramResult:
         return mp, tk
 
     def pairs(self, dim: int = 0, *, min_persistence: Optional[float] = None,
-              top_k: Optional[int] = None, space: str = "value"
-              ) -> np.ndarray:
+              top_k: Optional[int] = None, space: str = "value",
+              certain_only: bool = False) -> np.ndarray:
         """(n, 2) (birth, death) points of dimension ``dim``.
 
         ``min_persistence`` keeps pairs with ``death - birth >=`` the
         threshold (same space as the points); ``top_k`` keeps the k most
         persistent.  Defaults come from the originating request (and
         survive the wire); the request's *value-space* ``min_persistence``
-        is not applied to order-space queries.  Rows are sorted by
-        descending persistence, ties by birth."""
+        is not applied to order-space queries.  On approximate results,
+        ``certain_only=True`` additionally drops pairs whose persistence
+        is not *strictly* above the ``uncertainty_threshold`` (value
+        space only — the guarantee is in field units).  Rows are sorted
+        by descending persistence, ties by birth."""
         d_mp, d_tk = self._default_queries()
         if min_persistence is None and space == "value":
             min_persistence = d_mp
         if top_k is None:
             top_k = d_tk
+        certain_thr = None
+        if certain_only:
+            if space != "value":
+                raise ValueError(
+                    "certain_only applies to value-space queries (the "
+                    "error bound is in field units)")
+            certain_thr = self.uncertainty_threshold
         pts = self._dim_arrays(dim, "pairs", space)
         pers = pts[:, 1] - pts[:, 0]
         if min_persistence is not None and min_persistence > 0:
             keep = pers >= min_persistence
+            pts, pers = pts[keep], pers[keep]
+        if certain_thr is not None and certain_thr > 0:
+            # strict: persistence exactly 2*bound can still be matched
+            # to the diagonal at cost exactly bound
+            keep = pers > certain_thr
             pts, pers = pts[keep], pers[keep]
         idx = np.argsort(-pers, kind="stable")
         if top_k is not None:

@@ -1,2 +1,3 @@
 from .engine import generate, serve_topo, topo_payload  # noqa: F401
-from .topo_service import ServiceStats, TopoService  # noqa: F401
+from .topo_service import (ProgressiveFuture, ServiceStats,  # noqa: F401
+                           TopoService)

@@ -59,13 +59,30 @@ class ServiceStats:
     errors: int = 0
     retried: int = 0                 # re-served alone after a batch failure
     stream_requests: int = 0         # FieldSource requests (out-of-core)
+    progressive_requests: int = 0    # preview-then-refine submits
 
     def as_dict(self) -> Dict[str, int]:
         return dict(requests=self.requests, batches=self.batches,
                     batched_requests=self.batched_requests,
                     max_batch=self.max_batch, errors=self.errors,
                     retried=self.retried,
-                    stream_requests=self.stream_requests)
+                    stream_requests=self.stream_requests,
+                    progressive_requests=self.progressive_requests)
+
+
+class ProgressiveFuture(Future):
+    """The future of a progressive submit: resolves to the **final**
+    (tightest-bound) result; ``preview`` resolves to the first, coarsest
+    result as soon as the refinement driver produces it (typically
+    orders of magnitude earlier), and ``partials`` collects every
+    intermediate delivered so far (in refinement order, bounds
+    non-increasing).  With ``wire=True`` all of them hold serialized
+    payloads instead of live results."""
+
+    def __init__(self):
+        super().__init__()
+        self.preview: Future = Future()
+        self.partials: List = []
 
 
 def _as_request(f, grid: Optional[Grid]) -> "tuple[TopoRequest, bool]":
@@ -86,13 +103,26 @@ class _Request:
     plain: bool                      # bare ndarray, default options
     future: Future = field(default_factory=Future)
 
+    def __post_init__(self):
+        if self.progressive and not isinstance(self.future,
+                                               ProgressiveFuture):
+            self.future = ProgressiveFuture()
+
+    @property
+    def progressive(self) -> bool:
+        """Multi-result serving: a preview future resolves first."""
+        return self.req.progressive or self.req.deadline_s is not None
+
     @property
     def group_key(self):
-        """Batching key: streams serve alone; plain ndarrays group by
-        (shape, grid); option-carrying requests also group by their
-        execution options so one ``run_batch`` sees one plan."""
+        """Batching key: streams and progressive refinements serve
+        alone; plain ndarrays group by (shape, grid); option-carrying
+        requests also group by their execution options so one
+        ``run_batch`` sees one plan."""
         r = self.req
         dims = r.grid.dims if r.grid is not None else None
+        if self.progressive:
+            return ("progressive", id(self))
         if r.is_stream:
             return ("stream", r.field_shape)
         if self.plain:
@@ -101,7 +131,7 @@ class _Request:
         # stay per-request through run_batch, so they must NOT split
         # batches — only plan-affecting options key the group
         opts = (r.homology_dims, r.backend, r.n_blocks, r.distributed,
-                r.anticipation, r.budget)
+                r.anticipation, r.budget, r.epsilon)
         return ("req", r.field_shape, dims, opts)
 
 
@@ -144,7 +174,10 @@ class TopoService:
 
         ``f`` may be an ndarray, a :class:`repro.stream.FieldSource`
         (answered out-of-core via the streamed path), or a full
-        :class:`TopoRequest` carrying its own options."""
+        :class:`TopoRequest` carrying its own options.  Progressive
+        requests (``progressive=True`` / ``deadline_s=``) get a
+        :class:`ProgressiveFuture`: its ``preview`` resolves to the
+        coarse first answer while refinement continues."""
         req, plain = _as_request(f, grid)
         r = _Request(req, plain)
         with self._lock:
@@ -226,17 +259,26 @@ class TopoService:
                     # request failure: fail whatever is still unresolved
                     # and keep draining the queue
                     for r in reqs:
-                        if _fail(r.future, e):
+                        if self._fail_request(r, e):
                             self.stats.errors += 1
             if stop:
                 return
 
-    def _deliver(self, r: _Request, res: DiagramResult) -> None:
+    def _payload(self, res: DiagramResult):
         if self.wire:
             from .engine import topo_payload
-            _resolve(r.future, topo_payload(res))
-        else:
-            _resolve(r.future, res)
+            return topo_payload(res)
+        return res
+
+    def _deliver(self, r: _Request, res: DiagramResult) -> None:
+        _resolve(r.future, self._payload(res))
+
+    @staticmethod
+    def _fail_request(r: _Request, e: BaseException) -> bool:
+        failed = _fail(r.future, e)
+        if isinstance(r.future, ProgressiveFuture):
+            _fail(r.future.preview, e)
+        return failed
 
     def _serve_one(self, r: _Request) -> None:
         """Answer a single request through the one resolver."""
@@ -244,9 +286,29 @@ class TopoService:
             res = self.pipeline.run(r.req)
         except Exception as e:
             self.stats.errors += 1
-            _fail(r.future, e)
+            self._fail_request(r, e)
         else:
             self._deliver(r, res)
+
+    def _serve_progressive(self, r: _Request) -> None:
+        """Preview-then-refine: walk the refinement driver, resolving
+        the preview future on the first (coarsest) result, collecting
+        intermediates, and resolving the main future with the final
+        one.  One failed refinement fails only this request."""
+        from repro.approx import refine
+        try:
+            last = None
+            for res in refine(self.pipeline, r.req):
+                last = self._payload(res)
+                r.future.partials.append(last)
+                _resolve(r.future.preview, last)
+            if last is None:
+                raise RuntimeError("refinement produced no result")
+        except Exception as e:
+            self.stats.errors += 1
+            self._fail_request(r, e)
+        else:
+            _resolve(r.future, last)
 
     def _serve_batched(self, group: List[_Request]) -> List[DiagramResult]:
         """One batched dispatch for a compatible group."""
@@ -265,6 +327,11 @@ class TopoService:
             groups.setdefault(r.group_key, []).append(r)
         for group in groups.values():
             self.stats.batches += 1
+            if group[0].progressive:
+                self.stats.progressive_requests += len(group)
+                for r in group:
+                    self._serve_progressive(r)
+                continue
             if group[0].req.is_stream:
                 # streams are served one by one (no batching to report)
                 self.stats.stream_requests += len(group)

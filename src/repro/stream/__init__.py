@@ -6,8 +6,8 @@ per chunk on rank-free (value, vid) keys (``scheduler``), and the
 ``PersistencePipeline.diagram_stream`` front door in ``repro.pipeline``.
 """
 
-from .chunks import (ArraySource, Chunk, FieldSource,  # noqa: F401
-                     FunctionSource, MemmapSource, as_source,
+from .chunks import (ArraySource, Chunk, DecimatedSource,  # noqa: F401
+                     FieldSource, FunctionSource, MemmapSource, as_source,
                      pack_value_keys, plan_chunks, sortable32,
                      unpack_value_keys)
 from .scheduler import (SparseOrder, StreamReport,  # noqa: F401

@@ -219,9 +219,44 @@ class FunctionSource:
             g.dims)
 
 
+class DecimatedSource:
+    """Stride-decimated view of another :class:`FieldSource`.
+
+    The level adapter of the progressive hierarchy (``repro.approx``):
+    coarse plane ``cz`` is fine plane ``cz * stride`` subsampled with
+    the same stride in x and y, so a power-of-two multiresolution level
+    of an out-of-core field streams through the unchanged chunk
+    scheduler while reading only the fine planes it keeps (one fine
+    plane per coarse plane — never the skipped ones)."""
+
+    def __init__(self, source: FieldSource, stride: int):
+        if stride < 1:
+            raise ValueError(f"stride must be >= 1, got {stride}")
+        self._src = as_source(source)
+        self._stride = int(stride)
+        self._dims = _check_dims(
+            tuple((d + stride - 1) // stride for d in self._src.dims))
+
+    @property
+    def dims(self) -> Tuple[int, int, int]:
+        return self._dims
+
+    @property
+    def stride(self) -> int:
+        return self._stride
+
+    def read_slab(self, zlo: int, zhi: int) -> np.ndarray:
+        _check_slab(self._dims, zlo, zhi)
+        s = self._stride
+        planes = [self._src.read_slab(cz * s, cz * s + 1)[0, ::s, ::s]
+                  for cz in range(zlo, zhi)]
+        return np.ascontiguousarray(np.stack(planes), dtype=np.float32)
+
+
 def as_source(f, dims=None) -> FieldSource:
     """Coerce ndarray inputs to an :class:`ArraySource`; pass sources through."""
-    if isinstance(f, (ArraySource, MemmapSource, FunctionSource)):
+    if isinstance(f, (ArraySource, MemmapSource, FunctionSource,
+                      DecimatedSource)):
         return f
     if isinstance(f, np.ndarray):
         return ArraySource(f, dims)

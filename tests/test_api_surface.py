@@ -16,7 +16,7 @@ import types
 from pathlib import Path
 
 SNAPSHOT = Path(__file__).parent / "data" / "api_surface.json"
-MODULES = ("repro.pipeline", "repro.serve")
+MODULES = ("repro.pipeline", "repro.serve", "repro.approx")
 
 
 def _sig(obj) -> str:

@@ -1,0 +1,474 @@
+"""The progressive approximation engine (repro.approx).
+
+The heart of the suite is the machine-checked guarantee: for every
+field in the zoo and every level the hierarchy offers, the bottleneck
+distance between the approximate and the exact diagram is at most the
+level's reported bound (and hence at most any epsilon the engine
+accepted).  Plus: hierarchy/pyramid unit tests, exact bottleneck
+distance sanity cases, progressive monotonicity with a bit-exact final
+level, engine routing through TopoRequest/run/run_batch, wire-format
+compatibility of the guarantee metadata, and preview-then-refine
+serving through TopoService."""
+
+import numpy as np
+import pytest
+
+from repro.approx import (Hierarchy, approximate, block_minmax,
+                          bottleneck_distance, bottleneck_feasible,
+                          coarse_dims, essential_distance, refine)
+from repro.core.diagram import diff_report, same_offdiagonal
+from repro.core.grid import Grid
+from repro.fields import make_field
+from repro.pipeline import (DiagramResult, PersistencePipeline,
+                            TopoRequest)
+from repro.serve import ProgressiveFuture, TopoService
+from repro.stream import ArraySource, DecimatedSource, FunctionSource
+
+DIMS = (12, 12, 12)
+ZOO = ("wavelet", "random", "isabel", "elevation", "truss")
+TOL = 1e-9
+
+
+@pytest.fixture(scope="module")
+def pipe():
+    return PersistencePipeline(backend="jax")
+
+
+def vol(f, dims):
+    return np.asarray(f, np.float32).reshape(dims[::-1])
+
+
+def _assert_guarantee(res, exact, dim_range):
+    bound = res.error_bound + TOL
+    for p in dim_range:
+        assert bottleneck_feasible(res.pairs(p, min_persistence=0),
+                                   exact.pairs(p, min_persistence=0),
+                                   bound), f"dim {p} exceeds {bound}"
+    for p in dim_range:
+        assert essential_distance(res.essential(p),
+                                  exact.essential(p)) <= bound
+
+
+# --------------------------------------------------------------------------
+# the guarantee: bottleneck(approx, exact) <= bound, zoo x levels
+# --------------------------------------------------------------------------
+
+class TestGuarantee:
+    @pytest.mark.parametrize("name", ZOO)
+    def test_every_level_within_bound(self, pipe, name):
+        g = Grid.of(*DIMS)
+        f = make_field(name, DIMS, seed=0)
+        req = TopoRequest(field=f, grid=g)
+        exact = pipe.run(req)
+        h = Hierarchy(f, g, backend="jax")
+        assert h.max_level >= 2          # 12^3 offers strides 2, 4, 8
+        for lev in h.levels[1:]:
+            res = approximate(pipe, req, level=lev.level, hierarchy=h)
+            assert res.error_bound == lev.bound
+            assert res.approx_stride == lev.stride
+            _assert_guarantee(res, exact, range(g.dim))
+
+    @pytest.mark.parametrize("backend,dims", [
+        ("np", (8, 8, 8)), ("jax", (10, 8, 6)), ("pallas", (6, 6, 6))])
+    def test_guarantee_across_backends(self, backend, dims):
+        p = PersistencePipeline(backend=backend)
+        g = Grid.of(*dims)
+        f = make_field("random", dims, seed=3)
+        req = TopoRequest(field=f, grid=g)
+        exact = p.run(req)
+        res = approximate(p, req, level=1)
+        _assert_guarantee(res, exact, range(g.dim))
+
+    def test_guarantee_2d(self, pipe):
+        dims = (16, 16)
+        g = Grid.of(*dims)
+        f = make_field("magnetic", dims, seed=5)
+        req = TopoRequest(field=f, grid=g)
+        exact = pipe.run(req)
+        h = Hierarchy(f, g, backend="jax")
+        for lev in h.levels[1:]:
+            res = approximate(pipe, req, level=lev.level, hierarchy=h)
+            assert res.grid_dims == lev.dims
+            _assert_guarantee(res, exact, range(g.dim))
+
+    def test_epsilon_meets_bound(self, pipe):
+        g = Grid.of(*DIMS)
+        f = make_field("isabel", DIMS, seed=1)
+        h = Hierarchy(f, g, backend="jax")
+        eps = h.bound(1) + 1e-6          # level 1 qualifies, level 2 not
+        res = approximate(pipe, TopoRequest(field=f, grid=g), epsilon=eps)
+        assert res.error_bound <= eps
+        assert res.approx_level == 1
+        exact = pipe.run(TopoRequest(field=f, grid=g))
+        _assert_guarantee(res, exact, range(g.dim))
+
+
+# --------------------------------------------------------------------------
+# hierarchy / pyramid
+# --------------------------------------------------------------------------
+
+class TestHierarchy:
+    def test_block_minmax_matches_naive(self):
+        rng = np.random.default_rng(0)
+        v = rng.standard_normal((7, 5, 9)).astype(np.float32)
+        for s in (2, 3, 4):
+            mn, mx = block_minmax(v, s)
+            mnj, mxj = block_minmax(v, s, backend="jax")
+            cz, cy, cx = [(d + s - 1) // s for d in v.shape]
+            assert mn.shape == (cz, cy, cx)
+            for z in range(cz):
+                for y in range(cy):
+                    for x in range(cx):
+                        blk = v[z*s:(z+1)*s, y*s:(y+1)*s, x*s:(x+1)*s]
+                        assert mn[z, y, x] == blk.min()
+                        assert mx[z, y, x] == blk.max()
+            assert np.array_equal(mn, mnj) and np.array_equal(mx, mxj)
+
+    def test_bounds_monotone_and_exact_level0(self):
+        for name in ZOO:
+            f = make_field(name, DIMS, seed=2)
+            h = Hierarchy(f, Grid.of(*DIMS), backend="np")
+            bounds = [lev.bound for lev in h.levels]
+            assert bounds[0] == 0.0
+            assert all(a <= b + TOL for a, b in zip(bounds, bounds[1:])), \
+                (name, bounds)
+
+    def test_bound_covers_block_extension(self):
+        """The bound dominates ||f - f_l||_inf for the flat block
+        extension — the quantity stability bounds d_B by."""
+        f = make_field("random", DIMS, seed=7)
+        g = Grid.of(*DIMS)
+        f3 = vol(f, g.dims)
+        h = Hierarchy(f, g)
+        for lev in h.levels[1:]:
+            s = lev.stride
+            reps = f3[::s, ::s, ::s]
+            ext = reps.repeat(s, 0).repeat(s, 1).repeat(s, 2)
+            ext = ext[:f3.shape[0], :f3.shape[1], :f3.shape[2]]
+            assert np.abs(f3.astype(np.float64)
+                          - ext.astype(np.float64)).max() \
+                <= lev.bound + TOL
+
+    def test_decimate_nests(self):
+        f = make_field("wavelet", DIMS, seed=0)
+        g = Grid.of(*DIMS)
+        h = Hierarchy(f, g)
+        f3 = vol(f, g.dims)
+        for lev in h.levels[1:]:
+            c = h.decimate(lev.level)
+            assert c.shape == lev.dims[::-1]
+            s = lev.stride
+            assert np.array_equal(c, f3[::s, ::s, ::s])
+            assert coarse_dims(g.dims, s) == lev.dims
+
+    def test_levels_preserve_complex_dim(self):
+        h = Hierarchy(np.zeros((1, 6, 40), np.float32))
+        for lev in h.levels:
+            assert Grid.of(*lev.dims).dim == 2
+        assert all(d >= 2 for lev in h.levels
+                   for d in lev.dims if d != 1) or h.max_level == 0
+
+    def test_error_field_shape_and_range(self):
+        f = make_field("backpack", DIMS, seed=0)
+        h = Hierarchy(f, Grid.of(*DIMS))
+        ef = h.error_field(1)
+        assert ef.shape == (6, 6, 6)
+        assert (ef >= 0).all() and ef.max() == h.bound(1)
+        with pytest.raises(ValueError, match="out of range"):
+            h.error_field(9)
+
+    def test_source_hierarchy_matches_in_memory(self):
+        dims = (9, 7, 21)
+        f = make_field("truss", dims, seed=6)
+        hm = Hierarchy(f, Grid.of(*dims))
+        hs = Hierarchy(ArraySource(vol(f, dims)))
+        assert [lev.bound for lev in hm.levels] \
+            == [lev.bound for lev in hs.levels]
+        for lev in hm.levels[1:]:
+            src = hs.decimate(lev.level)
+            assert isinstance(src, DecimatedSource)
+            ncz = lev.dims[2]
+            assert np.array_equal(src.read_slab(0, ncz),
+                                  hm.decimate(lev.level))
+
+    def test_decimated_source_of_function_source(self):
+        dims = (8, 8, 16)
+        src = FunctionSource.synthetic("random", dims, seed=1)
+        dec = DecimatedSource(src, 2)
+        assert dec.dims == (4, 4, 8)
+        f3 = vol(make_field("random", dims, seed=1), dims)
+        assert np.array_equal(dec.read_slab(1, 5), f3[2:10:2, ::2, ::2])
+
+
+# --------------------------------------------------------------------------
+# bottleneck distance
+# --------------------------------------------------------------------------
+
+class TestBottleneck:
+    def test_identical(self):
+        a = np.array([[0.0, 1.0], [2.0, 5.0]])
+        assert bottleneck_distance(a, a) == 0.0
+
+    def test_vs_empty_is_half_persistence(self):
+        a = np.array([[0.0, 2.0], [1.0, 1.5]])
+        assert bottleneck_distance(a, np.zeros((0, 2))) == 1.0
+
+    def test_shifted_point(self):
+        a = np.array([[0.0, 2.0]])
+        b = np.array([[0.5, 2.0]])
+        assert bottleneck_distance(a, b) == 0.5
+
+    def test_diagonal_beats_far_match(self):
+        a = np.array([[0.0, 1.0], [0.0, 6.0]])
+        b = np.array([[0.0, 6.0]])
+        assert bottleneck_distance(a, b) == 0.5    # [0,1] retires
+
+    def test_cardinality_mismatch_high_persistence(self):
+        a = np.array([[0.0, 10.0], [0.0, 8.0]])
+        b = np.array([[0.0, 10.0]])
+        assert bottleneck_distance(a, b) == 4.0
+
+    def test_feasible_monotone(self):
+        rng = np.random.default_rng(3)
+        a = np.cumsum(rng.random((20, 2)), axis=1)
+        b = np.cumsum(rng.random((15, 2)), axis=1)
+        d = bottleneck_distance(a, b)
+        assert bottleneck_feasible(a, b, d)
+        assert not bottleneck_feasible(a, b, d - 1e-9)
+        assert bottleneck_feasible(a, b, d + 0.5)
+
+    def test_diagonal_points_ignored(self):
+        a = np.array([[1.0, 1.0], [0.0, 2.0]])
+        b = np.array([[0.0, 2.0], [3.0, 3.0]])
+        assert bottleneck_distance(a, b) == 0.0
+
+    def test_shared_points_not_cancelled(self):
+        """Regression: pre-cancelling points common to both diagrams is
+        NOT a valid reduction — the optimum here re-matches the shared
+        point: (0.25,1)<->(0.5,0.75) at 0.25 while (0.5,0.75) retires
+        to the diagonal at 0.125 (forcing the 0-cost twin match leaves
+        (0.25,1) with only the diagonal, at 0.375)."""
+        a = np.array([[0.25, 1.0], [0.5, 0.75]])
+        b = np.array([[0.5, 0.75]])
+        assert bottleneck_feasible(a, b, 0.25)
+        assert bottleneck_distance(a, b) == 0.25
+
+    def test_essential_distance(self):
+        assert essential_distance([1.0, 5.0], [1.25, 4.5]) == 0.5
+        assert essential_distance([], []) == 0.0
+        assert essential_distance([1.0], []) == float("inf")
+
+    def test_infinite_points_rejected(self):
+        with pytest.raises(ValueError, match="finite"):
+            bottleneck_distance(np.array([[0.0, np.inf]]), np.zeros((0, 2)))
+
+
+# --------------------------------------------------------------------------
+# progressive refinement
+# --------------------------------------------------------------------------
+
+class TestProgressive:
+    def test_bounds_shrink_and_final_bit_exact(self, pipe):
+        g = Grid.of(*DIMS)
+        f = make_field("magnetic", DIMS, seed=0)
+        req = TopoRequest(field=f, grid=g)
+        exact = pipe.run(req)
+        results = list(refine(pipe, req))
+        bounds = [r.error_bound for r in results]
+        assert len(results) >= 3
+        assert all(a > b for a, b in zip(bounds, bounds[1:]))  # shrinking
+        last = results[-1]
+        assert last.error_bound == 0.0 and last.approx_level == 0
+        assert same_offdiagonal(last.diagram, exact.diagram), \
+            diff_report(last.diagram, exact.diagram)
+        for p in range(g.dim):
+            assert np.array_equal(last.pairs(p, min_persistence=0),
+                                  exact.pairs(p, min_persistence=0))
+            assert np.array_equal(last.essential(p), exact.essential(p))
+
+    def test_epsilon_stops_early(self, pipe):
+        g = Grid.of(*DIMS)
+        f = make_field("wavelet", DIMS, seed=0)
+        h = Hierarchy(f, g, backend="jax")
+        eps = h.bound(2) + 1e-6
+        results = list(refine(pipe, TopoRequest(field=f, grid=g),
+                              epsilon=eps))
+        assert results[-1].error_bound <= eps
+        assert results[-1].approx_level == 2     # never refined past it
+
+    def test_deadline_yields_at_least_preview(self, pipe):
+        g = Grid.of(*DIMS)
+        f = make_field("random", DIMS, seed=1)
+        results = list(refine(pipe, TopoRequest(field=f, grid=g),
+                              deadline_s=1e-9))
+        assert len(results) == 1                 # coarsest only
+        assert results[0].approx_level == Hierarchy(f, g).max_level
+
+    def test_no_improvement_levels_skipped(self, pipe):
+        f = np.zeros(Grid.of(*DIMS).nv, np.float32)   # constant field
+        results = list(refine(pipe, TopoRequest(field=f,
+                                                grid=Grid.of(*DIMS))))
+        # every level is already exact (bound 0): coarsest + final only
+        assert len(results) == 2
+        assert results[0].error_bound == 0.0
+        assert results[1].approx_level == 0
+
+
+# --------------------------------------------------------------------------
+# engine + declarative routing
+# --------------------------------------------------------------------------
+
+class TestEngineRouting:
+    def test_request_validation(self):
+        with pytest.raises(ValueError, match="epsilon"):
+            TopoRequest(field=np.zeros(8), epsilon=-0.5)
+        with pytest.raises(ValueError, match="deadline_s"):
+            TopoRequest(field=np.zeros(8), deadline_s=0.0)
+        assert TopoRequest(field=np.zeros(8), epsilon=0.1).is_approx
+        assert TopoRequest(field=np.zeros(8), progressive=True).is_approx
+        assert not TopoRequest(field=np.zeros(8)).is_approx
+
+    def test_approximate_needs_one_selector(self, pipe):
+        f = make_field("wavelet", DIMS, seed=0)
+        req = TopoRequest(field=f, grid=Grid.of(*DIMS))
+        with pytest.raises(ValueError, match="epsilon= or level="):
+            approximate(pipe, req)
+        with pytest.raises(ValueError, match="not both"):
+            approximate(pipe, req, epsilon=0.1, level=1)
+
+    def test_epsilon_zero_is_exact(self, pipe):
+        g = Grid.of(*DIMS)
+        f = make_field("backpack", DIMS, seed=0)
+        exact = pipe.run(TopoRequest(field=f, grid=g))
+        res = pipe.run(TopoRequest(field=f, grid=g, epsilon=0.0))
+        assert res.approx_level == 0 and res.error_bound == 0.0
+        for p in range(g.dim):
+            assert np.array_equal(res.pairs(p, min_persistence=0),
+                                  exact.pairs(p, min_persistence=0))
+
+    def test_plan_is_approximation_aware(self, pipe):
+        g = Grid.of(*DIMS)
+        f = make_field("wavelet", DIMS, seed=0)
+        plan = pipe.lower(TopoRequest(field=f, grid=g, epsilon=0.25,
+                                      progressive=True))
+        assert plan.is_approx and plan.epsilon == 0.25 and plan.progressive
+        assert "approx(epsilon=0.25" in plan.describe()
+        exact_plan = pipe.lower(TopoRequest(field=f, grid=g))
+        assert not exact_plan.is_approx
+        assert plan.key != exact_plan.key
+
+    def test_run_batch_mixes_exact_and_approx(self, pipe):
+        g = Grid.of(*DIMS)
+        f = make_field("isabel", DIMS, seed=2)
+        outs = pipe.run_batch([
+            TopoRequest(field=f, grid=g),
+            TopoRequest(field=f, grid=g, epsilon=10.0),
+            TopoRequest(field=f, grid=g, progressive=True)])
+        assert outs[0].error_bound is None
+        assert outs[1].approx_level == Hierarchy(f, g).max_level
+        assert outs[2].error_bound == 0.0        # fully refined
+
+    def test_streamed_source_approximation(self, pipe):
+        dims = (10, 10, 12)
+        g = Grid.of(*dims)
+        f = make_field("random", dims, seed=4)
+        req_mem = TopoRequest(field=f, grid=g)
+        res_mem = approximate(pipe, req_mem, level=1)
+        src = ArraySource(vol(f, dims))
+        res_src = approximate(
+            pipe, TopoRequest(field=src, chunk_z=4), level=1)
+        assert res_src.stream is not None        # streamed at the level
+        assert same_offdiagonal(res_src.diagram, res_mem.diagram), \
+            diff_report(res_src.diagram, res_mem.diagram)
+        assert res_src.error_bound == res_mem.error_bound
+
+    def test_query_defaults_survive(self, pipe):
+        g = Grid.of(*DIMS)
+        f = make_field("random", DIMS, seed=0)
+        res = pipe.run(TopoRequest(field=f, grid=g, top_k=3, epsilon=1e9))
+        assert len(res.pairs(0)) <= 3            # request default applied
+        assert res.request.epsilon == 1e9        # provenance kept
+
+    def test_certain_only(self, pipe):
+        g = Grid.of(*DIMS)
+        f = make_field("random", DIMS, seed=0)
+        res = approximate(pipe, TopoRequest(field=f, grid=g), level=1)
+        full = res.pairs(0, min_persistence=0)
+        certain = res.pairs(0, certain_only=True)
+        thr = res.uncertainty_threshold
+        assert thr == 2 * res.error_bound
+        assert len(certain) <= len(full)
+        if len(certain):
+            # strict: persistence exactly 2*bound is still uncertain
+            assert (certain[:, 1] - certain[:, 0] > thr).all()
+        with pytest.raises(ValueError, match="value-space"):
+            res.pairs(0, space="order", certain_only=True)
+        # exact results: certain_only is a no-op, not an error
+        exact = pipe.run(TopoRequest(field=f, grid=g))
+        assert np.array_equal(exact.pairs(0, certain_only=True),
+                              exact.pairs(0))
+
+    def test_wire_round_trip_keeps_guarantee(self, pipe):
+        g = Grid.of(*DIMS)
+        f = make_field("truss", DIMS, seed=0)
+        res = approximate(pipe, TopoRequest(field=f, grid=g), level=2)
+        back = DiagramResult.from_bytes(res.to_bytes())
+        assert back.error_bound == res.error_bound
+        assert back.approx_level == 2 and back.approx_stride == 4
+        assert back.uncertainty_threshold == res.uncertainty_threshold
+        assert np.array_equal(back.pairs(0, certain_only=True),
+                              res.pairs(0, certain_only=True))
+        assert back.betti() == res.betti()
+
+
+# --------------------------------------------------------------------------
+# serving: preview-then-refine futures
+# --------------------------------------------------------------------------
+
+class TestProgressiveServing:
+    def test_preview_then_final(self):
+        g = Grid.of(*DIMS)
+        f = make_field("wavelet", DIMS, seed=0)
+        with TopoService(backend="jax") as svc:
+            fut = svc.submit(TopoRequest(field=f, grid=g,
+                                         progressive=True))
+            assert isinstance(fut, ProgressiveFuture)
+            preview = fut.preview.result(timeout=120)
+            final = fut.result(timeout=300)
+            assert preview.error_bound > final.error_bound == 0.0
+            bounds = [r.error_bound for r in fut.partials]
+            assert bounds == sorted(bounds, reverse=True)
+            assert svc.stats.progressive_requests == 1
+            # a plain epsilon submit stays a plain Future
+            res = svc.submit(TopoRequest(field=f, grid=g,
+                                         epsilon=1e9)).result(timeout=120)
+            assert not isinstance(res, ProgressiveFuture)
+            assert res.error_bound is not None
+
+    def test_wire_progressive_payloads(self):
+        g = Grid.of(8, 8, 8)
+        f = make_field("random", (8, 8, 8), seed=0)
+        with TopoService(backend="jax", wire=True) as svc:
+            fut = svc.submit(TopoRequest(field=f, grid=g,
+                                         progressive=True))
+            blob = fut.preview.result(timeout=120)
+            assert isinstance(blob, bytes)
+            prev = DiagramResult.from_bytes(blob)
+            assert prev.error_bound is not None
+            final = DiagramResult.from_bytes(fut.result(timeout=300))
+            assert final.error_bound == 0.0
+
+    def test_progressive_failure_fails_both_futures(self):
+        class Boom:
+            dims = (4, 4, 4)
+
+            def read_slab(self, zlo, zhi):
+                raise RuntimeError("poisoned source")
+
+        with TopoService(backend="jax") as svc:
+            fut = svc.submit(TopoRequest(field=Boom(), progressive=True))
+            with pytest.raises(RuntimeError, match="poisoned"):
+                fut.result(timeout=120)
+            with pytest.raises(RuntimeError, match="poisoned"):
+                fut.preview.result(timeout=10)
+            assert svc.stats.errors == 1

@@ -230,6 +230,23 @@ class TestLowerCompile:
         with pytest.raises(ValueError, match="maxsize"):
             PlanCache(maxsize=0)
 
+    def test_plan_cache_empty_is_truthy(self):
+        """Regression: PlanCache defines __len__, so an *empty* cache
+        used to be falsy — `cache or default()` silently swapped a
+        fresh isolated cache for the shared one.  __bool__ pins
+        truthiness independent of size."""
+        from repro.pipeline import default_plan_cache
+        cache = PlanCache()
+        assert len(cache) == 0 and bool(cache) is True
+        assert (cache or default_plan_cache()) is cache
+        # the guards this used to force are gone: an empty cache passed
+        # to the pipeline / compile is used, not replaced
+        pipe = PersistencePipeline(backend="jax", plan_cache=cache)
+        assert pipe.plan_cache is cache
+        g, f = _field()
+        pipe.lower(TopoRequest(field=f, grid=g)).compile(cache)
+        assert len(cache) > 0
+
     def test_unregistered_backend_instance(self):
         """Regression: a Backend *instance* that was never registered
         (test double / locally-built) must work end to end — lower,
