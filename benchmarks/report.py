@@ -534,18 +534,92 @@ def approx_bench(out_path, quick=False):
     return doc
 
 
+def backend_bench(out_path, quick=False):
+    """Sandwich back-end A/B (np reference vs jax kernels);
+    BENCH_backend.json.
+
+    Runs the full pipeline once per ``sandwich_backend`` on the 64^3
+    bench field (compile caches warmed first), attributes wall time with
+    the StageReport front/back split, machine-checks that the diagrams
+    are bit-identical (pairs + essential classes, every dimension), and
+    in full mode gates the back-end phase speedup at >= 5x."""
+    import numpy as np
+
+    from repro.core.diagram import diff_report, same_offdiagonal
+    from repro.core.grid import Grid
+    from repro.pipeline import PersistencePipeline, TopoRequest
+
+    dims = (24, 24, 24) if quick else (64, 64, 64)
+    g = Grid.of(*dims)
+    f = _approx_bench_field(dims)
+    req = TopoRequest(field=f, grid=g)
+
+    runs, results = {}, {}
+    for sb in ("jax", "np"):
+        pipe = PersistencePipeline(backend="jax", sandwich_backend=sb)
+        if sb == "jax":
+            # warm: gradient front-end + bucketed D0 round compiles (the
+            # np run reuses the shared gradient program via the plan
+            # cache, so it is warm by construction)
+            pipe.run(req)
+        t0 = time.perf_counter()
+        res = pipe.run(req)
+        s = time.perf_counter() - t0
+        rep = res.report
+        runs[sb] = {
+            "total_seconds": s,
+            "front_seconds": rep.front_seconds,
+            "back_seconds": rep.back_seconds,
+            "stages": {c.name: c.total_seconds for c in rep.children}}
+        results[sb] = res
+
+    dn, dj = results["np"].diagram, results["jax"].diagram
+    assert same_offdiagonal(dn, dj), diff_report(dn, dj, ("np", "jax"))
+    for k in sorted(set(dn.pairs) | set(dj.pairs)):
+        assert np.array_equal(dn.pairs[k], dj.pairs[k]), f"pairs[{k}]"
+    for k in sorted(set(dn.essential) | set(dj.essential)):
+        assert np.array_equal(dn.essential[k], dj.essential[k]), \
+            f"essential[{k}]"
+
+    back_speedup = runs["np"]["back_seconds"] / runs["jax"]["back_seconds"]
+    doc = {"schema": "ddms-backend-bench/v1",
+           "platform": platform.platform(),
+           "python": platform.python_version(),
+           "quick": bool(quick),
+           "dims": list(dims),
+           "bit_identical": True,
+           "runs": runs,
+           "backend_speedup": back_speedup,
+           "end_to_end_speedup": (runs["np"]["total_seconds"]
+                                  / runs["jax"]["total_seconds"])}
+    Path(out_path).write_text(json.dumps(doc, indent=1))
+    print(f"wrote {out_path}: back-end np={runs['np']['back_seconds']:.2f}s "
+          f"jax={runs['jax']['back_seconds']:.2f}s "
+          f"({back_speedup:.1f}x, bit-identical), "
+          f"end-to-end {doc['end_to_end_speedup']:.2f}x")
+    for sb in ("np", "jax"):
+        st = runs[sb]["stages"]
+        print(f"  {sb}: " + " ".join(
+            f"{k}={v*1e3:.0f}ms" for k, v in st.items()))
+    if not quick:
+        assert back_speedup >= 5.0, \
+            f"back-end speedup {back_speedup:.2f}x below the 5x gate"
+    return doc
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--dir", default="results/dryrun")
     ap.add_argument("--section", default="all",
                     choices=["all", "roofline", "dryrun", "pipeline",
-                             "gradient", "stream", "api", "approx"])
+                             "gradient", "stream", "api", "approx",
+                             "backend"])
     ap.add_argument("--out", default=None,
                     help="output path for --section "
-                         "pipeline/gradient/stream/api/approx")
+                         "pipeline/gradient/stream/api/approx/backend")
     ap.add_argument("--quick", action="store_true",
                     help="small sizes for CI smoke "
-                         "(gradient/stream/api/approx)")
+                         "(gradient/stream/api/approx/backend)")
     args = ap.parse_args()
     if args.section == "pipeline":
         pipeline_bench(args.out or "BENCH_pipeline.json")
@@ -561,6 +635,9 @@ def main():
         return
     if args.section == "approx":
         approx_bench(args.out or "BENCH_approx.json", quick=args.quick)
+        return
+    if args.section == "backend":
+        backend_bench(args.out or "BENCH_backend.json", quick=args.quick)
         return
     recs = load(args.dir)
     if args.section in ("all", "dryrun"):

@@ -36,7 +36,7 @@ import numpy as np
 
 from repro.pipeline.request import TopoRequest, strip_field
 
-from .hierarchy import Hierarchy, Level
+from .hierarchy import Hierarchy, Level, _is_source, block_minmax
 
 APPROX_META = "approx_meta"   # [bound, level, stride, fine nx, ny, nz]
 
@@ -83,6 +83,29 @@ def _attach_meta(res, req: TopoRequest, fine_dims, lev: Level):
     return res
 
 
+def _only_level_zero(pipeline, req: TopoRequest, epsilon: float) -> bool:
+    """Cheap probe: True when *no coarse level* can meet ``epsilon``, so
+    level 0 (exact) is the answer and the hierarchy need not be built.
+
+    Level bounds are monotonically non-decreasing with coarseness (blocks
+    nest), so the level-1 bound — one stride-2 block min/max pass, no
+    pyramid cascade, no per-level error fields — decides: if even level 1
+    misses the budget, every coarser level does too.  Out-of-core sources
+    skip the probe (it would cost the same fine pass the hierarchy's own
+    level-1 reduction performs)."""
+    if not all(d == 1 or d > 2 for d in req.grid.dims):
+        return True          # the hierarchy would offer only level 0
+    if _is_source(req.field):
+        return False
+    backend = req.backend if req.backend is not None \
+        else pipeline.backend.name
+    nx, ny, nz = req.grid.dims
+    mn, mx = block_minmax(np.asarray(req.field).reshape(nz, ny, nx), 2,
+                          backend)
+    bound_1 = float((mx.astype(np.float64) - mn.astype(np.float64)).max())
+    return bound_1 > epsilon
+
+
 def approximate(pipeline, request, *, epsilon: Optional[float] = None,
                 level: Optional[int] = None,
                 hierarchy: Optional[Hierarchy] = None):
@@ -103,11 +126,16 @@ def approximate(pipeline, request, *, epsilon: Optional[float] = None,
     if epsilon is not None and level is not None:
         raise ValueError("pass epsilon= or level=, not both")
     base = _base_request(req)
-    if level is None and epsilon == 0 and hierarchy is None:
-        # only level 0 can qualify: skip the full-field min/max pass
-        # and run the exact pipeline directly
-        return _attach_meta(pipeline.run(base), req, req.grid.dims,
-                            Level(0, 1, req.grid.dims, 0.0))
+    lev0 = Level(0, 1, req.grid.dims, 0.0)
+    if hierarchy is None and level == 0:
+        # explicit level 0 IS the exact pipeline (bound 0): run it
+        # directly, never paying the hierarchy build
+        return _attach_meta(pipeline.run(base), req, req.grid.dims, lev0)
+    if hierarchy is None and level is None and (
+            epsilon == 0 or _only_level_zero(pipeline, req, epsilon)):
+        # only level 0 can qualify: skip pyramid + error fields and run
+        # the exact pipeline directly
+        return _attach_meta(pipeline.run(base), req, req.grid.dims, lev0)
     h = hierarchy if hierarchy is not None \
         else build_hierarchy(pipeline, req)
     lev = h.level(level) if level is not None else h.pick_level(epsilon)

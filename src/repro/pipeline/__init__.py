@@ -31,8 +31,11 @@ from repro.stream.scheduler import StreamReport  # noqa: F401
 from .api import (PersistencePipeline, PipelineConfig,  # noqa: F401
                   PipelineResult)
 from .backends import (Backend, BackendCaps,  # noqa: F401
-                       UnknownBackendError, available_backends,
-                       get_backend, register_backend)
+                       SandwichBackend, UnknownBackendError,
+                       UnknownSandwichBackendError,
+                       available_backends, available_sandwich_backends,
+                       get_backend, get_sandwich_backend,
+                       register_backend, register_sandwich_backend)
 from .plan import (Executable, Plan, PlanCache,  # noqa: F401
                    default_plan_cache)
 from .request import TopoRequest, resolve_grid  # noqa: F401

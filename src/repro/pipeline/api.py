@@ -37,12 +37,13 @@ import numpy as np
 from repro.core.diagram import Diagram
 from repro.core.grid import Grid, vertex_order
 
-from .backends import Backend, get_backend
+from .backends import (Backend, SandwichBackend, get_backend,
+                       get_sandwich_backend)
 from .plan import Executable, Plan, PlanCache, default_plan_cache
 from .request import TopoRequest, strip_field
 from .result import DiagramResult, PipelineResult  # noqa: F401  (re-export)
 from .stages import (ALL_STAGES, FRONT_STAGES, PipelineState, StageReport,
-                     run_stages)
+                     run_stages, sandwich_of)
 
 _STAGES_BY_NAME = {st.name: st for st in ALL_STAGES}
 
@@ -56,6 +57,9 @@ class PipelineConfig:
     distributed: bool = False       # round-synchronous pairing + token D1
     anticipation: bool = True       # D1 anticipation (Sec. V-B)
     budget: Optional[int] = None    # D1 anticipation step budget
+    # the sandwich back-end running the pairing phases; None means the
+    # "np" reference (configs predating the knob keep their behavior)
+    sandwich: Optional[SandwichBackend] = None
 
     def __post_init__(self):
         if self.n_blocks < 1:
@@ -95,6 +99,10 @@ class PersistencePipeline:
         the token-based D1 (the DDMS back-end).  Defaults to
         ``n_blocks > 1``.
     anticipation, budget : D1 engine knobs (distributed only).
+    sandwich_backend : which back-end runs the pairing phases (critical
+        extraction, D0, dual, D1): ``"jax"`` (default) selects the
+        batched kernels of ``repro.kernels.sandwich``, ``"np"`` the
+        sequential reference oracles.  Output is bit-identical.
     plan_cache : the compiled-artifact cache; defaults to the
         process-wide shared :func:`default_plan_cache`.
     """
@@ -102,12 +110,16 @@ class PersistencePipeline:
     def __init__(self, backend: str = "np", *, n_blocks: int = 1,
                  distributed: Optional[bool] = None,
                  anticipation: bool = True, budget: Optional[int] = None,
+                 sandwich_backend: Optional[str] = None,
                  plan_cache: Optional[PlanCache] = None):
         be = backend if isinstance(backend, Backend) else get_backend(backend)
+        sb = sandwich_backend if sandwich_backend is not None else "jax"
         self.config = PipelineConfig(
             backend=be, n_blocks=n_blocks,
             distributed=(n_blocks > 1) if distributed is None else distributed,
-            anticipation=anticipation, budget=budget)
+            anticipation=anticipation, budget=budget,
+            sandwich=sb if isinstance(sb, SandwichBackend)
+            else get_sandwich_backend(sb))
         self.plan_cache = plan_cache or default_plan_cache()
 
     # -- helpers -----------------------------------------------------------
@@ -161,6 +173,11 @@ class PersistencePipeline:
         anticipation = req.anticipation if req.anticipation is not None \
             else cfg.anticipation
         budget = req.budget if req.budget is not None else cfg.budget
+        if req.sandwich_backend is not None:
+            sandwich = get_sandwich_backend(req.sandwich_backend).name
+        else:
+            sandwich = cfg.sandwich.name if cfg.sandwich is not None \
+                else "jax"
         be = self._get_backend(backend)
         streamed = req.is_stream
         if streamed and not be.caps.streamed:
@@ -183,7 +200,8 @@ class PersistencePipeline:
                     homology_dims=hdims,
                     stage_names=front + _back_stage_names(g.dim, hdims),
                     epsilon=req.epsilon, deadline_s=req.deadline_s,
-                    progressive=req.progressive)
+                    progressive=req.progressive,
+                    sandwich_backend=sandwich)
 
     def compile(self, request, grid=None, **options) -> Executable:
         """``lower`` + bind compiled artifacts via the shared cache."""
@@ -268,7 +286,8 @@ class PersistencePipeline:
         return PipelineConfig(
             backend=self._get_backend(plan.backend), n_blocks=plan.n_blocks,
             distributed=plan.distributed, anticipation=plan.anticipation,
-            budget=plan.budget)
+            budget=plan.budget,
+            sandwich=get_sandwich_backend(plan.sandwich_backend))
 
     def _stages(self, plan: Plan, names) -> tuple:
         return tuple(_STAGES_BY_NAME[n] for n in names)
@@ -349,7 +368,6 @@ class PersistencePipeline:
     def _run_stream(self, req: TopoRequest, plan: Plan) -> DiagramResult:
         """Out-of-core path: chunked front-end on rank-free keys, back-
         end on the stitched critical set, SparseOrder rank recovery."""
-        from repro.core.critical import extract_critical
         from repro.stream import (SparseOrder, as_source, diagram_vertices,
                                   stream_front)
 
@@ -374,7 +392,7 @@ class PersistencePipeline:
         state = PipelineState(grid, np.zeros(0, np.float32),
                               order=out.keys, gf=out.gf)
         with report.stage("extract_sort"):
-            state.ci = extract_critical(grid, out.gf, out.keys)
+            state.ci = sandwich_of(cfg).extract(grid, out.gf, out.keys)
         run_stages(state, cfg, report,
                    stages=self._stages(plan, plan.stage_names[2:]))
 

@@ -55,6 +55,10 @@ class UnknownBackendError(KeyError):
     """Raised for a backend name absent from the registry."""
 
 
+class UnknownSandwichBackendError(KeyError):
+    """Raised for a sandwich back-end name absent from the registry."""
+
+
 @dataclass(frozen=True)
 class BackendCaps:
     jittable: bool = False   # gradient program is jit-compiled
@@ -100,6 +104,82 @@ def get_backend(name: str) -> Backend:
 
 def available_backends() -> Dict[str, Backend]:
     return dict(_REGISTRY)
+
+
+# --------------------------------------------------------------------------
+# Sandwich back-ends: the D0 / D_{d-1} / D1 pairing phases
+# --------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class SandwichBackend:
+    """One implementation of the sandwich back-end phases.
+
+    The gradient front-end is selected by :class:`Backend`; everything
+    after it — critical extraction, the D0 elder-rule pairing, the dual
+    graph build, and the D1 saddle-saddle reduction — is selected here.
+    ``np`` is the sequential reference (the bit-exactness oracle);
+    ``jax`` is the batched kernel path of ``repro.kernels.sandwich``
+    (pointer-jumping D0, chase-resolved dual graph, wavefront D1) and
+    the pipeline default."""
+
+    name: str
+    extract: Callable      # (grid, gf, order)          -> CriticalInfo
+    pair_d0: Callable      # (ExtremumGraph)            -> ExtremaPairs
+    build_dual: Callable   # (grid, gf, ci, saddles)    -> ExtremumGraph
+    pair_d1: Callable      # (grid, gf, ci, c1, c2)     -> SaddleSaddlePairs
+    description: str = ""
+
+
+_SANDWICH_REGISTRY: Dict[str, SandwichBackend] = {}
+
+
+def register_sandwich_backend(backend: SandwichBackend,
+                              overwrite: bool = False) -> SandwichBackend:
+    if backend.name in _SANDWICH_REGISTRY and not overwrite:
+        raise ValueError(
+            f"sandwich backend {backend.name!r} already registered")
+    _SANDWICH_REGISTRY[backend.name] = backend
+    return backend
+
+
+def get_sandwich_backend(name: str) -> SandwichBackend:
+    try:
+        return _SANDWICH_REGISTRY[name]
+    except KeyError:
+        raise UnknownSandwichBackendError(
+            f"unknown sandwich backend {name!r}; registered: "
+            f"{sorted(_SANDWICH_REGISTRY)}") from None
+
+
+def available_sandwich_backends() -> Dict[str, SandwichBackend]:
+    return dict(_SANDWICH_REGISTRY)
+
+
+def _register_sandwich_backends() -> None:
+    from repro.core.critical import extract_critical
+    from repro.core.extremum_graph import build_dual_graph
+    from repro.core.pairing import pair_extrema_saddles
+    from repro.core.saddle_saddle import pair_saddle_saddle_seq
+    from repro.kernels.sandwich import (build_dual_graph_chase,
+                                        extract_critical_kernel,
+                                        pair_extrema_saddles_kernel,
+                                        pair_saddle_saddle_wavefront)
+    register_sandwich_backend(SandwichBackend(
+        name="np", extract=extract_critical,
+        pair_d0=pair_extrema_saddles, build_dual=build_dual_graph,
+        pair_d1=pair_saddle_saddle_seq,
+        description="sequential reference back-end (Union-Find dicts + "
+                    "per-triangle set-XOR); the bit-exactness oracle"))
+    register_sandwich_backend(SandwichBackend(
+        name="jax", extract=extract_critical_kernel,
+        pair_d0=pair_extrema_saddles_kernel,
+        build_dual=build_dual_graph_chase,
+        pair_d1=pair_saddle_saddle_wavefront,
+        description="batched kernel back-end: jitted pointer-jumping D0, "
+                    "chase-resolved dual graph, wavefront D1 columns"))
+
+
+_register_sandwich_backends()
 
 
 # --------------------------------------------------------------------------

@@ -165,13 +165,18 @@ class Plan:
     epsilon: Optional[float] = None
     deadline_s: Optional[float] = None
     progressive: bool = False
+    # which sandwich back-end runs the pairing phases (critical
+    # extraction, D0, dual, D1): "jax" batched kernels (default) or the
+    # "np" sequential reference oracle
+    sandwich_backend: str = "jax"
 
     @property
     def key(self) -> tuple:
         return (self.dims, self.backend, self.n_blocks, self.distributed,
                 self.anticipation, self.budget, self.streamed,
                 self.chunk_z, self.chunk_budget, self.homology_dims,
-                self.epsilon, self.deadline_s, self.progressive)
+                self.epsilon, self.deadline_s, self.progressive,
+                self.sandwich_backend)
 
     @property
     def is_approx(self) -> bool:
@@ -203,7 +208,9 @@ class Plan:
                 knobs.append(f"deadline_s={self.deadline_s}")
             approx = f", approx({', '.join(knobs)})"
         return (f"Plan(dims={self.dims}, backend={self.backend!r}, "
-                f"{mode}, {engine} back-end, n_blocks={self.n_blocks}, "
+                f"{mode}, {engine} back-end, "
+                f"sandwich={self.sandwich_backend!r}, "
+                f"n_blocks={self.n_blocks}, "
                 f"homology_dims={self.homology_dims}{approx}, "
                 f"stages={' -> '.join(self.stage_names)})")
 

@@ -77,6 +77,10 @@ class TopoRequest:
         (clients rarely need every low-persistence pair).
     backend, n_blocks, distributed, anticipation, budget : execution
         options; ``None`` inherits the pipeline's configured default.
+    sandwich_backend : which back-end runs the pairing phases (critical
+        extraction, D0, dual, D1): ``"jax"`` batched kernels or the
+        ``"np"`` sequential reference; ``None`` inherits the pipeline's
+        default (``"jax"``).
         Exception: a request that sets ``n_blocks`` but not
         ``distributed`` re-derives ``distributed = n_blocks > 1``
         (mirroring the ``PersistencePipeline`` constructor) — set
@@ -106,6 +110,7 @@ class TopoRequest:
     min_persistence: Optional[float] = None
     top_k: Optional[int] = None
     backend: Optional[str] = None
+    sandwich_backend: Optional[str] = None
     n_blocks: Optional[int] = None
     distributed: Optional[bool] = None
     anticipation: Optional[bool] = None

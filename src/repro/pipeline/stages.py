@@ -29,19 +29,23 @@ from typing import Dict, List, Optional
 
 import numpy as np
 
-from repro.core.critical import CriticalInfo, extract_critical
+from repro.core.critical import CriticalInfo
 from repro.core.diagram import Diagram
 from repro.core.dms import _as_pairs
-from repro.core.extremum_graph import build_d0_graph, build_dual_graph
+from repro.core.extremum_graph import build_d0_graph
 from repro.core.gradient import GradientField
 from repro.core.grid import Grid, vertex_order
-from repro.core.pairing import pair_extrema_saddles
-from repro.core.saddle_saddle import pair_saddle_saddle_seq
 
 
 # --------------------------------------------------------------------------
 # StageReport
 # --------------------------------------------------------------------------
+
+# the wall-time attribution split: the *front-end* (order + gradient) is
+# what PR 2 kernelized; everything from critical extraction on is the
+# *sandwich back-end* this registry selects an implementation for
+FRONT_STAGE_NAMES = ("order", "gradient")
+BACK_STAGE_NAMES = ("extract_sort", "d0", "d_top", "d1")
 
 @dataclass
 class StageReport:
@@ -76,6 +80,20 @@ class StageReport:
         return self.seconds if self.seconds else \
             sum(c.total_seconds for c in self.children)
 
+    def _named_seconds(self, names) -> float:
+        return sum(c.total_seconds for c in self.children
+                   if c.name in names)
+
+    @property
+    def front_seconds(self) -> float:
+        """Front-end wall time (order + gradient child stages)."""
+        return self._named_seconds(FRONT_STAGE_NAMES)
+
+    @property
+    def back_seconds(self) -> float:
+        """Sandwich back-end wall time (extract_sort + d0 + d_top + d1)."""
+        return self._named_seconds(BACK_STAGE_NAMES)
+
     def flat(self) -> Dict[str, float]:
         """Legacy flat stats dict: stage names -> seconds (nested names are
         dot-joined), all counters merged at top level under their own keys."""
@@ -92,9 +110,13 @@ class StageReport:
 
     def to_dict(self) -> dict:
         """Nested machine-readable form (BENCH_pipeline.json)."""
-        return {"name": self.name, "seconds": self.seconds,
-                "counters": dict(self.counters),
-                "children": [c.to_dict() for c in self.children]}
+        out = {"name": self.name, "seconds": self.seconds,
+               "counters": dict(self.counters),
+               "children": [c.to_dict() for c in self.children]}
+        if self.children:
+            out["front_seconds"] = self.front_seconds
+            out["back_seconds"] = self.back_seconds
+        return out
 
 
 # --------------------------------------------------------------------------
@@ -146,13 +168,26 @@ class GradientStage:
         rep.count(n_critical=sum(state.gf.n_critical().values()))
 
 
+def sandwich_of(cfg):
+    """The config's sandwich back-end (``np`` reference for configs
+    predating the knob, e.g. hand-built test doubles)."""
+    sb = getattr(cfg, "sandwich", None)
+    if sb is None:
+        from .backends import get_sandwich_backend
+        sb = get_sandwich_backend("np")
+    return sb
+
+
 class CriticalStage:
-    """Critical extraction + per-dimension rank sort."""
+    """Critical extraction + per-dimension rank sort (sandwich back-end
+    dispatch: reference dense lexsort vs the kernel's isomorphic-rank
+    extraction)."""
 
     name = "extract_sort"
 
     def run(self, state: PipelineState, cfg, rep: StageReport) -> None:
-        state.ci = extract_critical(state.grid, state.gf, state.order)
+        state.ci = sandwich_of(cfg).extract(state.grid, state.gf,
+                                            state.order)
 
 
 # --------------------------------------------------------------------------
@@ -168,7 +203,7 @@ def _pair_graph(g, cfg, rep: StageReport, prefix: str):
         if prefix == "d0":
             rep.count(d0_corrections=st.corrections)
         return p
-    return pair_extrema_saddles(g)
+    return sandwich_of(cfg).pair_d0(g)
 
 
 class D0Stage:
@@ -208,7 +243,8 @@ class DualStage:
                      if int(e) not in state.d0_saddles], dtype=np.int64)
             else:
                 state.dual_saddles = ci.crit_sids[d - 1]
-            gD = build_dual_graph(grid, state.gf, ci, state.dual_saddles)
+            gD = sandwich_of(cfg).build_dual(grid, state.gf, ci,
+                                             state.dual_saddles)
             pD = _pair_graph(gD, cfg, rep, "d_top")
             state.pairs[d - 1] = _as_pairs(pD.pairs)
             state.essential[d] = np.asarray(
@@ -245,8 +281,10 @@ class D1Stage:
                           d1_expansions=st1.expansions, d1_merges=st1.merges,
                           d1_steals=st1.steals)
             else:
-                ss = pair_saddle_saddle_seq(grid, state.gf, ci, c1, c2)
+                ss = sandwich_of(cfg).pair_d1(grid, state.gf, ci, c1, c2)
                 rep.count(d1_expansions=ss.expansions)
+                if hasattr(ss, "rounds"):
+                    rep.count(d1_rounds=ss.rounds)
             state.pairs[1] = _as_pairs(ss.pairs)
             state.essential[1] = np.asarray(ss.unpaired_edges,
                                             dtype=np.int64)

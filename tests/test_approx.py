@@ -472,3 +472,61 @@ class TestProgressiveServing:
             with pytest.raises(RuntimeError, match="poisoned"):
                 fut.preview.result(timeout=10)
             assert svc.stats.errors == 1
+
+
+# --------------------------------------------------------------------------
+# level-0 short-circuit: exact runs must never pay the hierarchy build
+# --------------------------------------------------------------------------
+
+class TestLevelZeroShortCircuit:
+    """Regression: an epsilon too tight for any coarse level (or an
+    explicit level 0) used to build the full pyramid + error fields
+    before running the exact pipeline anyway, making the "approximate"
+    run slower than the exact one."""
+
+    def _counting_hierarchy(self, monkeypatch):
+        import repro.approx.engine as eng
+        calls = {"n": 0}
+        real = eng.Hierarchy
+
+        def spy(*args, **kwargs):
+            calls["n"] += 1
+            return real(*args, **kwargs)
+
+        monkeypatch.setattr(eng, "Hierarchy", spy)
+        return calls
+
+    def test_explicit_level_zero_skips_hierarchy(self, pipe, monkeypatch):
+        calls = self._counting_hierarchy(monkeypatch)
+        f = make_field("random", DIMS, seed=3)
+        req = TopoRequest(field=f, grid=Grid.of(*DIMS))
+        res = approximate(pipe, req, level=0)
+        assert calls["n"] == 0, "level 0 must not build the hierarchy"
+        assert res.approx_level == 0 and res.error_bound == 0.0
+        exact = pipe.run(req)
+        assert same_offdiagonal(res.diagram, exact.diagram), \
+            diff_report(res.diagram, exact.diagram, ("level0", "exact"))
+
+    def test_too_tight_epsilon_skips_hierarchy(self, pipe, monkeypatch):
+        calls = self._counting_hierarchy(monkeypatch)
+        f = make_field("random", DIMS, seed=3)
+        req = TopoRequest(field=f, grid=Grid.of(*DIMS))
+        # random fields give every coarse level a large bound: a tiny
+        # epsilon can only be met by level 0, so the probe must route
+        # straight to the exact pipeline
+        res = approximate(pipe, req, epsilon=1e-9)
+        assert calls["n"] == 0, \
+            "epsilon met only by level 0 must not build the hierarchy"
+        assert res.approx_level == 0 and res.error_bound == 0.0
+        exact = pipe.run(req)
+        assert same_offdiagonal(res.diagram, exact.diagram), \
+            diff_report(res.diagram, exact.diagram, ("eps", "exact"))
+
+    def test_loose_epsilon_still_builds_hierarchy(self, pipe, monkeypatch):
+        calls = self._counting_hierarchy(monkeypatch)
+        f = make_field("elevation", DIMS, seed=0)
+        req = TopoRequest(field=f, grid=Grid.of(*DIMS))
+        span = float(np.asarray(f).max() - np.asarray(f).min())
+        res = approximate(pipe, req, epsilon=span)
+        assert calls["n"] == 1, "a meetable epsilon should use the pyramid"
+        assert res.approx_level > 0
