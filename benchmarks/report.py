@@ -13,6 +13,8 @@ BENCH_gradient.json).
         [--quick] [--out BENCH_api.json]
     PYTHONPATH=src python -m benchmarks.report --section approx \
         [--quick] [--out BENCH_approx.json]
+    PYTHONPATH=src python -m benchmarks.report --section scale \
+        [--quick] [--out BENCH_scale.json]
 
 The pipeline section runs ``PersistencePipeline`` over a fixed field set
 and dumps every ``StageReport`` (nested per-stage wall times + algorithm
@@ -21,7 +23,13 @@ pre-pass vs fused gather) with vertices/s and the modeled HBM
 bytes/vertex, so the perf trajectory is tracked PR-over-PR.  The stream
 section A/B-times the out-of-core engine (``diagram_stream``) against
 the in-memory path, recording peak resident field bytes and the
-load/compute overlap from the ``StreamReport``.
+load/compute overlap from the ``StreamReport``.  The scale section runs
+the overlapped sharded-streaming front-end at 1/2/4/8 shards (weak +
+strong, one forced-host-device subprocess per point) with
+slots-normalized efficiency and the halo overlap fraction, cross-checks
+bit-identity against the in-memory diagram, and in full mode records a
+256^3 memmap-streamed sharded run and gates weak-scaling efficiency at
+4 shards >= 60%.
 """
 
 import argparse
@@ -607,13 +615,172 @@ def backend_bench(out_path, quick=False):
     return doc
 
 
+def _scale_point(spec, timeout=3600):
+    """Run one scaling point in a subprocess (scale_worker.py): the
+    forced host device count only takes effect before jax imports, so
+    every point gets a fresh interpreter."""
+    import os
+    import subprocess
+    import sys
+
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    worker = str(Path(__file__).parent / "scale_worker.py")
+    r = subprocess.run([sys.executable, worker, json.dumps(spec)],
+                       capture_output=True, text=True, timeout=timeout,
+                       env=env)
+    if r.returncode != 0:
+        raise RuntimeError(f"scale worker failed for {spec}:\n"
+                           f"{r.stderr[-2000:]}")
+    return json.loads(r.stdout.strip().splitlines()[-1])
+
+
+def scale_bench(out_path, quick=False):
+    """Weak/strong scaling of the sharded-streaming front-end;
+    BENCH_scale.json.
+
+    Each point runs in its own subprocess with ``--xla_force_host_
+    platform_device_count=N`` so shard workers pin to distinct host
+    devices.  Efficiency is *slots-normalized*: with only ``slots =
+    min(N, cpu_count)`` cores, N shards can speed up at most ``slots``x,
+    so weak efficiency is ``(N * T1) / (slots * TN)`` and strong
+    efficiency ``T1 / (slots * TN)`` — on a 1-core box both reduce to
+    "does sharding add overhead", on an N-core box to the classical
+    definitions.  Timings cover the sharded *front-end* phase (the
+    sandwich back-end is shard-count-independent).
+
+    Also records the bit-identity cross-check (memmap-streamed sharded
+    diagram == in-memory diagram) and, in full mode, a 256^3
+    memmap-streamed sharded run plus the >= 60% weak-scaling efficiency
+    gate at 4 shards."""
+    import os
+    import tempfile
+
+    import numpy as np
+
+    from repro.core.diagram import diff_report, same_offdiagonal
+    from repro.core.grid import Grid
+    from repro.fields import make_field
+    from repro.pipeline import PersistencePipeline, TopoRequest
+    from repro.stream import MemmapSource
+
+    cpu = os.cpu_count() or 1
+    shard_counts = (1, 2, 4) if quick else (1, 2, 4, 8)
+    base = (32, 32, 16) if quick else (64, 64, 16)
+    strong_dims = (32, 32, 32) if quick else (64, 64, 64)
+    chunk_z = 8
+
+    def efficiency(points, weak):
+        t1 = points[0]["wall_s"]
+        for p in points:
+            n = p["n_shards"]
+            slots = min(n, cpu)
+            ideal = t1 * (n if weak else 1) / slots
+            p["slots"] = slots
+            p["efficiency"] = ideal / p["wall_s"]
+
+    weak_points = []
+    for n in shard_counts:
+        dims = (base[0], base[1], base[2] * n)
+        p = _scale_point({"dims": dims, "n_shards": n, "chunk_z": chunk_z,
+                          "field": "wavelet", "reps": 1})
+        weak_points.append(p)
+        print(f"  weak  x{n}: dims={dims} wall={p['wall_s']:.2f}s "
+              f"ofrac={p['overlap_fraction']}")
+    efficiency(weak_points, weak=True)
+
+    strong_points = []
+    for n in shard_counts:
+        p = _scale_point({"dims": strong_dims, "n_shards": n,
+                          "chunk_z": chunk_z, "field": "wavelet",
+                          "reps": 1})
+        strong_points.append(p)
+        print(f"  strong x{n}: dims={strong_dims} wall={p['wall_s']:.2f}s "
+              f"ofrac={p['overlap_fraction']}")
+    efficiency(strong_points, weak=False)
+
+    # bit-identity cross-check: memmap-streamed sharded diagram vs the
+    # in-memory single-device diagram, full pipeline
+    check_dims = (32, 32, 32) if quick else (64, 64, 64)
+    g = Grid.of(*check_dims)
+    f = make_field("wavelet", check_dims, seed=0)
+    pipe = PersistencePipeline(backend="jax")
+    ref = pipe.diagram(f, grid=g)
+    with tempfile.TemporaryDirectory() as td:
+        src = MemmapSource.write(os.path.join(td, "f.raw"),
+                                 f.reshape(check_dims[::-1]))
+        res = pipe.run(TopoRequest(field=src, stream=True, chunk_z=chunk_z,
+                                   n_blocks=4))
+    assert same_offdiagonal(res.diagram, ref.diagram), \
+        diff_report(res.diagram, ref.diagram)
+    for p in range(g.dim + 1):
+        assert np.array_equal(res.diagram.essential_orders(p),
+                              ref.diagram.essential_orders(p))
+    bit_identity = {
+        "dims": list(check_dims), "n_shards": int(res.stream.n_shards),
+        "source": "memmap", "checked": True,
+        "peak_resident_field_bytes":
+            int(res.stream.peak_resident_field_bytes)}
+    print(f"  bit-identity {check_dims} x{res.stream.n_shards} memmap: OK")
+
+    # full mode: one >= 256^3 memmap-streamed sharded run — the field
+    # file exists on disk only; each shard keeps ~2 ghost-extended
+    # chunks resident
+    memmap_large = None
+    if not quick:
+        big = (256, 256, 256)
+        with tempfile.TemporaryDirectory() as td:
+            path = os.path.join(td, "big.raw")
+            MemmapSource.write(path,
+                               make_field("wavelet", big, seed=0)
+                               .reshape(big[::-1]))
+            memmap_large = _scale_point(
+                {"dims": big, "n_shards": 4, "chunk_z": 8,
+                 "memmap": path, "warm": False, "reps": 1},
+                timeout=7200)
+        field_bytes = big[0] * big[1] * big[2] * 4
+        memmap_large["field_bytes"] = field_bytes
+        # out-of-core contract: <= 2 ghost-extended chunks resident per
+        # shard, and well under the field itself
+        assert memmap_large["peak_resident_field_bytes"] \
+            <= 4 * 2 * memmap_large["max_chunk_bytes"]
+        assert memmap_large["peak_resident_field_bytes"] < field_bytes / 2
+        print(f"  memmap {big} x4: wall={memmap_large['wall_s']:.1f}s "
+              f"resident={fmt_bytes(memmap_large['peak_resident_field_bytes'])}"
+              f" of {fmt_bytes(field_bytes)}")
+
+    doc = {"schema": "ddms-scale-bench/v1",
+           "platform": platform.platform(),
+           "python": platform.python_version(),
+           "quick": bool(quick), "cpu_count": cpu,
+           "chunk_z": chunk_z,
+           "weak": {"base_dims_per_shard": list(base),
+                    "points": weak_points},
+           "strong": {"dims": list(strong_dims), "points": strong_points},
+           "bit_identity": bit_identity,
+           "memmap_large": memmap_large}
+    Path(out_path).write_text(json.dumps(doc, indent=1))
+    print(f"wrote {out_path}: {len(weak_points)} weak + "
+          f"{len(strong_points)} strong points (cpu_count={cpu})")
+    for label, pts in (("weak", weak_points), ("strong", strong_points)):
+        print(f"  {label}: " + " ".join(
+            f"x{p['n_shards']}={p['wall_s']:.2f}s(eff {p['efficiency']:.2f})"
+            for p in pts))
+    if not quick:
+        at4 = next(p for p in weak_points if p["n_shards"] == 4)
+        assert at4["efficiency"] >= 0.60, \
+            (f"weak-scaling efficiency {at4['efficiency']:.2f} at 4 shards "
+             f"below the 0.60 gate")
+    return doc
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--dir", default="results/dryrun")
     ap.add_argument("--section", default="all",
                     choices=["all", "roofline", "dryrun", "pipeline",
                              "gradient", "stream", "api", "approx",
-                             "backend"])
+                             "backend", "scale"])
     ap.add_argument("--out", default=None,
                     help="output path for --section "
                          "pipeline/gradient/stream/api/approx/backend")
@@ -638,6 +805,9 @@ def main():
         return
     if args.section == "backend":
         backend_bench(args.out or "BENCH_backend.json", quick=args.quick)
+        return
+    if args.section == "scale":
+        scale_bench(args.out or "BENCH_scale.json", quick=args.quick)
         return
     recs = load(args.dir)
     if args.section in ("all", "dryrun"):

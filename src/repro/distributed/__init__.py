@@ -1,2 +1,4 @@
 # Distributed DDMS building blocks: block decomposition, distributed order,
 # self-correcting extremum-saddle pairing rounds, token-based D1 rounds.
+
+from .shardmap_pipeline import CritCapacityError, FrontConfig  # noqa: F401

@@ -35,10 +35,15 @@ import numpy as np
 def rankfree_keys(f, gids):
     """Monotone int64 keys equivalent to the global order, no comm.
 
-    float32 f -> sortable int32 (sign-fold) -> key = (asint << 32) | gid32
-    (valid for nv < 2^32; for larger grids widen to two lanes)."""
+    float32 f -> sortable int32 (sign-fold) -> key =
+    ((asint + 2^31) << 31) | gid (valid for nv < 2^31; for larger grids
+    widen to two lanes).  The ``+ 2^31`` bias keeps every key
+    non-negative — the gradient kernels use ``-1`` as the
+    outside-the-grid sentinel, so an unbiased key for a negative field
+    value would read as "no neighbor" and fabricate critical points.
+    Same layout as ``repro.stream.chunks.pack_value_keys``."""
     fi = _sortable(f).astype(jnp.int64)
-    return (fi << 32) | gids.astype(jnp.int64)
+    return ((fi + 2 ** 31) << 31) | gids.astype(jnp.int64)
 
 
 def _sortable(f):

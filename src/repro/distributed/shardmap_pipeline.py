@@ -45,17 +45,41 @@ from .order import rankfree_keys, sample_sort_ranks
 OMEGA = -2
 
 
+class CritCapacityError(RuntimeError):
+    """A device found more critical edges/triangles than its fixed-shape
+    triplet buffers can hold.  Raised by :func:`run_front` (never a
+    silent truncation); carries the observed peak and the capacity so
+    callers can rerun with an explicit ``crit_cap``."""
+
+    def __init__(self, observed: int, cap: int, dims, n_blocks: int):
+        self.observed = int(observed)
+        self.cap = int(cap)
+        super().__init__(
+            f"critical-simplex count {self.observed} exceeds the triplet "
+            f"buffer capacity {self.cap} on at least one device (dims="
+            f"{tuple(dims)}, n_blocks={n_blocks}); pass crit_cap="
+            f"{self.observed} (or higher) to run_front/FrontConfig")
+
+
 @dataclass(frozen=True)
 class FrontConfig:
     dims: Tuple[int, int, int]        # global (nx, ny, nz)
     n_blocks: int
     axis_name: object = "blocks"      # one name or tuple of names
-    crit_cap: int = 4096              # triplet buffer capacity per device
-    ring_rotations: int = 3           # resolution ring rotations
+    # triplet buffer capacity per device; None auto-sizes from the grid
+    # (overflow always *raises* CritCapacityError, never truncates)
+    crit_cap: Optional[int] = None
+    # resolution ring rotations; None derives a convergence bound from
+    # n_blocks + plane size and early-exits on stationarity
+    ring_rotations: Optional[int] = None
     gradient_backend: str = "jax"     # "jax" | "fused" | "pallas"
     gradient_chunk: Optional[int] = None  # vertices per chunk (memory knob)
     use_sample_sort: bool = True
     sort_slack: float = 2.0
+    # split the gradient into interior planes (purely local) + the two
+    # boundary planes (need the ppermute halo) so XLA overlaps the
+    # collective with the interior kernel; output is bit-identical
+    overlap_comm: bool = True
 
     @property
     def nz_local(self) -> int:
@@ -76,6 +100,33 @@ class FrontConfig:
     @property
     def nv_local(self) -> int:
         return self.nz_local * self.plane
+
+    @property
+    def crit_capacity(self) -> int:
+        """Resolved triplet buffer capacity: the explicit ``crit_cap``,
+        else sized from the slab (a lower-star emits at most a few
+        critical cells per vertex; overflow raises, never truncates)."""
+        if self.crit_cap is not None:
+            return self.crit_cap
+        return min(7 * self.nv_local, max(4096, self.nv_local))
+
+    def ring_rotation_count(self, ent_per_vertex: int = 1) -> int:
+        """Rotations guaranteeing ring-resolution convergence.
+
+        Each rotation substitutes through *rotation-start snapshots* of
+        every block's boundary tables and then re-doubles locally, so
+        resolved prefixes double per rotation (parallel pointer jumping
+        on the boundary graph).  V-paths are strictly descending — they
+        visit each boundary-plane entity at most once — so chain length
+        across boundaries is bounded by the total boundary entries
+        ``2 * (n_blocks - 1) * plane * ent``, and ``ceil(log2(.)) + 1``
+        rotations suffice.  The old hard-coded 3 silently under-resolved
+        zigzag chains crossing more than ~8 slab boundaries."""
+        if self.ring_rotations is not None:
+            return self.ring_rotations
+        boundary = 2 * max(1, self.n_blocks - 1) * self.plane \
+            * max(1, ent_per_vertex)
+        return max(3, int(np.ceil(np.log2(boundary))) + 1)
 
 
 # -- mesh-axis helpers (single name or tuple; z is split over all of them) --
@@ -194,13 +245,36 @@ def ring_resolve(cfg: FrontConfig, table, ent_per_vertex: int, queries):
             changed = (table != old_t).sum() + (queries != old_q).sum()
             return table, queries, changed
 
-        changed = jnp.int64(0)
-        for _ in range(cfg.ring_rotations):
-            table, queries, changed = one_rotation((table, queries))
-        # stationary <=> resolved: a locally-doubled table entry only maps a
-        # value to itself if it is terminal, so any unresolved chain keeps
-        # advancing; entries changed in the final rotation are unconverged.
-        unresolved = jax.lax.psum(changed, cfg.axis_name)
+        max_rot = cfg.ring_rotation_count(ent_per_vertex)
+        if cfg.ring_rotations is not None:
+            # explicit count: fixed rotations (legacy behavior, still
+            # reports unresolved chains through the stationarity count)
+            changed = jnp.int64(0)
+            for _ in range(max_rot):
+                table, queries, changed = one_rotation((table, queries))
+            unresolved = jax.lax.psum(changed, cfg.axis_name)
+        else:
+            # derived bound + stationarity early exit: rotate until no
+            # entry moved anywhere on the ring (the psum makes the loop
+            # condition globally uniform, so every device takes the
+            # same number of rotations — no collective mismatch)
+            def cond(st):
+                _, _, changed_g, r = st
+                return (changed_g > 0) & (r < max_rot)
+
+            def body(st):
+                table, queries, _, r = st
+                table, queries, changed = one_rotation((table, queries))
+                return (table, queries,
+                        jax.lax.psum(changed, cfg.axis_name), r + 1)
+
+            table, queries, unresolved, _ = jax.lax.while_loop(
+                cond, body, (table, queries, jnp.int64(1), jnp.int64(0)))
+            # stationary <=> resolved: a locally-doubled table entry only
+            # maps a value to itself if it is terminal, so any unresolved
+            # chain keeps advancing; the loop only stops early once a full
+            # rotation moved nothing, hence unresolved > 0 here means the
+            # convergence bound itself was exceeded.
     else:
         unresolved = jnp.int64(0)
     return table, queries, unresolved
@@ -234,6 +308,15 @@ def halo_gradient(cfg: FrontConfig, ranks):
     backend consumes the extended volume directly — the (nv, 27) tensor
     is still built here because the triplet-key extraction downstream
     reads neighbor orders at the critical simplices.
+
+    With ``cfg.overlap_comm`` the work is split so the collective hides
+    behind compute: the ``ppermute`` is issued first, the interior
+    planes ``[1, nz_local - 1)`` (whose 27-neighborhoods are purely
+    local) are processed from the un-extended slab, and only the two
+    boundary planes consume the received halo (via 3-plane sub-volumes).
+    The row functions are per-vertex maps, so the stitched result is
+    bit-identical to the monolithic path — but XLA's scheduler is now
+    free to run the interior gradient while the halo is in flight.
     """
     nx, ny, _ = cfg.dims
     nzl, plane, nvl = cfg.nz_local, cfg.plane, cfg.nv_local
@@ -241,16 +324,45 @@ def halo_gradient(cfg: FrontConfig, ranks):
     me = _axis_index(ax)
     nb = cfg.n_blocks
     r3 = ranks.reshape(nzl, ny, nx)
+    # issue the collectives first: nothing below depends on them until
+    # the boundary-plane stitches at the very end of the overlap path
     below = _ppshift(r3[-1], ax, up=True)
     above = _ppshift(r3[0], ax, up=False)
     below = jnp.where(me > 0, below, jnp.int64(-1))
     above = jnp.where(me < nb - 1, above, jnp.int64(-1))
-    ext = jnp.concatenate([below[None], r3, above[None]], axis=0)
     from repro.core.grid import Grid
-    eg = Grid.of(nx, ny, nzl + 2)
-    nbrs_ext = GR.neighbor_orders(eg, ext.reshape(-1), xp=jnp)
-    nbrs = nbrs_ext.reshape(nzl + 2, plane, 27)[1:-1].reshape(nvl, 27)
-    return nbrs, _gradient_rows(cfg, nbrs, ranks, ext=ext)
+    if not cfg.overlap_comm or nzl < 3 or cfg.gradient_backend == "fused":
+        # monolithic path: the fused kernel wants the whole halo volume,
+        # and slabs under 3 planes have no comm-free interior
+        ext = jnp.concatenate([below[None], r3, above[None]], axis=0)
+        eg = Grid.of(nx, ny, nzl + 2)
+        nbrs_ext = GR.neighbor_orders(eg, ext.reshape(-1), xp=jnp)
+        nbrs = nbrs_ext.reshape(nzl + 2, plane, 27)[1:-1].reshape(nvl, 27)
+        return nbrs, _gradient_rows(cfg, nbrs, ranks, ext=ext)
+
+    # interior planes: complete neighborhoods inside the local slab
+    eg_int = Grid.of(nx, ny, nzl)
+    nbrs_int = GR.neighbor_orders(eg_int, ranks, xp=jnp) \
+        .reshape(nzl, plane, 27)[1:-1].reshape(-1, 27)
+    rows_int = _gradient_rows(cfg, nbrs_int, ranks[plane: nvl - plane])
+
+    # boundary planes: 3-plane sub-volumes around the received halo
+    eg_b = Grid.of(nx, ny, 3)
+
+    def boundary(vol3, own):
+        nb_ = GR.neighbor_orders(eg_b, vol3.reshape(-1), xp=jnp) \
+            .reshape(3, plane, 27)[1]
+        return nb_, _gradient_rows(cfg, nb_, own)
+
+    nbrs_lo, rows_lo = boundary(jnp.stack([below, r3[0], r3[1]]),
+                                ranks[:plane])
+    nbrs_hi, rows_hi = boundary(jnp.stack([r3[-2], r3[-1], above]),
+                                ranks[nvl - plane:])
+
+    nbrs = jnp.concatenate([nbrs_lo, nbrs_int, nbrs_hi], axis=0)
+    rows = tuple(jnp.concatenate(parts, axis=0)
+                 for parts in zip(rows_lo, rows_int, rows_hi))
+    return nbrs, rows
 
 
 def _gradient_rows(cfg: FrontConfig, nbrs, ov, ext=None):
@@ -400,7 +512,7 @@ def front_device_fn(cfg: FrontConfig, f_slab):
     tet_table = jnp.where(tet_table == -3, jnp.int64(OMEGA), tet_table)
 
     # ---- 5a. critical edges -> D0 triplets ---------------------------------
-    cap = cfg.crit_cap
+    cap = cfg.crit_capacity
     st1 = status[:, :G.NSTAR[1]]
     crit1 = (st1 == GR.CRIT)
     v_rep = jnp.broadcast_to(gids[:, None], crit1.shape)
@@ -487,6 +599,9 @@ def front_device_fn(cfg: FrontConfig, f_slab):
         jax.lax.psum(n_ce, ax),
         jax.lax.psum(n_ct, ax),
         jax.lax.psum((st3 == GR.CRIT).sum(), ax)])
+    # buffer overflow detection: the largest per-device critical count,
+    # checked host-side against the capacity (raise, never truncate)
+    crit_peak = jax.lax.pmax(jnp.maximum(n_ce, n_ct), ax)
 
     return dict(
         ranks=ranks, overflow=overflow,
@@ -494,7 +609,7 @@ def front_device_fn(cfg: FrontConfig, f_slab):
         d0_sid_v=ce_v, d0_row=ce_row,
         dual_key=tkey, dual_t0=s0, dual_t1=s1, dual_valid=valid_t,
         dual_sid_v=ct_v, dual_row=ct_row,
-        ncrit=ncrit, unresolved=un_v + un_t,
+        ncrit=ncrit, unresolved=un_v + un_t, crit_peak=crit_peak,
         vstat=vstat, vpart=vpart, status=status, partner=partner,
     )
 
@@ -520,16 +635,20 @@ def run_front(dims, f, n_blocks: int, mesh=None, **cfg_kw):
     fn = shard_map(dev_fn, mesh=mesh, in_specs=P("blocks"),
                    out_specs=_front_out_specs(), check_rep=False)
     out = jax.jit(fn)(jnp.asarray(np.asarray(f).reshape(-1), jnp.float32))
-    return cfg, {k: np.asarray(v) for k, v in out.items()}
+    out = {k: np.asarray(v) for k, v in out.items()}
+    peak = int(out["crit_peak"])
+    if peak > cfg.crit_capacity:
+        raise CritCapacityError(peak, cfg.crit_capacity, cfg.dims, n_blocks)
+    return cfg, out
 
 
 def _front_out_specs():
     from jax.sharding import PartitionSpec as P
-    rep = {"overflow", "ncrit", "unresolved"}
+    rep = {"overflow", "ncrit", "unresolved", "crit_peak"}
     keys = ["ranks", "overflow", "d0_key", "d0_t0", "d0_t1", "d0_valid",
             "d0_sid_v", "d0_row", "dual_key", "dual_t0", "dual_t1",
             "dual_valid", "dual_sid_v", "dual_row", "ncrit", "unresolved",
-            "vstat", "vpart", "status", "partner"]
+            "crit_peak", "vstat", "vpart", "status", "partner"]
     return {k: (P() if k in rep else P("blocks")) for k in keys}
 
 

@@ -181,12 +181,19 @@ class PersistencePipeline:
         be = self._get_backend(backend)
         streamed = req.is_stream
         if streamed and not be.caps.streamed:
-            from .backends import available_backends
-            ok = sorted(n for n, b in available_backends().items()
-                        if b.caps.streamed)
-            raise ValueError(
-                f"backend {backend!r} has no streamed kernel; "
-                f"streaming backends: {ok}")
+            if be.caps.sharded:
+                # composed sharded-streaming engine: the shard_map device
+                # program is replaced by host-thread shard workers that
+                # stream their z-slabs through the per-chunk streaming
+                # kernels ("jax"), exchanging boundary key planes
+                backend, be = "jax", self._get_backend("jax")
+            else:
+                from .backends import available_backends
+                ok = sorted(n for n, b in available_backends().items()
+                            if b.caps.streamed)
+                raise ValueError(
+                    f"backend {backend!r} has no streamed kernel; "
+                    f"streaming backends: {ok}")
         g = req.grid
         hdims = req.homology_dims if req.homology_dims is not None \
             else tuple(range(g.dim + 1))
@@ -367,9 +374,12 @@ class PersistencePipeline:
 
     def _run_stream(self, req: TopoRequest, plan: Plan) -> DiagramResult:
         """Out-of-core path: chunked front-end on rank-free keys, back-
-        end on the stitched critical set, SparseOrder rank recovery."""
+        end on the stitched critical set, SparseOrder rank recovery.
+        ``n_blocks > 1`` selects the overlapped sharded-streaming engine
+        (every shard streams its z-slab; halo exchange double-buffered
+        against chunk compute) — output stays bit-identical."""
         from repro.stream import (SparseOrder, as_source, diagram_vertices,
-                                  stream_front)
+                                  sharded_stream_front, stream_front)
 
         cfg = self._cfg(plan)
         # the explicit grid carries the dims for flat-array sources
@@ -382,9 +392,16 @@ class PersistencePipeline:
         report = StageReport("pipeline")
 
         with report.stage("gradient") as rep:
-            out = stream_front(src, kernel=plan.backend,
-                               chunk_z=chunk_z, chunk_budget=chunk_budget,
-                               stage_report=rep)
+            if plan.n_blocks > 1:
+                out = sharded_stream_front(
+                    src, plan.n_blocks, kernel=plan.backend,
+                    chunk_z=chunk_z, chunk_budget=chunk_budget,
+                    stage_report=rep)
+            else:
+                out = stream_front(src, kernel=plan.backend,
+                                   chunk_z=chunk_z,
+                                   chunk_budget=chunk_budget,
+                                   stage_report=rep)
             rep.count(n_critical=sum(out.gf.n_critical().values()))
 
         # the back-end compares orders, never their absolute values, so

@@ -196,7 +196,17 @@ class Plan:
 
     def describe(self) -> str:
         """Human-readable one-plan summary (inspectable AOT artifact)."""
-        mode = "streamed" if self.streamed else "in-memory"
+        if self.streamed and self.n_blocks > 1:
+            # the composed engine: every shard streams its z-slab, the
+            # boundary-plane halo exchange is double-buffered against
+            # chunk compute (comm_seconds / overlap_fraction land in the
+            # StageReport of the run)
+            mode = (f"sharded-streamed x{self.n_blocks} "
+                    f"(overlapped halo exchange)")
+        elif self.streamed:
+            mode = "streamed"
+        else:
+            mode = "in-memory"
         engine = "distributed" if self.distributed else "sequential"
         approx = ""
         if self.is_approx:

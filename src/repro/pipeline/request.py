@@ -87,8 +87,14 @@ class TopoRequest:
         ``distributed`` explicitly to pin the pairing engine.
     stream : force (True) / forbid (False) the out-of-core path;
         ``None`` streams iff the field is a source or a chunk knob is
-        set.
-    chunk_z, chunk_budget : streamed decomposition knobs (at most one).
+        set.  A streamed request with ``n_blocks > 1`` runs the
+        *composed* engine: every shard streams its z-slab chunk by
+        chunk (<= ~2 ghost-extended chunks resident per shard) while
+        the boundary-plane halo exchange is double-buffered against
+        chunk compute; output stays bit-identical to the single-device
+        paths.
+    chunk_z, chunk_budget : streamed decomposition knobs (at most one);
+        in a sharded-streamed run they apply per shard.
     epsilon : guaranteed bottleneck-error budget (field units, >= 0):
         the request is answered by ``repro.approx`` from the coarsest
         multiresolution level whose provable bound meets it (0 — or a

@@ -46,6 +46,9 @@ from repro.core.grid import Grid, vertex_order
 # *sandwich back-end* this registry selects an implementation for
 FRONT_STAGE_NAMES = ("order", "gradient")
 BACK_STAGE_NAMES = ("extract_sort", "d0", "d_top", "d1")
+# halo-exchange stages of the sharded-streaming front-end (nested under
+# the gradient stage); their counters carry the comm-hiding split
+COMM_STAGE_NAMES = ("comm",)
 
 @dataclass
 class StageReport:
@@ -94,6 +97,27 @@ class StageReport:
         """Sandwich back-end wall time (extract_sort + d0 + d_top + d1)."""
         return self._named_seconds(BACK_STAGE_NAMES)
 
+    def _counter_sum(self, key: str) -> float:
+        return float(self.counters.get(key, 0.0)) + \
+            sum(c._counter_sum(key) for c in self.children)
+
+    @property
+    def comm_seconds(self) -> float:
+        """Halo-exchange wall time of a sharded run: ``comm`` stages,
+        summed recursively (comm nests under the gradient stage)."""
+        return self._named_seconds(COMM_STAGE_NAMES) + \
+            sum(c.comm_seconds for c in self.children
+                if c.name not in COMM_STAGE_NAMES)
+
+    @property
+    def overlap_fraction(self) -> Optional[float]:
+        """Fraction of halo-exchange time hidden behind compute
+        (``comm_hidden_s / comm_total_s`` over all nested comm stages);
+        ``None`` when the run had no communication."""
+        total = self._counter_sum("comm_total_s")
+        return self._counter_sum("comm_hidden_s") / total \
+            if total > 0 else None
+
     def flat(self) -> Dict[str, float]:
         """Legacy flat stats dict: stage names -> seconds (nested names are
         dot-joined), all counters merged at top level under their own keys."""
@@ -116,6 +140,10 @@ class StageReport:
         if self.children:
             out["front_seconds"] = self.front_seconds
             out["back_seconds"] = self.back_seconds
+            comm = self.comm_seconds
+            if comm > 0:
+                out["comm_seconds"] = comm
+                out["overlap_fraction"] = self.overlap_fraction
         return out
 
 

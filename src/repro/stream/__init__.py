@@ -2,14 +2,18 @@
 
 Chunked field sources + z-slab ghost decomposition (``chunks``), the
 double-buffered block scheduler running the fused/jax gradient kernels
-per chunk on rank-free (value, vid) keys (``scheduler``), and the
+per chunk on rank-free (value, vid) keys (``scheduler``), the overlapped
+sharded-streaming engine where every shard streams its z-slab and halo
+exchange hides behind chunk compute (``sharded``), and the
 ``PersistencePipeline.diagram_stream`` front door in ``repro.pipeline``.
 """
 
 from .chunks import (ArraySource, Chunk, DecimatedSource,  # noqa: F401
                      FieldSource, FunctionSource, MemmapSource, as_source,
-                     pack_value_keys, plan_chunks, sortable32,
+                     pack_value_keys, plan_chunks, plan_shards, sortable32,
                      unpack_value_keys)
 from .scheduler import (SparseOrder, StreamReport,  # noqa: F401
                         StreamResult, diagram_vertices, ranks_for_vids,
                         stream_front)
+from .sharded import (HaloExchange, HaloExchangeTimeout,  # noqa: F401
+                      sharded_stream_front)

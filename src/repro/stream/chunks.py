@@ -276,13 +276,20 @@ class Chunk:
 
     The loaded range extends one ghost plane past each owned boundary
     (clipped at the grid), giving the lower-star kernel the complete
-    27-neighborhood of every owned vertex."""
+    27-neighborhood of every owned vertex.  In a *sharded* plan
+    (``plan_chunks(window=...)``), the ghost plane just past a shard
+    boundary is owned by the neighbor shard and is **not** part of the
+    loaded range: ``halo_below`` / ``halo_above`` mark that the plane at
+    ``zlo - 1`` / ``zhi`` arrives through the halo exchange instead of a
+    source read."""
 
     index: int
     zlo: int
     zhi: int
     glo: int
     ghi: int
+    halo_below: bool = False
+    halo_above: bool = False
 
     @property
     def nz(self) -> int:
@@ -298,23 +305,60 @@ class Chunk:
 
 
 def plan_chunks(dims, *, chunk_z: Optional[int] = None,
-                chunk_budget: Optional[int] = None) -> List[Chunk]:
-    """Decompose the grid into z-slabs of ``chunk_z`` owned planes.
+                chunk_budget: Optional[int] = None,
+                window: Optional[Tuple[int, int]] = None,
+                halo_below: bool = False,
+                halo_above: bool = False) -> List[Chunk]:
+    """Decompose the grid (or one shard's z-``window`` of it) into
+    z-slabs of ``chunk_z`` owned planes.
 
     ``chunk_budget`` (bytes of loaded field data per chunk, ghosts
     included) is the alternative knob: the largest ``chunk_z`` whose
     ghost-extended slab fits the budget (always >= 1 plane).  Exactly one
-    of the two must be given."""
+    of the two must be given.
+
+    ``window=(z0, z1)`` restricts the owned planes to a shard's slab:
+    chunks never *load* planes outside the window — a ghost plane past a
+    window edge flagged ``halo_below`` / ``halo_above`` belongs to the
+    neighbor shard and reaches the kernel through the halo exchange
+    (``repro.stream.sharded``), not through ``read_slab``."""
     dims = Grid.of(*dims).dims
     nx, ny, nz = dims
+    z0, z1 = (0, nz) if window is None else (int(window[0]), int(window[1]))
+    if not (0 <= z0 < z1 <= nz):
+        raise ValueError(f"window [{z0}, {z1}) out of range for nz={nz}")
     plane_bytes = nx * ny * 4
     if (chunk_z is None) == (chunk_budget is None):
         raise ValueError("pass exactly one of chunk_z= / chunk_budget=")
     if chunk_z is None:
         chunk_z = max(1, int(chunk_budget) // plane_bytes - 2)
-    chunk_z = max(1, min(int(chunk_z), nz))
+    chunk_z = max(1, min(int(chunk_z), z1 - z0))
     out = []
-    for i, zlo in enumerate(range(0, nz, chunk_z)):
-        zhi = min(zlo + chunk_z, nz)
-        out.append(Chunk(i, zlo, zhi, max(0, zlo - 1), min(nz, zhi + 1)))
+    for i, zlo in enumerate(range(z0, z1, chunk_z)):
+        zhi = min(zlo + chunk_z, z1)
+        h_lo = halo_below and zlo == z0
+        h_hi = halo_above and zhi == z1
+        out.append(Chunk(
+            i, zlo, zhi,
+            glo=zlo if h_lo else max(0, zlo - 1),
+            ghi=zhi if h_hi else min(nz, zhi + 1),
+            halo_below=h_lo, halo_above=h_hi))
+    return out
+
+
+def plan_shards(nz: int, n_shards: int) -> List[Tuple[int, int]]:
+    """Near-even contiguous z-slab split ``[(z0, z1), ...]`` over shards.
+
+    Clamped to at most one shard per plane (``n_shards > nz`` degrades
+    gracefully instead of emitting empty slabs); the first ``nz %
+    n_shards`` shards own one extra plane."""
+    if n_shards < 1:
+        raise ValueError(f"n_shards must be >= 1, got {n_shards}")
+    n_shards = min(int(n_shards), int(nz))
+    base, extra = divmod(int(nz), n_shards)
+    out, z0 = [], 0
+    for s in range(n_shards):
+        z1 = z0 + base + (1 if s < extra else 0)
+        out.append((z0, z1))
+        z0 = z1
     return out

@@ -32,6 +32,7 @@ the resident-memory acceptance test asserts against (not logging).
 
 from __future__ import annotations
 
+import threading
 import time
 from concurrent.futures import ThreadPoolExecutor
 from dataclasses import dataclass, field
@@ -55,10 +56,18 @@ class StreamReport:
 
     ``peak_resident_field_bytes`` counts ghost-extended field slabs
     *reserved simultaneously* (the compute slab plus the prefetch slab) —
-    the number the out-of-core contract bounds by ~2 chunks + ghosts.
-    ``key_bytes`` is the dense int64 key array handed to the back-end
-    (the per-vertex residue the current in-memory back-end still needs;
-    see docs/pipeline.md for the full memory model)."""
+    the number the out-of-core contract bounds by ~2 chunks + ghosts; in
+    a sharded run it is the concurrent total across shards, with the
+    per-shard peaks in ``per_shard``.  ``key_bytes`` is the dense int64
+    key array handed to the back-end (the per-vertex residue the current
+    in-memory back-end still needs; see docs/pipeline.md for the full
+    memory model).
+
+    ``comm_s`` totals the halo-exchange work of a sharded run (boundary
+    plane publishes plus neighbor-plane waits); ``comm_hidden_s`` is the
+    part that ran inside the loader thread while the device computed,
+    and ``overlap_fraction = comm_hidden_s / comm_s`` (None when the run
+    had no communication) is the comm-hiding figure of merit."""
 
     dims: tuple = ()
     backend: str = ""
@@ -73,6 +82,11 @@ class StreamReport:
     scatter_s: float = 0.0
     wall_s: float = 0.0
     overlap_s: float = 0.0
+    n_shards: int = 1
+    comm_s: float = 0.0
+    comm_hidden_s: float = 0.0
+    overlap_fraction: Optional[float] = None
+    per_shard: List[dict] = field(default_factory=list)
 
     def to_dict(self) -> dict:
         return {k: (list(v) if isinstance(v, tuple) else v)
@@ -80,18 +94,22 @@ class StreamReport:
 
 
 class _Resident:
-    """Running/peak byte counter for reserved field slabs."""
+    """Running/peak byte counter for reserved field slabs (thread-safe:
+    sharded runs reserve from every shard worker concurrently)."""
 
     def __init__(self):
         self.cur = 0
         self.peak = 0
+        self._lock = threading.Lock()
 
     def add(self, n: int) -> None:
-        self.cur += n
-        self.peak = max(self.peak, self.cur)
+        with self._lock:
+            self.cur += n
+            self.peak = max(self.peak, self.cur)
 
     def release(self, n: int) -> None:
-        self.cur -= n
+        with self._lock:
+            self.cur -= n
 
 
 # --------------------------------------------------------------------------
@@ -114,12 +132,27 @@ class StreamResult:
         return unpack_value_keys(self.keys[np.asarray(vids, np.int64)])
 
 
-def _ext_volume(keys_slab: np.ndarray, c: Chunk, dims) -> np.ndarray:
-    """(nzl+2, ny, nx) halo key volume of chunk ``c`` (-1 at the boundary)."""
+def _ext_volume(keys_slab: np.ndarray, c: Chunk, dims,
+                halo_lo: Optional[np.ndarray] = None,
+                halo_hi: Optional[np.ndarray] = None) -> np.ndarray:
+    """(nzl+2, ny, nx) halo key volume of chunk ``c`` (-1 at the grid
+    boundary).  At a *shard* boundary the ghost plane was not loaded from
+    the source: it is the neighbor's boundary key plane received through
+    the halo exchange (``halo_lo`` / ``halo_hi``)."""
     nx, ny, nz = dims
     k3 = keys_slab.reshape(c.ghi - c.glo, ny, nx)
-    lo = k3[:1] if c.glo < c.zlo else np.full((1, ny, nx), -1, np.int64)
-    hi = k3[-1:] if c.ghi > c.zhi else np.full((1, ny, nx), -1, np.int64)
+    if c.halo_below:
+        lo = np.asarray(halo_lo, np.int64).reshape(1, ny, nx)
+    elif c.glo < c.zlo:
+        lo = k3[:1]
+    else:
+        lo = np.full((1, ny, nx), -1, np.int64)
+    if c.halo_above:
+        hi = np.asarray(halo_hi, np.int64).reshape(1, ny, nx)
+    elif c.ghi > c.zhi:
+        hi = k3[-1:]
+    else:
+        hi = np.full((1, ny, nx), -1, np.int64)
     return np.concatenate([lo, k3[c.zlo - c.glo: c.zhi - c.glo], hi], axis=0)
 
 

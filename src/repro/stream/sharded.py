@@ -1,0 +1,289 @@
+"""Overlapped sharded-streaming front-end (shards x z-slab streaming).
+
+The composition ROADMAP item 1 names: the z-axis is split into
+``n_shards`` contiguous slabs, and **every shard streams its own
+sub-volume chunk-by-chunk** from the :class:`~repro.stream.chunks
+.FieldSource` exactly like the single-device scheduler — double-buffered
+loader thread, rank-free packed keys, incremental scatter — so no shard
+ever materializes more than ~2 ghost-extended chunks of field data.
+
+The ghost plane at a *shard* boundary is owned by the neighbor shard
+(lowest-base ownership, paper Sec. II-B): instead of re-reading it from
+the source, shards exchange their boundary key planes through a
+:class:`HaloExchange` — the host-thread analogue of the one-plane
+``lax.ppermute`` in ``repro.distributed.shardmap_pipeline``.  The
+exchange is scheduled the way the paper's dedicated communication thread
+overlaps collectives with compute (Sec. V-C):
+
+1. at worker start each shard *eagerly publishes* its two boundary
+   planes (two one-plane source reads) — the collective is issued before
+   any gradient kernel runs, so a neighbor's matching receive is already
+   satisfied by the time it is needed;
+2. the *receive* for the boundary chunk ``i+1`` runs inside the loader
+   thread while the gradient kernel computes chunk ``i`` — the halo wait
+   is double-buffered against compute exactly like host loads.
+
+Comm accounting distinguishes the total halo time (``comm_s``) from the
+part that ran while the device was busy (``comm_hidden_s``);
+``overlap_fraction = hidden / total`` is the comm-hiding figure of merit
+reported up through :class:`~repro.pipeline.stages.StageReport`.
+
+Shard workers are host threads; each pins its kernels to device
+``s % n_devices`` (``--xla_force_host_platform_device_count=N`` gives N
+host devices), and the per-chunk jit kernels release the GIL, so shards
+execute concurrently wherever the box has cores.  Output is
+**bit-identical** to the single-device streamed path: the packed
+``(value, vid)`` keys are global, chunk scatters write disjoint sid
+ranges, and the back-end only ever compares orders.
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+from concurrent.futures import ThreadPoolExecutor
+from contextlib import nullcontext
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+from repro.core import gradient as GR
+from repro.core.grid import Grid
+
+from .chunks import (Chunk, FieldSource, pack_value_keys, plan_chunks,
+                     plan_shards)
+from .scheduler import StreamReport, StreamResult, _Resident, _ext_volume
+
+_HALO_TIMEOUT_S = 600.0
+
+
+class HaloExchangeTimeout(RuntimeError):
+    """A shard waited longer than the halo timeout for a neighbor plane
+    (a neighbor worker died or never published)."""
+
+
+class HaloExchange:
+    """One-plane boundary key exchange between neighboring shards.
+
+    Shard ``s`` publishes the packed keys of its ``first`` owned plane
+    (consumed by shard ``s - 1`` as its above-ghost) and its ``last``
+    owned plane (consumed by shard ``s + 1`` as its below-ghost).  Each
+    slot is written once and read once; ``recv`` blocks on an event, so
+    a receive issued from a loader thread overlaps the wait with the
+    receiver's own compute."""
+
+    def __init__(self, n_shards: int):
+        self.n_shards = int(n_shards)
+        self._slots = {(s, side): [threading.Event(), None]
+                       for s in range(n_shards) for side in ("first", "last")}
+
+    def publish(self, shard: int, side: str, plane_keys: np.ndarray) -> None:
+        ev, _ = slot = self._slots[(shard, side)]
+        slot[1] = np.asarray(plane_keys, np.int64)
+        ev.set()
+
+    def recv(self, shard: int, side: str,
+             timeout: float = _HALO_TIMEOUT_S) -> np.ndarray:
+        ev, _ = self._slots[(shard, side)]
+        if not ev.wait(timeout):
+            raise HaloExchangeTimeout(
+                f"no {side!r} boundary plane from shard {shard} after "
+                f"{timeout:.0f}s — did the neighbor worker die?")
+        return self._slots[(shard, side)][1]
+
+
+def _shard_device(s: int):
+    """Context pinning shard ``s``'s kernels to host device ``s % N``."""
+    try:
+        import jax
+        devs = jax.devices()
+        if len(devs) > 1:
+            return jax.default_device(devs[s % len(devs)])
+    except Exception:
+        pass
+    return nullcontext()
+
+
+def _pack_plane(source: FieldSource, z: int, plane: int) -> np.ndarray:
+    """Read one z-plane and pack its global (value, vid) keys."""
+    slab = source.read_slab(z, z + 1)
+    vids = np.arange(z * plane, (z + 1) * plane, dtype=np.int64)
+    return pack_value_keys(slab, vids)
+
+
+def sharded_stream_front(source: FieldSource, n_shards: int, *,
+                         kernel: str = "jax",
+                         chunk_z: Optional[int] = None,
+                         chunk_budget: Optional[int] = None,
+                         stage_report=None) -> StreamResult:
+    """Run the lower-star gradient over ``source`` with ``n_shards``
+    concurrently-streaming z-slab shards and overlapped halo exchange.
+
+    Same contract as :func:`~repro.stream.scheduler.stream_front` (which
+    is the ``n_shards == 1`` special case): dense gradient + global key
+    array + :class:`StreamReport`, bit-identical to the in-memory path.
+    ``n_shards`` is clamped to the z extent; chunk knobs apply per shard
+    (each shard keeps <= 2 ghost-extended chunks resident)."""
+    from repro.kernels import ops
+
+    grid = Grid.of(*source.dims)
+    nx, ny, nz = grid.dims
+    plane = nx * ny
+    shards = plan_shards(nz, n_shards)
+    n_shards = len(shards)
+    shard_chunks: List[List[Chunk]] = [
+        plan_chunks(grid.dims, chunk_z=chunk_z, chunk_budget=chunk_budget,
+                    window=(z0, z1), halo_below=s > 0,
+                    halo_above=s < n_shards - 1)
+        for s, (z0, z1) in enumerate(shards)]
+
+    gf = GR.alloc_gradient(grid)
+    offsets = GR.row_sid_offsets(grid)
+    keys = np.empty(grid.nv, dtype=np.int64)
+    exchange = HaloExchange(n_shards)
+    res = _Resident()
+    plane_bytes = plane * 4
+
+    def worker(s: int) -> dict:
+        z0, z1 = shards[s]
+        chunks = shard_chunks[s]
+        st = dict(shard=s, z0=z0, z1=z1, n_chunks=len(chunks),
+                  load_s=0.0, compute_s=0.0, scatter_s=0.0,
+                  comm_s=0.0, comm_hidden_s=0.0, loaded_bytes=0,
+                  halo_planes=0, peak_resident_field_bytes=0,
+                  max_chunk_bytes=max(c.load_bytes(grid.dims)
+                                      for c in chunks))
+        shard_res = _Resident()
+
+        # -- eager boundary publish: issue the "collective" before any
+        # kernel runs, so neighbor receives are satisfied ahead of need
+        publish_s = 0.0
+        t0 = time.perf_counter()
+        if s > 0:
+            res.add(plane_bytes)
+            exchange.publish(s, "first", _pack_plane(source, z0, plane))
+            res.release(plane_bytes)
+            st["loaded_bytes"] += plane_bytes
+            st["halo_planes"] += 1
+        if s < n_shards - 1:
+            res.add(plane_bytes)
+            exchange.publish(s, "last", _pack_plane(source, z1 - 1, plane))
+            res.release(plane_bytes)
+            st["loaded_bytes"] += plane_bytes
+            st["halo_planes"] += 1
+        if st["halo_planes"]:
+            publish_s = time.perf_counter() - t0
+            st["comm_s"] += publish_s
+
+        def load(c: Chunk):
+            """Loader-thread body: source read + halo receive for one
+            chunk — the receive wait overlaps the previous chunk's
+            compute (double-buffered comm)."""
+            t0 = time.perf_counter()
+            slab = source.read_slab(c.glo, c.ghi)
+            load_dt = time.perf_counter() - t0
+            halo_lo = halo_hi = None
+            recv_dt = 0.0
+            if c.halo_below or c.halo_above:
+                t0 = time.perf_counter()
+                if c.halo_below:
+                    halo_lo = exchange.recv(s - 1, "last")
+                if c.halo_above:
+                    halo_hi = exchange.recv(s + 1, "first")
+                recv_dt = time.perf_counter() - t0
+            return slab, halo_lo, halo_hi, load_dt, recv_dt
+
+        t_wall = time.perf_counter()
+        comm_exposed = publish_s
+        with _shard_device(s), \
+                ThreadPoolExecutor(max_workers=1,
+                                   thread_name_prefix=f"shard{s}-loader"
+                                   ) as pool:
+            for r in (res, shard_res):
+                r.add(chunks[0].load_bytes(grid.dims))
+            fut = pool.submit(load, chunks[0])
+            for i, c in enumerate(chunks):
+                t0 = time.perf_counter()
+                slab, halo_lo, halo_hi, load_dt, recv_dt = fut.result()
+                block_dt = time.perf_counter() - t0
+                st["load_s"] += load_dt
+                st["comm_s"] += recv_dt
+                comm_exposed += min(recv_dt, block_dt)
+                st["loaded_bytes"] += slab.nbytes
+                if i + 1 < len(chunks):
+                    for r in (res, shard_res):
+                        r.add(chunks[i + 1].load_bytes(grid.dims))
+                    fut = pool.submit(load, chunks[i + 1])
+
+                t0 = time.perf_counter()
+                vids = np.arange(c.glo * plane, c.ghi * plane,
+                                 dtype=np.int64)
+                kslab = pack_value_keys(slab, vids)
+                ext = _ext_volume(kslab, c, grid.dims,
+                                  halo_lo=halo_lo, halo_hi=halo_hi)
+                rows = [np.asarray(r) for r in
+                        ops.lower_star_rows_halo(ext, backend=kernel)]
+                st["compute_s"] += time.perf_counter() - t0
+
+                t0 = time.perf_counter()
+                v0 = c.vid0(grid.dims)
+                GR.scatter_rows_chunk(grid, gf, rows[0], rows[1], rows[2],
+                                      rows[3], v0, offsets=offsets)
+                keys[v0: v0 + c.nz * plane] = \
+                    kslab[(c.zlo - c.glo) * plane:
+                          (c.zlo - c.glo) * plane + c.nz * plane]
+                st["scatter_s"] += time.perf_counter() - t0
+                for r in (res, shard_res):
+                    r.release(c.load_bytes(grid.dims))
+                del slab, kslab, ext, rows
+        st["wall_s"] = time.perf_counter() - t_wall
+        st["comm_hidden_s"] = max(0.0, st["comm_s"] - comm_exposed)
+        st["peak_resident_field_bytes"] = shard_res.peak
+        return st
+
+    t_wall = time.perf_counter()
+    if n_shards == 1:
+        shard_stats = [worker(0)]
+    else:
+        with ThreadPoolExecutor(max_workers=n_shards,
+                                thread_name_prefix="shard") as pool:
+            shard_stats = list(pool.map(worker, range(n_shards)))
+    wall_s = time.perf_counter() - t_wall
+
+    rep = StreamReport(
+        dims=grid.dims, backend=kernel,
+        n_chunks=sum(len(cs) for cs in shard_chunks),
+        chunk_z=shard_chunks[0][0].nz,
+        max_chunk_bytes=max(c.load_bytes(grid.dims)
+                            for cs in shard_chunks for c in cs),
+        key_bytes=keys.nbytes, wall_s=wall_s, n_shards=n_shards,
+        peak_resident_field_bytes=res.peak, per_shard=shard_stats)
+    for st in shard_stats:
+        rep.load_s += st["load_s"]
+        rep.compute_s += st["compute_s"]
+        rep.scatter_s += st["scatter_s"]
+        rep.comm_s += st["comm_s"]
+        rep.comm_hidden_s += st["comm_hidden_s"]
+        rep.total_loaded_bytes += st["loaded_bytes"]
+    serial = rep.load_s + rep.compute_s + rep.scatter_s + rep.comm_s
+    rep.overlap_s = max(0.0, serial - rep.wall_s)
+    if rep.comm_s > 0:
+        rep.overlap_fraction = rep.comm_hidden_s / rep.comm_s
+
+    if stage_report is not None:
+        for name in ("load", "compute", "scatter"):
+            ch = stage_report.child(name)
+            ch.seconds = getattr(rep, name + "_s")
+        comm = stage_report.child("comm")
+        comm.seconds = rep.comm_s
+        comm.count(comm_total_s=rep.comm_s,
+                   comm_hidden_s=rep.comm_hidden_s,
+                   halo_planes=sum(st["halo_planes"] for st in shard_stats))
+        stage_report.count(
+            chunks=rep.n_chunks, n_shards=n_shards,
+            peak_resident_field_bytes=rep.peak_resident_field_bytes,
+            loaded_bytes=rep.total_loaded_bytes,
+            max_chunk_bytes=rep.max_chunk_bytes,
+            overlap_s=rep.overlap_s)
+    return StreamResult(gf, keys, rep,
+                        [c for cs in shard_chunks for c in cs])

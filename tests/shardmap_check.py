@@ -23,8 +23,8 @@ from repro.core.extremum_graph import (build_d0_graph,  # noqa: E402
                                        build_dual_graph)
 from repro.core.gradient import compute_gradient_np  # noqa: E402
 from repro.core.grid import Grid, vertex_order  # noqa: E402
-from repro.distributed.shardmap_pipeline import (front_triplets,  # noqa: E402
-                                                 run_front)
+from repro.distributed.shardmap_pipeline import (CritCapacityError,  # noqa: E402
+                                                 front_triplets, run_front)
 
 
 def check(dims, seed, n_blocks, use_sample_sort=True, backend="jax"):
@@ -43,7 +43,15 @@ def check(dims, seed, n_blocks, use_sample_sort=True, backend="jax"):
                          gradient_backend=backend, sort_slack=4.0)
     assert not bool(out["overflow"]), "sample sort overflow"
     assert int(out["unresolved"]) == 0, "ring resolution incomplete"
-    assert np.array_equal(out["ranks"], order), "distributed order mismatch"
+    if use_sample_sort:
+        assert np.array_equal(out["ranks"], order), \
+            "distributed order mismatch"
+    else:
+        # rank-free keys: order-isomorphic to the dense ranks, and
+        # non-negative so the kernels' -1 sentinel stays below them
+        assert np.array_equal(np.argsort(np.argsort(out["ranks"])), order), \
+            "rank-free key order mismatch"
+        assert (out["ranks"] >= 0).all(), "rank-free keys must be >= 0"
     nc = out["ncrit"]
     assert nc[0] == len(ci.crit_sids[0]) and nc[1] == len(ci.crit_sids[1])
     assert nc[2] == len(ci.crit_sids[2]) and nc[3] == len(ci.crit_sids[3])
@@ -63,12 +71,91 @@ def check(dims, seed, n_blocks, use_sample_sort=True, backend="jax"):
           f"sort={use_sample_sort} backend={backend}")
 
 
+def ridge_field(dims, min_at_top):
+    """Two descending ridges separated by a wall, joined by one saddle
+    at the ridges' high end.  The D0 v-paths climb a ridge across EVERY
+    slab boundary, so ring resolution must advance chains over
+    ``n_blocks - 1`` crossings — against the rotation direction when
+    the minima sit at the top."""
+    nx, ny, nz = dims
+    f = np.zeros((nz, ny, nx), np.float32)
+    z = np.arange(nz, dtype=np.float32)
+    s = z if min_at_top else (nz - 1 - z)
+    for y in range(ny):
+        f[:, y, 0] = -2.0 * s + 0.001 * y
+        f[:, y, 2] = -2.0 * s + 0.5 + 0.001 * y
+        f[:, y, 1] = 1000.0 + z + 0.001 * y
+    f[0 if min_at_top else nz - 1, 0, 1] = 0.75
+    return f.reshape(-1)
+
+
+def check_ring_rotations(n_blocks):
+    """Regression for the old hard-coded ring_rotations=3: chains that
+    ascend in block index advance ~2^r crossings by rotation r, so 3
+    rotations cannot resolve n_blocks - 1 > 8 crossings.  The derived
+    default (FrontConfig.ring_rotation_count) must resolve both
+    orientations exactly; the old constant must *report* its failure
+    through the unresolved counter on at least one orientation."""
+    dims = (3, 2, 4 * n_blocks)
+    g = Grid.of(*dims)
+    failed_with_3 = 0
+    for min_at_top in (True, False):
+        f = ridge_field(dims, min_at_top)
+        order = np.asarray(vertex_order(f.astype(np.float64)))
+        gf = compute_gradient_np(g, order)
+        ci = extract_critical(g, gf, order)
+        g0 = build_d0_graph(g, gf, ci)
+        ref0 = {(int(s), frozenset((int(a), int(b))))
+                for s, a, b in zip(g0.saddles, g0.t0, g0.t1)}
+
+        # derived rotation count: exact resolution, both orientations
+        cfg, out = run_front(dims, f, n_blocks, use_sample_sort=False)
+        assert int(out["unresolved"]) == 0, "derived rotations under-resolve"
+        (sid0, _, t0, t1), _ = front_triplets(dims, out)
+        got0 = {(int(s), frozenset((int(a), int(b))))
+                for s, a, b in zip(sid0, t0, t1) if a != b}
+        assert got0 == ref0, f"D0 triplets differ: {got0 ^ ref0}"
+
+        # the old constant: must fail loudly (unresolved > 0) on the
+        # slow orientation — this is the regression the derivation fixes
+        _, out3 = run_front(dims, f, n_blocks, use_sample_sort=False,
+                            ring_rotations=3)
+        failed_with_3 += int(int(out3["unresolved"]) > 0)
+    assert failed_with_3 > 0, (
+        "expected ring_rotations=3 to under-resolve a "
+        f"{n_blocks}-block ridge chain; the regression case is dead")
+    print(f"OK ring-rotation regression blocks={n_blocks} "
+          f"(old constant failed on {failed_with_3}/2 orientations)")
+
+
+def check_crit_capacity():
+    """crit_cap overflow must raise (never truncate), and the auto-sized
+    default must clear fields the old fixed 4096 could not hold."""
+    dims = (6, 5, 16)
+    g = Grid.of(*dims)
+    rng = np.random.default_rng(7)
+    f = rng.standard_normal(g.nv).astype(np.float32)
+    try:
+        run_front(dims, f, N_DEV, sort_slack=4.0, crit_cap=2)
+    except CritCapacityError as e:
+        assert e.observed > e.cap == 2
+        print(f"OK crit-cap overflow raised (observed={e.observed})")
+    else:
+        raise AssertionError("crit_cap=2 did not raise CritCapacityError")
+
+
 if __name__ == "__main__":
     assert jax.device_count() == N_DEV, jax.device_count()
+    if "ring" in sys.argv[2:]:
+        check_ring_rotations(N_DEV)
+        print("ALL SHARD_MAP CHECKS PASSED")
+        sys.exit(0)
     check((6, 5, 16), 0, N_DEV)
     check((6, 5, 16), 1, N_DEV)
     check((5, 4, 24), 2, N_DEV)
+    check((6, 5, 16), 3, N_DEV, use_sample_sort=False)
     check((6, 5, 16), 3, N_DEV, use_sample_sort=True, backend="pallas")
     check((5, 4, 16), 5, N_DEV, use_sample_sort=True, backend="fused")
     check((4, 4, 8), 4, 4)
+    check_crit_capacity()
     print("ALL SHARD_MAP CHECKS PASSED")

@@ -18,3 +18,18 @@ def test_shardmap_8_devices():
         capture_output=True, text=True, timeout=900, env=env)
     assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr}"
     assert "ALL SHARD_MAP CHECKS PASSED" in r.stdout
+
+
+@pytest.mark.slow
+def test_ring_rotation_regression_16_blocks():
+    """Chains crossing 15 slab boundaries against the rotation direction
+    under-resolve with the old hard-coded ring_rotations=3; the derived
+    count must resolve them exactly (see shardmap_check.ridge_field)."""
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    r = subprocess.run(
+        [sys.executable, os.path.join(os.path.dirname(__file__),
+                                      "shardmap_check.py"), "16", "ring"],
+        capture_output=True, text=True, timeout=900, env=env)
+    assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr}"
+    assert "ring-rotation regression" in r.stdout
