@@ -34,9 +34,66 @@ bit-identity against the in-memory diagram, and in full mode records a
 
 import argparse
 import json
+import os
 import platform
+import statistics
 import time
 from pathlib import Path
+
+
+def bench_env():
+    """Environment metadata stamped into every BENCH_*.json: platform,
+    python, cpu count, jax/jaxlib versions, visible XLA devices, and
+    the XLA flags in effect — so a regression diff always says *where*
+    both numbers came from."""
+    env = {"platform": platform.platform(),
+           "python": platform.python_version(),
+           "cpu_count": os.cpu_count(),
+           "xla_flags": os.environ.get("XLA_FLAGS", "")}
+    try:
+        import jax
+        import jaxlib
+        env["jax"] = jax.__version__
+        env["jaxlib"] = jaxlib.__version__
+        env["devices"] = [str(d) for d in jax.devices()]
+    except Exception:                  # pragma: no cover - no jax
+        env["jax"] = env["jaxlib"] = None
+        env["devices"] = []
+    return env
+
+
+def bench_doc(schema, quick=None, **extra):
+    """The common BENCH_*.json skeleton: schema tag + environment stamp
+    (plus the legacy top-level platform/python keys older tooling
+    reads), then the section's own payload."""
+    doc = {"schema": schema,
+           "platform": platform.platform(),
+           "python": platform.python_version(),
+           "env": bench_env()}
+    if quick is not None:
+        doc["quick"] = bool(quick)
+    doc.update(extra)
+    return doc
+
+
+def write_bench(out_path, doc):
+    Path(out_path).write_text(json.dumps(doc, indent=1))
+
+
+def timed(fn, reps=1, warmup=0):
+    """THE timing helper: ``warmup`` untimed calls, then ``reps`` timed
+    ones.  Returns ``(stats, last_output)`` where stats carries the raw
+    samples plus min/median (min for gates — least noise-sensitive —
+    median for reporting)."""
+    for _ in range(warmup):
+        fn()
+    times, out = [], None
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        out = fn()
+        times.append(time.perf_counter() - t0)
+    return {"min_s": min(times), "median_s": statistics.median(times),
+            "times_s": times}, out
 
 
 def fmt_bytes(b):
@@ -155,11 +212,8 @@ def pipeline_bench(out_path, dims=(8, 8, 8), fields=("wavelet", "random"),
             "n_blocks": 1, "batched": batch,
             "report": ress[0].report.to_dict(),
         })
-    doc = {"schema": "ddms-pipeline-bench/v1",
-           "platform": platform.platform(),
-           "python": platform.python_version(),
-           "runs": runs}
-    Path(out_path).write_text(json.dumps(doc, indent=1))
+    doc = bench_doc("ddms-pipeline-bench/v1", runs=runs)
+    write_bench(out_path, doc)
     print(f"wrote {out_path}: {len(runs)} runs")
     for r in runs:
         stages = {c["name"]: c["seconds"] for c in r["report"]["children"]}
@@ -196,12 +250,9 @@ def gradient_bench(out_path, quick=False):
         nbrs = GRAD.neighbor_orders(g, jnp.asarray(o), xp=jnp)
         return prepass_jit(nbrs, o)
 
-    def timed(fn, reps):
-        fn()  # compile
-        t0 = time.perf_counter()
-        for _ in range(reps):
-            out = fn()
-        return (time.perf_counter() - t0) / reps, out
+    def timed_mean(fn, reps):
+        st, out = timed(fn, reps=reps, warmup=1)  # warmup: compile
+        return sum(st["times_s"]) / reps, out
 
     sizes = [(8, 8, 8)] if quick else [(16, 16, 16), (32, 32, 32)]
     pallas_dims = (6, 6, 6) if quick else (16, 16, 8)
@@ -217,9 +268,9 @@ def gradient_bench(out_path, quick=False):
         model["prepass"] = gradient_hbm_model(dims,
                                               rank_bytes=8)["prepass"]
         reps = 2 if quick else 3
-        s_pre, rows_pre = timed(
+        s_pre, rows_pre = timed_mean(
             lambda: jax.block_until_ready(prepass_style(g, o)), reps)
-        s_fus, rows_fus = timed(
+        s_fus, rows_fus = timed_mean(
             lambda: jax.block_until_ready(
                 ops.lower_star_gradient(g, o, backend="jax")), reps)
         for a, b in zip(rows_pre, rows_fus):
@@ -240,9 +291,9 @@ def gradient_bench(out_path, quick=False):
     f = make_field("random", pallas_dims, seed=6)
     o = jnp.asarray(np.asarray(vertex_order(f.astype(np.float64))))
     model = gradient_hbm_model(pallas_dims)
-    s_pre, rows_pre = timed(lambda: jax.block_until_ready(
+    s_pre, rows_pre = timed_mean(lambda: jax.block_until_ready(
         ops.lower_star_gradient(g, o, backend="pallas_prepass")), 1)
-    s_fus, rows_fus = timed(lambda: jax.block_until_ready(
+    s_fus, rows_fus = timed_mean(lambda: jax.block_until_ready(
         ops.lower_star_gradient(g, o, backend="pallas")), 1)
     for a, b in zip(rows_pre, rows_fus):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
@@ -258,12 +309,8 @@ def gradient_bench(out_path, quick=False):
                                "model_bytes_per_vertex": model["fused"]}},
                  "speedup": s_pre / s_fus})
 
-    doc = {"schema": "ddms-gradient-bench/v1",
-           "platform": platform.platform(),
-           "python": platform.python_version(),
-           "quick": bool(quick),
-           "runs": runs}
-    Path(out_path).write_text(json.dumps(doc, indent=1))
+    doc = bench_doc("ddms-gradient-bench/v1", quick=quick, runs=runs)
+    write_bench(out_path, doc)
     print(f"wrote {out_path}: {len(runs)} runs")
     for r in runs:
         p = r["paths"]
@@ -319,12 +366,8 @@ def stream_bench(out_path, quick=False):
                                  res.stream.peak_resident_field_bytes},
                 "stream_report": res.stream.to_dict(),
             })
-    doc = {"schema": "ddms-stream-bench/v1",
-           "platform": platform.platform(),
-           "python": platform.python_version(),
-           "quick": bool(quick),
-           "runs": runs}
-    Path(out_path).write_text(json.dumps(doc, indent=1))
+    doc = bench_doc("ddms-stream-bench/v1", quick=quick, runs=runs)
+    write_bench(out_path, doc)
     print(f"wrote {out_path}: {len(runs)} runs")
     for r in runs:
         m, s = r["in_memory"], r["streamed"]
@@ -348,8 +391,6 @@ def api_bench(out_path, quick=False):
     (asserted).  Also records plan-cache hit counters and the wire
     round-trip (``to_bytes``/``from_bytes``) size and time.
     """
-    import statistics
-
     import numpy as np
 
     from repro.core.grid import Grid
@@ -367,23 +408,22 @@ def api_bench(out_path, quick=False):
     pipe.diagram(f, grid=g)      # warm-up: compile + trace out of the loop
     pipe.run(req)
 
-    def timed(fn):
-        t0 = time.perf_counter()
-        out = fn()
-        return time.perf_counter() - t0, out
+    def timed1(fn):
+        st, out = timed(fn)
+        return st["min_s"], out
 
     legacy, declarative = [], []
     res = None
     for i in range(reps):        # interleaved A/B, order alternated to
         # cancel systematic first-runner bias (this box has ~2x noise)
         if i % 2 == 0:
-            legacy.append(timed(lambda: pipe.diagram(f, grid=g))[0])
-            dt, res = timed(lambda: pipe.run(req))
+            legacy.append(timed1(lambda: pipe.diagram(f, grid=g))[0])
+            dt, res = timed1(lambda: pipe.run(req))
             declarative.append(dt)
         else:
-            dt, res = timed(lambda: pipe.run(req))
+            dt, res = timed1(lambda: pipe.run(req))
             declarative.append(dt)
-            legacy.append(timed(lambda: pipe.diagram(f, grid=g))[0])
+            legacy.append(timed1(lambda: pipe.diagram(f, grid=g))[0])
     m_leg = min(legacy)
     m_dec = min(declarative)
     med = {"legacy": statistics.median(legacy),
@@ -409,22 +449,20 @@ def api_bench(out_path, quick=False):
     dec_s = time.perf_counter() - t0
     assert back.betti() == res.betti()
 
-    doc = {"schema": "ddms-api-bench/v1",
-           "platform": platform.platform(),
-           "python": platform.python_version(),
-           "quick": bool(quick),
-           "dims": list(dims), "reps": reps,
-           "legacy_min_s": m_leg, "request_min_s": m_dec,
-           "legacy_median_s": med["legacy"],
-           "request_median_s": med["request"],
-           "resolver_s": resolver_s,
-           "request_overhead_frac": overhead,
-           "plan_cache": cache.stats(),
-           "wire": {"bytes": len(blob), "encode_s": enc_s,
-                    "decode_s": dec_s,
-                    "pairs": int(sum(len(res.pairs(p, min_persistence=0))
-                                     for p in range(g.dim)))}}
-    Path(out_path).write_text(json.dumps(doc, indent=1))
+    doc = bench_doc(
+        "ddms-api-bench/v1", quick=quick,
+        dims=list(dims), reps=reps,
+        legacy_min_s=m_leg, request_min_s=m_dec,
+        legacy_median_s=med["legacy"],
+        request_median_s=med["request"],
+        resolver_s=resolver_s,
+        request_overhead_frac=overhead,
+        plan_cache=cache.stats(),
+        wire={"bytes": len(blob), "encode_s": enc_s,
+              "decode_s": dec_s,
+              "pairs": int(sum(len(res.pairs(p, min_persistence=0))
+                               for p in range(g.dim)))})
+    write_bench(out_path, doc)
     print(f"wrote {out_path}: legacy={m_leg*1e3:.2f}ms "
           f"request={m_dec*1e3:.2f}ms "
           f"resolver={resolver_s*1e6:.0f}us ({overhead*100:.3f}% of call) "
@@ -514,18 +552,16 @@ def approx_bench(out_path, quick=False):
     preview = next(iter(refine(pipe, req)))
     preview_s = time.perf_counter() - t0
 
-    doc = {"schema": "ddms-approx-bench/v1",
-           "platform": platform.platform(),
-           "python": platform.python_version(),
-           "quick": bool(quick),
-           "dims": list(dims), "field_range": frange,
-           "exact_seconds": exact_s,
-           "preview": {"seconds": preview_s,
-                       "level": preview.approx_level,
-                       "error_bound": preview.error_bound,
-                       "speedup": exact_s / preview_s},
-           "runs": runs}
-    Path(out_path).write_text(json.dumps(doc, indent=1))
+    doc = bench_doc(
+        "ddms-approx-bench/v1", quick=quick,
+        dims=list(dims), field_range=frange,
+        exact_seconds=exact_s,
+        preview={"seconds": preview_s,
+                 "level": preview.approx_level,
+                 "error_bound": preview.error_bound,
+                 "speedup": exact_s / preview_s},
+        runs=runs)
+    write_bench(out_path, doc)
     print(f"wrote {out_path}: exact={exact_s*1e3:.0f}ms "
           f"preview={preview_s*1e3:.0f}ms "
           f"({exact_s/preview_s:.1f}x, bound={preview.error_bound:.3f})")
@@ -590,17 +626,15 @@ def backend_bench(out_path, quick=False):
             f"essential[{k}]"
 
     back_speedup = runs["np"]["back_seconds"] / runs["jax"]["back_seconds"]
-    doc = {"schema": "ddms-backend-bench/v1",
-           "platform": platform.platform(),
-           "python": platform.python_version(),
-           "quick": bool(quick),
-           "dims": list(dims),
-           "bit_identical": True,
-           "runs": runs,
-           "backend_speedup": back_speedup,
-           "end_to_end_speedup": (runs["np"]["total_seconds"]
-                                  / runs["jax"]["total_seconds"])}
-    Path(out_path).write_text(json.dumps(doc, indent=1))
+    doc = bench_doc(
+        "ddms-backend-bench/v1", quick=quick,
+        dims=list(dims),
+        bit_identical=True,
+        runs=runs,
+        backend_speedup=back_speedup,
+        end_to_end_speedup=(runs["np"]["total_seconds"]
+                            / runs["jax"]["total_seconds"]))
+    write_bench(out_path, doc)
     print(f"wrote {out_path}: back-end np={runs['np']['back_seconds']:.2f}s "
           f"jax={runs['jax']['back_seconds']:.2f}s "
           f"({back_speedup:.1f}x, bit-identical), "
@@ -749,17 +783,14 @@ def scale_bench(out_path, quick=False):
               f"resident={fmt_bytes(memmap_large['peak_resident_field_bytes'])}"
               f" of {fmt_bytes(field_bytes)}")
 
-    doc = {"schema": "ddms-scale-bench/v1",
-           "platform": platform.platform(),
-           "python": platform.python_version(),
-           "quick": bool(quick), "cpu_count": cpu,
-           "chunk_z": chunk_z,
-           "weak": {"base_dims_per_shard": list(base),
-                    "points": weak_points},
-           "strong": {"dims": list(strong_dims), "points": strong_points},
-           "bit_identity": bit_identity,
-           "memmap_large": memmap_large}
-    Path(out_path).write_text(json.dumps(doc, indent=1))
+    doc = bench_doc(
+        "ddms-scale-bench/v1", quick=quick,
+        cpu_count=cpu, chunk_z=chunk_z,
+        weak={"base_dims_per_shard": list(base), "points": weak_points},
+        strong={"dims": list(strong_dims), "points": strong_points},
+        bit_identity=bit_identity,
+        memmap_large=memmap_large)
+    write_bench(out_path, doc)
     print(f"wrote {out_path}: {len(weak_points)} weak + "
           f"{len(strong_points)} strong points (cpu_count={cpu})")
     for label, pts in (("weak", weak_points), ("strong", strong_points)):
@@ -774,19 +805,157 @@ def scale_bench(out_path, quick=False):
     return doc
 
 
+def obs_bench(out_path, quick=False, trace_out=None):
+    """Observability layer: overhead gate + traced timeline;
+    BENCH_obs.json.
+
+    Two machine-checked properties:
+
+    - **disabled overhead < 3%** (gated in full mode): interleaved A/B
+      of the warmed in-memory pipeline with the obs layer hard-killed
+      (``set_enabled(False)``) against the shipping default (enabled
+      but untraced).  The untraced hot path is ``current_trace() is
+      None`` checks and no-op context managers, so min-of-N must stay
+      within 3%.
+    - **the traced sharded-stream timeline**: ``TopoRequest(stream=
+      True, n_blocks=4, trace=True)`` on a 32^3 field must export
+      valid Perfetto ``trace_event`` JSON (schema + nesting validated)
+      with >= 4 named threads, show a ``halo_recv`` span overlapping a
+      ``chunk_compute`` span (the receives hide behind compute — the
+      point of the eager-publish design), and produce a diagram
+      bit-identical to the untraced run.
+
+    Also snapshots the global metrics registry (plan-cache and pairing
+    round counters, stream byte counters) and a live ``TopoService``
+    stats sample (queue-depth gauge, batch-size / request-latency
+    histogram percentiles)."""
+    import numpy as np
+
+    from repro.core.diagram import diff_report, same_offdiagonal
+    from repro.core.grid import Grid
+    from repro.fields import make_field
+    from repro.obs import (global_metrics, set_enabled, spans_overlap,
+                           thread_names, validate_trace_events)
+    from repro.pipeline import PersistencePipeline, TopoRequest
+    from repro.serve import TopoService
+    from repro.stream import ArraySource
+
+    # ---- disabled-overhead gate -------------------------------------
+    dims = (16, 16, 16) if quick else (32, 32, 32)
+    reps = 3 if quick else 7
+    g = Grid.of(*dims)
+    f = make_field("wavelet", dims, seed=0)
+    pipe = PersistencePipeline(backend="jax")
+    req = TopoRequest(field=f, grid=g)
+    pipe.run(req)                        # warm: compile out of the loop
+    t_killed, t_normal = [], []
+    try:
+        for i in range(reps):            # interleaved, order alternated
+            order = [(False, t_killed), (True, t_normal)]
+            if i % 2:
+                order.reverse()
+            for enabled, sink in order:
+                set_enabled(enabled)
+                st, _ = timed(lambda: pipe.run(req))
+                sink.append(st["min_s"])
+    finally:
+        set_enabled(True)
+    overhead = min(t_normal) / min(t_killed) - 1.0
+    print(f"  disabled-overhead: killed={min(t_killed)*1e3:.2f}ms "
+          f"normal={min(t_normal)*1e3:.2f}ms overhead={overhead*100:.2f}%")
+
+    # ---- traced sharded-stream timeline -----------------------------
+    sdims = (32, 32, 32)
+    sg = Grid.of(*sdims)
+    sf = make_field("wavelet", sdims, seed=1)
+    src = ArraySource(sf.reshape(sdims[::-1]))
+    sreq = TopoRequest(field=src, stream=True, chunk_z=4, n_blocks=4,
+                       trace=True)
+    ref = pipe.run(sreq.replace(trace=False))    # warm + untraced ref
+    overlapped, names, res, tdoc = False, {}, None, None
+    for attempt in range(3):   # thread scheduling can serialize a tiny
+        # run; the overlap is a property of the design, so retry
+        res = pipe.run(sreq)
+        tdoc = res.trace.to_dict()
+        validate_trace_events(tdoc)
+        names = thread_names(tdoc)
+        overlapped = spans_overlap(tdoc, "halo_recv", "chunk_compute")
+        if overlapped:
+            break
+    assert len(names) >= 4, f"expected >= 4 named threads, got {names}"
+    assert overlapped, \
+        "no halo_recv span overlaps any chunk_compute span in 3 runs"
+    assert same_offdiagonal(res.diagram, ref.diagram), \
+        diff_report(res.diagram, ref.diagram, ("traced", "untraced"))
+    for p in range(sg.dim + 1):
+        assert np.array_equal(res.diagram.essential_orders(p),
+                              ref.diagram.essential_orders(p))
+    trace_path = trace_out or str(
+        Path(out_path).with_name(Path(out_path).stem + "_trace.trace.json"))
+    res.trace.to_perfetto(trace_path)
+    n_spans = sum(1 for ev in tdoc["traceEvents"] if ev.get("ph") == "X")
+    span_names = sorted({ev["name"] for ev in tdoc["traceEvents"]
+                         if ev.get("ph") == "X"})
+    print(f"  trace: {n_spans} spans on {len(names)} named threads -> "
+          f"{trace_path} (halo_recv x chunk_compute overlap: OK, "
+          f"bit-identical: OK)")
+
+    # ---- metrics + service sample -----------------------------------
+    gm = global_metrics().snapshot()
+    with TopoService(pipeline=pipe, max_batch=4, max_wait_s=0.05) as svc:
+        futs = [svc.submit(TopoRequest(field=make_field("wavelet", dims,
+                                                        seed=s), grid=g))
+                for s in range(4)]
+        for fu in futs:
+            fu.result(timeout=120)
+        service_stats = svc.stats()
+
+    doc = bench_doc(
+        "ddms-obs-bench/v1", quick=quick,
+        dims=list(dims), reps=reps,
+        disabled_overhead={
+            "killed_min_s": min(t_killed), "normal_min_s": min(t_normal),
+            "killed_s": t_killed, "normal_s": t_normal,
+            "overhead_frac": overhead, "gate": 0.03,
+            "gated": not quick},
+        traced_stream={
+            "dims": list(sdims), "n_blocks": 4, "chunk_z": 4,
+            "attempts": attempt + 1, "n_spans": n_spans,
+            "span_names": span_names,
+            "thread_names": sorted(names.values()),
+            "halo_recv_overlaps_chunk_compute": overlapped,
+            "bit_identical": True,
+            "trace_path": str(trace_path)},
+        global_metrics=gm,
+        service_stats=service_stats)
+    write_bench(out_path, doc)
+    print(f"wrote {out_path}: overhead={overhead*100:.2f}% "
+          f"(gate 3%{'' if not quick else ', not gated in quick mode'}), "
+          f"{len(names)} threads, "
+          f"service p50 latency="
+          f"{service_stats['metrics']['request_latency_s']['p50']*1e3:.1f}ms")
+    if not quick:
+        assert overhead < 0.03, \
+            f"tracing-disabled overhead {overhead*100:.2f}% exceeds 3%"
+    return doc
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--dir", default="results/dryrun")
     ap.add_argument("--section", default="all",
                     choices=["all", "roofline", "dryrun", "pipeline",
                              "gradient", "stream", "api", "approx",
-                             "backend", "scale"])
+                             "backend", "scale", "obs"])
     ap.add_argument("--out", default=None,
                     help="output path for --section "
                          "pipeline/gradient/stream/api/approx/backend")
     ap.add_argument("--quick", action="store_true",
                     help="small sizes for CI smoke "
-                         "(gradient/stream/api/approx/backend)")
+                         "(gradient/stream/api/approx/backend/obs)")
+    ap.add_argument("--trace-out", default=None,
+                    help="Perfetto trace path for --section obs "
+                         "(default <out>_trace.trace.json)")
     args = ap.parse_args()
     if args.section == "pipeline":
         pipeline_bench(args.out or "BENCH_pipeline.json")
@@ -808,6 +977,10 @@ def main():
         return
     if args.section == "scale":
         scale_bench(args.out or "BENCH_scale.json", quick=args.quick)
+        return
+    if args.section == "obs":
+        obs_bench(args.out or "BENCH_obs.json", quick=args.quick,
+                  trace_out=args.trace_out)
         return
     recs = load(args.dir)
     if args.section in ("all", "dryrun"):

@@ -41,6 +41,8 @@ from repro.core.critical import CriticalInfo
 from repro.core.gradient import GradientField
 from repro.core.grid import Grid
 from repro.core.saddle_saddle import SaddleSaddlePairs, _tri_boundary
+from repro.obs.metrics import global_metrics
+from repro.obs.trace import current_trace, maybe_span
 
 
 NEG_INF = -(2 ** 62)
@@ -219,38 +221,41 @@ def d1_distributed(grid: Grid, gf: GradientField, ci: CriticalInfo,
             active[i] = False
             return None
 
+    tr = current_trace()   # grabbed once: the loop runs on one thread
     while True:
         stats.rounds += 1
-        # ---- apply messages (deterministic order), refresh gmax columns --
-        for blk in blocks:
-            touched = set()
-            for i, e in blk.inbox_add:
-                blk.toggle(i, e)
-                touched.add(i)
-            blk.inbox_add = []
-            for i, j in blk.inbox_merge:
-                for e in list(blk.local.get(j, ())):
+        with maybe_span(tr, "d1_round", round=stats.rounds):
+            # ---- apply messages (deterministic order), refresh gmax ----
+            for blk in blocks:
+                touched = set()
+                for i, e in blk.inbox_add:
                     blk.toggle(i, e)
-                touched.add(i)
-            blk.inbox_merge = []
-            for i in touched:
-                gmax[i, blk.bid] = blk.local_max(i, ekey)
-        # ---- token owners expand (ownership snapshot: tokens travel as
-        # messages, so transfers take effect only next round — the paper
-        # processes boundary updates strictly before tokens, Sec. V-A) ----
-        moved = False
-        owner_snapshot = owner.copy()
-        active_snapshot = active.copy()
-        for blk in blocks:
-            for i in range(n2):
-                if active_snapshot[i] and owner_snapshot[i] == blk.bid:
-                    res = expand(i, blk)
-                    if res is not None:
-                        dest, _ = res
-                        if dest != blk.bid:
-                            stats.token_hops += 1
-                            moved = True
-                        owner[i] = dest
+                    touched.add(i)
+                blk.inbox_add = []
+                for i, j in blk.inbox_merge:
+                    for e in list(blk.local.get(j, ())):
+                        blk.toggle(i, e)
+                    touched.add(i)
+                blk.inbox_merge = []
+                for i in touched:
+                    gmax[i, blk.bid] = blk.local_max(i, ekey)
+            # ---- token owners expand (ownership snapshot: tokens travel
+            # as messages, so transfers take effect only next round — the
+            # paper processes boundary updates strictly before tokens,
+            # Sec. V-A) --------------------------------------------------
+            moved = False
+            owner_snapshot = owner.copy()
+            active_snapshot = active.copy()
+            for blk in blocks:
+                for i in range(n2):
+                    if active_snapshot[i] and owner_snapshot[i] == blk.bid:
+                        res = expand(i, blk)
+                        if res is not None:
+                            dest, _ = res
+                            if dest != blk.bid:
+                                stats.token_hops += 1
+                                moved = True
+                            owner[i] = dest
         if not active.any():
             break
         if not moved:
@@ -265,6 +270,7 @@ def d1_distributed(grid: Grid, gf: GradientField, ci: CriticalInfo,
                         if active[i] and owner[i] == blk.bid:
                             continue_possible = True
                 assert continue_possible, "D1 rounds deadlocked"
+    global_metrics().counter("pairing.d1_rounds").inc(stats.rounds)
 
     pairs = []
     for blk in blocks:

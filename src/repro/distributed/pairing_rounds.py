@@ -46,6 +46,8 @@ import numpy as np
 from repro.core.extremum_graph import ExtremumGraph
 from repro.core.pairing import ExtremaPairs
 from repro.core.tracing import OMEGA
+from repro.obs.metrics import global_metrics
+from repro.obs.trace import current_trace, maybe_span
 
 NOKEY = np.int64(np.iinfo(np.int64).max)  # "unassigned" representative tag
 
@@ -95,40 +97,44 @@ def pairing_fixpoint(g: ExtremumGraph,
     repkey = np.full(ne + 1, NOKEY, dtype=np.int64)
     pair = np.full(ne + 1, -1, dtype=np.int64)
 
+    tr = current_trace()   # grabbed once: the loop runs on one thread
     while True:
         stats.rounds += 1
-        # --- age-filtered find, all triplets in parallel ----------------
-        cur = np.stack([c0, c1], axis=1)  # (n,2)
-        while True:
-            rk = repkey[cur]
-            step = rk < skey[:, None]
-            if not step.any():
-                break
-            cur = np.where(step, rep[cur], cur)
-        r0, r1 = cur[:, 0], cur[:, 1]
+        with maybe_span(tr, "d0_round", round=stats.rounds):
+            # --- age-filtered find, all triplets in parallel ------------
+            cur = np.stack([c0, c1], axis=1)  # (n,2)
+            while True:
+                rk = repkey[cur]
+                step = rk < skey[:, None]
+                if not step.any():
+                    break
+                cur = np.where(step, rep[cur], cur)
+            r0, r1 = cur[:, 0], cur[:, 1]
 
-        # --- proposals ---------------------------------------------------
-        prop = r0 != r1
-        die = np.where(ekey[r0] >= ekey[r1], r0, r1)
-        live = np.where(ekey[r0] >= ekey[r1], r1, r0)
-        # --- rebuild: oldest saddle wins per extremum --------------------
-        new_rep = np.arange(ne + 1, dtype=np.int64)
-        new_repkey = np.full(ne + 1, NOKEY, dtype=np.int64)
-        new_pair = np.full(ne + 1, -1, dtype=np.int64)
-        order = np.argsort(skey[prop], kind="stable")[::-1]  # youngest first
-        idx = np.nonzero(prop)[0][order]
-        # youngest first + overwrite => oldest ends up winning
-        new_rep[die[idx]] = live[idx]
-        new_repkey[die[idx]] = skey[idx]
-        new_pair[die[idx]] = idx
-        if collect_stats:
-            stats.proposals += int(prop.sum())
-            changed = (new_pair != pair) & (pair >= 0)
-            stats.corrections += int(changed.sum())
+            # --- proposals ----------------------------------------------
+            prop = r0 != r1
+            die = np.where(ekey[r0] >= ekey[r1], r0, r1)
+            live = np.where(ekey[r0] >= ekey[r1], r1, r0)
+            # --- rebuild: oldest saddle wins per extremum ---------------
+            new_rep = np.arange(ne + 1, dtype=np.int64)
+            new_repkey = np.full(ne + 1, NOKEY, dtype=np.int64)
+            new_pair = np.full(ne + 1, -1, dtype=np.int64)
+            order = np.argsort(skey[prop],
+                               kind="stable")[::-1]  # youngest first
+            idx = np.nonzero(prop)[0][order]
+            # youngest first + overwrite => oldest ends up winning
+            new_rep[die[idx]] = live[idx]
+            new_repkey[die[idx]] = skey[idx]
+            new_pair[die[idx]] = idx
+            if collect_stats:
+                stats.proposals += int(prop.sum())
+                changed = (new_pair != pair) & (pair >= 0)
+                stats.corrections += int(changed.sum())
         if (np.array_equal(new_rep, rep) and np.array_equal(new_pair, pair)
                 and np.array_equal(new_repkey, repkey)):
             break
         rep, repkey, pair = new_rep, new_repkey, new_pair
+    global_metrics().counter("pairing.d0_rounds").inc(stats.rounds)
 
     pairs: List[Tuple[int, int]] = []
     for e in range(ne):

@@ -50,6 +50,7 @@ gradient must fail loudly, not silently mis-pair.
 from __future__ import annotations
 
 import heapq
+import time
 from typing import Dict, List, Optional, Tuple
 
 import numpy as np
@@ -62,6 +63,8 @@ from repro.core.pairing import ExtremaPairs
 from repro.core.saddle_saddle import SaddleSaddlePairs
 from repro.core.tracing import OMEGA, resolve_chase, resolve_doubling, \
     tet_successors
+from repro.obs.metrics import global_metrics
+from repro.obs.trace import current_trace, maybe_span
 
 NOKEY = np.int64(np.iinfo(np.int64).max)    # "unassigned" representative tag
 NEG_INF = np.int64(np.iinfo(np.int64).min)  # pad-slot comparison key
@@ -259,18 +262,23 @@ def pair_extrema_saddles_kernel(g: ExtremumGraph) -> ExtremaPairs:
     rep = np.arange(m_pad, dtype=np.int64)
     repkey = np.full(m_pad, NOKEY, dtype=np.int64)
     pair = np.full(m_pad, -1, dtype=np.int64)
+    tr = current_trace()
+    n_rounds = 0
     while True:
-        if round_fn is not None:
-            new_rep, new_repkey, new_pair = (
-                np.asarray(a) for a in round_fn(c0p, c1p, skey, ekey,
-                                                rep, repkey))
-        else:                                  # pragma: no cover - no jax
-            new_rep, new_repkey, new_pair = _d0_round_np(
-                c0p, c1p, skey, ekey, rep, repkey, m_pad)
+        n_rounds += 1
+        with maybe_span(tr, "d0_round", round=n_rounds):
+            if round_fn is not None:
+                new_rep, new_repkey, new_pair = (
+                    np.asarray(a) for a in round_fn(c0p, c1p, skey, ekey,
+                                                    rep, repkey))
+            else:                              # pragma: no cover - no jax
+                new_rep, new_repkey, new_pair = _d0_round_np(
+                    c0p, c1p, skey, ekey, rep, repkey, m_pad)
         if (np.array_equal(new_rep, rep) and np.array_equal(new_pair, pair)
                 and np.array_equal(new_repkey, repkey)):
             break
         rep, repkey, pair = new_rep, new_repkey, new_pair
+    global_metrics().counter("pairing.d0_rounds").inc(n_rounds)
 
     e_idx = np.nonzero(pair[:ne] >= 0)[0]
     saddles = np.asarray(g.saddles)[pair[e_idx]]
@@ -558,6 +566,7 @@ def pair_saddle_saddle_wavefront(grid: Grid, gf: GradientField,
     pair_edge = np.full(n2, -1, dtype=np.int64)
     expansions = 0
     rounds = 0
+    tr = current_trace()
 
     for lo in range(0, n2, batch):
         hi = min(lo + batch, n2)
@@ -577,6 +586,9 @@ def pair_saddle_saddle_wavefront(grid: Grid, gf: GradientField,
             if len(idx) == 0:
                 break
             rounds += 1
+            # round spans bracket manually (Trace.complete): the body
+            # exits through several continue paths
+            _rt0 = time.perf_counter() if tr is not None else 0.0
             piv = rows[idx, -1]                  # sorted rows: pivot last
             mx = keys[idx, -1]
             # -- retirement: column vanished -> essential 2-class -------
@@ -585,6 +597,8 @@ def pair_saddle_saddle_wavefront(grid: Grid, gf: GradientField,
                 active[idx[empty]] = False
                 idx, piv = idx[~empty], piv[~empty]
                 if len(idx) == 0:
+                    if tr is not None:
+                        tr.complete("d1_round", _rt0, round=rounds)
                     continue
             # -- classify the live pivots ------------------------------
             up = pair_up1[piv]
@@ -638,6 +652,8 @@ def pair_saddle_saddle_wavefront(grid: Grid, gf: GradientField,
             op_rows = np.concatenate([ex_rows, mg_rows]) \
                 if len(mg_rows) else ex_rows
             if len(op_rows) == 0:
+                if tr is not None:
+                    tr.complete("d1_round", _rt0, round=rounds)
                 continue                         # contest losers wait
             expansions += len(op_rows)
             ne = len(ex_rows)
@@ -685,6 +701,8 @@ def pair_saddle_saddle_wavefront(grid: Grid, gf: GradientField,
                 Wn = max(wide, 4)
                 rows = rows[:, W - Wn:].copy()
                 keys = keys[:, W - Wn:].copy()
+            if tr is not None:
+                tr.complete("d1_round", _rt0, round=rounds)
         # batch done: freeze the claim-holding boundaries (later batches
         # can merge them but — being younger — can never steal them)
         for r in range(C):
@@ -707,4 +725,5 @@ def _d1_result(order_c2: np.ndarray, c1: np.ndarray, pair_edge: np.ndarray,
     out = SaddleSaddlePairs(pairs, unpaired_edges, unpaired_tri,
                             expansions)
     out.rounds = rounds
+    global_metrics().counter("pairing.d1_rounds").inc(rounds)
     return out

@@ -1,0 +1,23 @@
+"""Process-wide observability: span tracing + metrics registry.
+
+- :mod:`repro.obs.trace`   — nested, thread-aware spans recorded into
+  per-thread buffers and exported as Chrome/Perfetto ``trace_event``
+  JSON (``result.trace.to_perfetto(path)``); loader threads, per-shard
+  workers, halo publishes/receives, chunk kernels, and D0/D1 pairing
+  rounds all land on one timeline.  ``TopoRequest(trace=True)``
+  activates it for one pipeline run.
+- :mod:`repro.obs.metrics` — named counters, gauges, and streaming
+  log-bucket histograms (p50/p95/p99 without per-sample storage):
+  bytes moved, chunks prefetched, pairing rounds, plan-cache
+  hits/evictions, and the ``TopoService`` queue/batch/latency stats
+  surfaced by ``TopoService.stats()``.
+
+See docs/observability.md for the span model, the metric-name table,
+and the Perfetto how-to.
+"""
+
+from .metrics import (Counter, Gauge, Histogram,  # noqa: F401
+                      MetricsRegistry, global_metrics)
+from .trace import (Span, Trace, current_trace,  # noqa: F401
+                    maybe_span, set_enabled, spans_overlap,
+                    thread_names, trace_active, validate_trace_events)

@@ -36,6 +36,7 @@ import numpy as np
 
 from repro.core.diagram import Diagram
 from repro.core.grid import Grid, vertex_order
+from repro.obs.trace import Trace, current_trace, maybe_span, trace_active
 
 from .backends import (Backend, SandwichBackend, get_backend,
                        get_sandwich_backend)
@@ -230,6 +231,16 @@ class PersistencePipeline:
         if req.is_approx:
             return self._run_approx(req)
         plan = self._lower_resolved(req)
+        if req.trace:
+            # activate a fresh Trace for this thread; every StageReport
+            # created under it auto-binds (stages.py), deep layers hook
+            # in via current_trace(), and engine worker threads capture
+            # it from their stage_report — see repro.obs
+            with trace_active(Trace()):
+                return self._run_planned(req, plan)
+        return self._run_planned(req, plan)
+
+    def _run_planned(self, req: TopoRequest, plan: Plan) -> DiagramResult:
         if plan.streamed:
             # the streamed front-end drives its own per-chunk kernels;
             # the batched rows program would be compiled for nothing
@@ -254,6 +265,13 @@ class PersistencePipeline:
         out: List[Optional[DiagramResult]] = [None] * len(reqs)
         for idxs in groups.values():
             plan = plans[idxs[0]]
+            if any(reqs[i].trace for i in idxs):
+                # a trace is per-run, not part of the Plan identity —
+                # traced requests serve one by one so each gets its own
+                # timeline (the shared plan cache still amortizes)
+                for i in idxs:
+                    out[i] = self.run(reqs[i])
+                continue
             if plan.is_approx:
                 # approximation picks its level per field (the bound is
                 # data-dependent), so these serve one by one — each
@@ -312,7 +330,7 @@ class PersistencePipeline:
         res = DiagramResult(
             dg, report.flat(), report if req.include_report else None,
             stream=stream, request=strip_field(req), plan=plan,
-            _values_fn=values_fn)
+            trace=report.trace, _values_fn=values_fn)
         # materialize the canonical query arrays now (tiny — critical
         # simplices only) so the result does not pin the full field /
         # dense key array for its lifetime
@@ -352,9 +370,10 @@ class PersistencePipeline:
 
         # one batched gradient dispatch for the whole batch
         t0 = time.perf_counter()
-        orders = np.stack([s.order for s in states])
-        rows = ex.rows_program(orders)
-        gfs = _scatter_batch(grid, rows, B, offsets=ex.row_offsets)
+        with maybe_span(current_trace(), "gradient", batch_size=B):
+            orders = np.stack([s.order for s in states])
+            rows = ex.rows_program(orders)
+            gfs = _scatter_batch(grid, rows, B, offsets=ex.row_offsets)
         dt = (time.perf_counter() - t0) / B
         for state, report, gf in zip(states, reports, gfs):
             rep = report.child("gradient")

@@ -26,12 +26,22 @@ from typing import Callable, Dict, Optional, Tuple
 
 from repro.core.grid import Grid
 
+from repro.obs.metrics import global_metrics
+
 from .backends import Backend, get_backend
 
 
 # --------------------------------------------------------------------------
 # PlanCache — shared, evictable compiled-artifact cache
 # --------------------------------------------------------------------------
+
+# process-wide plan-cache counters (repro.obs), aggregated across every
+# PlanCache instance — the per-instance ints below stay the per-cache
+# source of truth for stats()/tests
+_M_HITS = global_metrics().counter("plan_cache.hits")
+_M_MISSES = global_metrics().counter("plan_cache.misses")
+_M_EVICTIONS = global_metrics().counter("plan_cache.evictions")
+_M_COMPILES = global_metrics().counter("plan_cache.compiles")
 
 class PlanCache:
     """LRU cache of compiled plan artifacts, shared across pipelines.
@@ -72,12 +82,14 @@ class PlanCache:
             with self._lock:
                 if key in self._entries:
                     self.hits += 1
+                    _M_HITS.inc()
                     self._entries.move_to_end(key)
                     return self._entries[key]
                 pending = self._building.get(key)
                 if pending is None:
                     self._building[key] = threading.Event()
                     self.misses += 1
+                    _M_MISSES.inc()
                     break
             pending.wait()     # someone else is building this key
         try:
@@ -89,11 +101,13 @@ class PlanCache:
         with self._lock:
             self._entries[key] = out
             self.compiles += 1
+            _M_COMPILES.inc()
             self.build_counts[key] = self.build_counts.get(key, 0) + 1
             while len(self._entries) > self.maxsize:
                 old, _ = self._entries.popitem(last=False)
                 self.build_counts.pop(old, None)
                 self.evictions += 1
+                _M_EVICTIONS.inc()
             self._building.pop(key).set()
         return out
 

@@ -106,6 +106,14 @@ class TopoRequest:
         ``run`` returns the final (tightest) result, ``TopoService``
         resolves a preview future first, and ``repro.approx.refine``
         yields every intermediate.
+    trace : record a span timeline for this run (``repro.obs``): stage
+        spans, per-chunk loader/compute/scatter spans, halo
+        publishes/receives, and D0/D1 pairing rounds, across every
+        thread the run touches.  The result's ``trace`` holds the
+        :class:`repro.obs.Trace`; export with
+        ``result.trace.to_perfetto(path)``.  Output diagrams are
+        bit-identical with tracing on or off; tracing is per-run (it
+        never affects the :class:`Plan` or compiled programs).
     include_report : attach the :class:`StageReport` to the result
         (False keeps serialized payloads lean).
     """
@@ -127,6 +135,7 @@ class TopoRequest:
     epsilon: Optional[float] = None
     deadline_s: Optional[float] = None
     progressive: bool = False
+    trace: bool = False
     include_report: bool = True
 
     def __post_init__(self):

@@ -50,6 +50,7 @@ from typing import Callable, Dict, Optional, Tuple
 import numpy as np
 
 from repro.core.diagram import Diagram
+from repro.obs.trace import Trace
 from repro.stream.scheduler import StreamReport
 
 from .plan import Plan
@@ -77,6 +78,10 @@ class DiagramResult:
     stream: Optional[StreamReport] = None
     request: Optional[TopoRequest] = None
     plan: Optional[Plan] = None
+    # span timeline recorded when the request set trace=True; live-run
+    # only (not part of the wire format) — export with
+    # ``trace.to_perfetto(path)``
+    trace: Optional[Trace] = field(default=None, repr=False, compare=False)
     _arrays: Dict[str, np.ndarray] = field(default_factory=dict, repr=False)
     # vertex ids -> field values (in-memory: the flat field; streamed:
     # unpacked from the (value, vid) keys); None when values are unknown

@@ -18,6 +18,15 @@ nestable, machine-readable record replacing the ad-hoc ``stats`` dicts
 the two drivers used to hand-roll.  ``StageReport.flat()`` reproduces
 the legacy flat key space (``order``, ``gradient``, ``d1_rounds``, ...)
 so existing consumers keep working.
+
+Since the observability PR the report is **span-backed**: every
+``stage()`` context is also a :class:`repro.obs.trace.Span` when a
+trace is active (``TopoRequest(trace=True)`` — the pipeline activates
+the trace thread-locally, and reports created inside the activation
+window bind to it automatically).  The public shape (``name`` /
+``seconds`` / ``counters`` / ``children``, ``flat()``, ``to_dict()``)
+is unchanged; the trace adds wall-clock timestamps and thread identity
+on top, exported via ``result.trace.to_perfetto(path)``.
 """
 
 from __future__ import annotations
@@ -28,6 +37,8 @@ from dataclasses import dataclass, field
 from typing import Dict, List, Optional
 
 import numpy as np
+
+from repro.obs.trace import Trace, current_trace
 
 from repro.core.critical import CriticalInfo
 from repro.core.diagram import Diagram
@@ -52,27 +63,49 @@ COMM_STAGE_NAMES = ("comm",)
 
 @dataclass
 class StageReport:
-    """Structured per-stage record: wall time, counters, nested children."""
+    """Structured per-stage record: wall time, counters, nested children.
+
+    Span-backed: when a :class:`repro.obs.trace.Trace` is attached
+    (explicitly, or inherited from the thread's active trace at
+    construction), every ``stage()`` context also records a span —
+    same name, same interval, stage counters as span attributes — so
+    the report tree and the Perfetto timeline are two views of one
+    measurement."""
 
     name: str
     seconds: float = 0.0
     counters: Dict[str, float] = field(default_factory=dict)
     children: List["StageReport"] = field(default_factory=list)
+    trace: Optional[Trace] = field(default=None, repr=False, compare=False)
+
+    def __post_init__(self):
+        if self.trace is None:
+            self.trace = current_trace()
 
     def child(self, name: str) -> "StageReport":
-        r = StageReport(name)
+        r = StageReport(name, trace=self.trace)
         self.children.append(r)
         return r
 
     @contextmanager
     def stage(self, name: str):
-        """Open (and time) a child stage."""
+        """Open (and time) a child stage (and its span, when traced)."""
         r = self.child(name)
-        t0 = time.perf_counter()
-        try:
-            yield r
-        finally:
-            r.seconds += time.perf_counter() - t0
+        tr = self.trace
+        if tr is None:
+            t0 = time.perf_counter()
+            try:
+                yield r
+            finally:
+                r.seconds += time.perf_counter() - t0
+            return
+        with tr.span(name) as sp:
+            t0 = time.perf_counter()
+            try:
+                yield r
+            finally:
+                r.seconds += time.perf_counter() - t0
+                sp.args.update(r.counters)
 
     def count(self, **counters) -> None:
         for k, v in counters.items():

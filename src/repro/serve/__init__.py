@@ -1,3 +1,4 @@
-from .engine import generate, serve_topo, topo_payload  # noqa: F401
+from .engine import (generate, serve_topo, stats_payload,  # noqa: F401
+                     topo_payload)
 from .topo_service import (ProgressiveFuture, ServiceStats,  # noqa: F401
                            TopoService)

@@ -48,6 +48,15 @@ def serve_topo(request, *, pipeline=None) -> bytes:
     return topo_payload(pipe.run(request))
 
 
+def stats_payload(service) -> bytes:
+    """Serialize a :class:`TopoService`'s telemetry snapshot as JSON
+    bytes for the RPC boundary: the serving counters plus the metric
+    summaries (queue depth, batch-size / request-latency percentiles)
+    from ``service.stats()`` — a copy, never a view of live state."""
+    import json
+    return json.dumps(service.stats(), sort_keys=True).encode("utf-8")
+
+
 # --------------------------------------------------------------------------
 # LM decode serving
 # --------------------------------------------------------------------------

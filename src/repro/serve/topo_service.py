@@ -44,13 +44,20 @@ from typing import Dict, List, Optional, Sequence, Union
 import numpy as np
 
 from repro.core.grid import Grid
+from repro.obs.metrics import MetricsRegistry
 from repro.pipeline import (DiagramResult, PersistencePipeline,
                             PipelineResult, TopoRequest)  # noqa: F401
 
 
 @dataclass
 class ServiceStats:
-    """Aggregate serving counters (inspectable while running)."""
+    """Aggregate serving counters (inspectable while running).
+
+    Also *callable*: ``svc.stats()`` returns a fresh snapshot dict —
+    the counters plus the service's metric instruments (queue depth,
+    batch-size and request-latency histograms with p50/p95/p99).  The
+    snapshot is a copy: mutating it never touches live service state,
+    and live updates never surprise a caller holding one."""
 
     requests: int = 0
     batches: int = 0
@@ -60,6 +67,9 @@ class ServiceStats:
     retried: int = 0                 # re-served alone after a batch failure
     stream_requests: int = 0         # FieldSource requests (out-of-core)
     progressive_requests: int = 0    # preview-then-refine submits
+    traced_requests: int = 0         # requests that carried trace=True
+    metrics: Optional[MetricsRegistry] = field(
+        default=None, repr=False, compare=False)
 
     def as_dict(self) -> Dict[str, int]:
         return dict(requests=self.requests, batches=self.batches,
@@ -67,7 +77,18 @@ class ServiceStats:
                     max_batch=self.max_batch, errors=self.errors,
                     retried=self.retried,
                     stream_requests=self.stream_requests,
-                    progressive_requests=self.progressive_requests)
+                    progressive_requests=self.progressive_requests,
+                    traced_requests=self.traced_requests)
+
+    def snapshot(self) -> Dict[str, object]:
+        """Counters + metric summaries, as freshly-built plain dicts."""
+        out: Dict[str, object] = dict(self.as_dict())
+        if self.metrics is not None:
+            out["metrics"] = self.metrics.snapshot()
+        return out
+
+    def __call__(self) -> Dict[str, object]:
+        return self.snapshot()
 
 
 class ProgressiveFuture(Future):
@@ -102,6 +123,7 @@ class _Request:
     req: TopoRequest
     plain: bool                      # bare ndarray, default options
     future: Future = field(default_factory=Future)
+    submitted: float = field(default_factory=time.perf_counter)
 
     def __post_init__(self):
         if self.progressive and not isinstance(self.future,
@@ -131,7 +153,7 @@ class _Request:
         # stay per-request through run_batch, so they must NOT split
         # batches — only plan-affecting options key the group
         opts = (r.homology_dims, r.backend, r.n_blocks, r.distributed,
-                r.anticipation, r.budget, r.epsilon)
+                r.anticipation, r.budget, r.epsilon, r.trace)
         return ("req", r.field_shape, dims, opts)
 
 
@@ -158,7 +180,14 @@ class TopoService:
         self.max_batch = max_batch
         self.max_wait_s = max_wait_s
         self.wire = wire
-        self.stats = ServiceStats()
+        # a private registry, not the process-global one: the service's
+        # queue/batch/latency telemetry lives and dies with it
+        self._metrics = MetricsRegistry()
+        self._m_depth = self._metrics.gauge("queue_depth")
+        self._m_batch = self._metrics.histogram("batch_size", lo=1.0,
+                                                hi=4096.0, factor=2.0)
+        self._m_latency = self._metrics.histogram("request_latency_s")
+        self.stats = ServiceStats(metrics=self._metrics)
         self._queue: "queue.Queue[Optional[_Request]]" = queue.Queue()
         self._closed = False
         self._lock = threading.Lock()  # orders submits vs the close sentinel
@@ -184,6 +213,7 @@ class TopoService:
             if self._closed:
                 raise RuntimeError("TopoService is closed")
             self._queue.put(r)
+        self._m_depth.set(self._queue.qsize())
         return r.future
 
     def diagram(self, f, grid: Optional[Grid] = None) -> DiagramResult:
@@ -245,6 +275,7 @@ class TopoService:
             batch.append(nxt)
             if nxt is None:
                 break
+        self._m_depth.set(self._queue.qsize())
         return batch
 
     def _run(self) -> None:
@@ -271,6 +302,7 @@ class TopoService:
         return res
 
     def _deliver(self, r: _Request, res: DiagramResult) -> None:
+        self._m_latency.observe(time.perf_counter() - r.submitted)
         _resolve(r.future, self._payload(res))
 
     @staticmethod
@@ -321,6 +353,7 @@ class TopoService:
 
     def _serve(self, reqs: List[_Request]) -> None:
         self.stats.requests += len(reqs)
+        self.stats.traced_requests += sum(1 for r in reqs if r.req.trace)
         # group compatible runs so one dispatch sees one plan + shape
         groups: Dict[object, List[_Request]] = {}
         for r in reqs:
@@ -339,6 +372,7 @@ class TopoService:
                     self._serve_one(r)
                 continue
             self.stats.max_batch = max(self.stats.max_batch, len(group))
+            self._m_batch.observe(len(group))
             if len(group) > 1:
                 self.stats.batched_requests += len(group)
             try:

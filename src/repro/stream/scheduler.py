@@ -42,6 +42,8 @@ import numpy as np
 
 from repro.core import gradient as GR
 from repro.core.grid import Grid
+from repro.obs.metrics import global_metrics
+from repro.obs.trace import maybe_span
 
 from .chunks import Chunk, FieldSource, pack_value_keys, plan_chunks
 
@@ -185,10 +187,14 @@ def stream_front(source: FieldSource, *, kernel: str = "jax",
         max_chunk_bytes=max(c.load_bytes(grid.dims) for c in chunks),
         key_bytes=keys.nbytes)
     res = _Resident()
+    # worker threads cannot see the run's thread-local activation —
+    # they capture the Trace (or None) from the stage report instead
+    tr = getattr(stage_report, "trace", None)
 
     def load(c: Chunk):
         t0 = time.perf_counter()
-        slab = source.read_slab(c.glo, c.ghi)
+        with maybe_span(tr, "chunk_load", zlo=c.zlo, zhi=c.zhi):
+            slab = source.read_slab(c.glo, c.ghi)
         return slab, time.perf_counter() - t0
 
     t_wall = time.perf_counter()
@@ -207,20 +213,23 @@ def stream_front(source: FieldSource, *, kernel: str = "jax",
                 fut = pool.submit(load, chunks[i + 1])
 
             t0 = time.perf_counter()
-            vids = np.arange(c.glo * plane, c.ghi * plane, dtype=np.int64)
-            kslab = pack_value_keys(slab, vids)
-            ext = _ext_volume(kslab, c, grid.dims)
-            rows = [np.asarray(r)
-                    for r in ops.lower_star_rows_halo(ext, backend=kernel)]
+            with maybe_span(tr, "chunk_compute", zlo=c.zlo, zhi=c.zhi):
+                vids = np.arange(c.glo * plane, c.ghi * plane,
+                                 dtype=np.int64)
+                kslab = pack_value_keys(slab, vids)
+                ext = _ext_volume(kslab, c, grid.dims)
+                rows = [np.asarray(r) for r in
+                        ops.lower_star_rows_halo(ext, backend=kernel)]
             rep.compute_s += time.perf_counter() - t0
 
             t0 = time.perf_counter()
-            v0 = c.vid0(grid.dims)
-            GR.scatter_rows_chunk(grid, gf, rows[0], rows[1], rows[2],
-                                  rows[3], v0, offsets=offsets)
-            keys[v0: v0 + c.nz * plane] = \
-                kslab[(c.zlo - c.glo) * plane:
-                      (c.zlo - c.glo) * plane + c.nz * plane]
+            with maybe_span(tr, "chunk_scatter", zlo=c.zlo, zhi=c.zhi):
+                v0 = c.vid0(grid.dims)
+                GR.scatter_rows_chunk(grid, gf, rows[0], rows[1], rows[2],
+                                      rows[3], v0, offsets=offsets)
+                keys[v0: v0 + c.nz * plane] = \
+                    kslab[(c.zlo - c.glo) * plane:
+                          (c.zlo - c.glo) * plane + c.nz * plane]
             rep.scatter_s += time.perf_counter() - t0
             res.release(c.load_bytes(grid.dims))
             del slab, kslab, ext, rows
@@ -229,6 +238,9 @@ def stream_front(source: FieldSource, *, kernel: str = "jax",
     rep.peak_resident_field_bytes = res.peak
     serial = rep.load_s + rep.compute_s + rep.scatter_s
     rep.overlap_s = max(0.0, serial - rep.wall_s)
+    mx = global_metrics()
+    mx.counter("stream.chunks").inc(rep.n_chunks)
+    mx.counter("stream.loaded_bytes").inc(rep.total_loaded_bytes)
 
     if stage_report is not None:
         for name in ("load", "compute", "scatter"):

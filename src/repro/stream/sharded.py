@@ -49,6 +49,8 @@ import numpy as np
 
 from repro.core import gradient as GR
 from repro.core.grid import Grid
+from repro.obs.metrics import global_metrics
+from repro.obs.trace import maybe_span
 
 from .chunks import (Chunk, FieldSource, pack_value_keys, plan_chunks,
                      plan_shards)
@@ -83,12 +85,22 @@ class HaloExchange:
         ev.set()
 
     def recv(self, shard: int, side: str,
-             timeout: float = _HALO_TIMEOUT_S) -> np.ndarray:
+             timeout: float = _HALO_TIMEOUT_S, *,
+             waiter: Optional[int] = None,
+             plane_z: Optional[int] = None) -> np.ndarray:
+        """Block until neighbor ``shard`` publishes its ``side`` plane.
+
+        ``waiter``/``plane_z`` are diagnostics only: on timeout the
+        error names who was waiting, which neighbor never published,
+        and which ghost plane the wait was for."""
         ev, _ = self._slots[(shard, side)]
         if not ev.wait(timeout):
+            who = "" if waiter is None else f"shard {waiter} waiting: "
+            where = "" if plane_z is None else f" (ghost plane z={plane_z})"
             raise HaloExchangeTimeout(
-                f"no {side!r} boundary plane from shard {shard} after "
-                f"{timeout:.0f}s — did the neighbor worker die?")
+                f"{who}no {side!r} boundary plane from shard {shard}"
+                f"{where} after {timeout:.0f}s — did the neighbor worker "
+                f"die?")
         return self._slots[(shard, side)][1]
 
 
@@ -143,6 +155,9 @@ def sharded_stream_front(source: FieldSource, n_shards: int, *,
     exchange = HaloExchange(n_shards)
     res = _Resident()
     plane_bytes = plane * 4
+    # shard workers and their loader threads cannot see the run's
+    # thread-local trace activation — capture it from the stage report
+    tr = getattr(stage_report, "trace", None)
 
     def worker(s: int) -> dict:
         z0, z1 = shards[s]
@@ -160,15 +175,20 @@ def sharded_stream_front(source: FieldSource, n_shards: int, *,
         publish_s = 0.0
         t0 = time.perf_counter()
         if s > 0:
-            res.add(plane_bytes)
-            exchange.publish(s, "first", _pack_plane(source, z0, plane))
-            res.release(plane_bytes)
+            with maybe_span(tr, "halo_publish", shard=s, side="first",
+                            plane_z=z0):
+                res.add(plane_bytes)
+                exchange.publish(s, "first", _pack_plane(source, z0, plane))
+                res.release(plane_bytes)
             st["loaded_bytes"] += plane_bytes
             st["halo_planes"] += 1
         if s < n_shards - 1:
-            res.add(plane_bytes)
-            exchange.publish(s, "last", _pack_plane(source, z1 - 1, plane))
-            res.release(plane_bytes)
+            with maybe_span(tr, "halo_publish", shard=s, side="last",
+                            plane_z=z1 - 1):
+                res.add(plane_bytes)
+                exchange.publish(s, "last",
+                                 _pack_plane(source, z1 - 1, plane))
+                res.release(plane_bytes)
             st["loaded_bytes"] += plane_bytes
             st["halo_planes"] += 1
         if st["halo_planes"]:
@@ -180,16 +200,24 @@ def sharded_stream_front(source: FieldSource, n_shards: int, *,
             chunk — the receive wait overlaps the previous chunk's
             compute (double-buffered comm)."""
             t0 = time.perf_counter()
-            slab = source.read_slab(c.glo, c.ghi)
+            with maybe_span(tr, "chunk_load", shard=s, zlo=c.zlo,
+                            zhi=c.zhi):
+                slab = source.read_slab(c.glo, c.ghi)
             load_dt = time.perf_counter() - t0
             halo_lo = halo_hi = None
             recv_dt = 0.0
             if c.halo_below or c.halo_above:
                 t0 = time.perf_counter()
                 if c.halo_below:
-                    halo_lo = exchange.recv(s - 1, "last")
+                    with maybe_span(tr, "halo_recv", shard=s,
+                                    neighbor=s - 1, plane_z=c.zlo - 1):
+                        halo_lo = exchange.recv(s - 1, "last", waiter=s,
+                                                plane_z=c.zlo - 1)
                 if c.halo_above:
-                    halo_hi = exchange.recv(s + 1, "first")
+                    with maybe_span(tr, "halo_recv", shard=s,
+                                    neighbor=s + 1, plane_z=c.zhi):
+                        halo_hi = exchange.recv(s + 1, "first", waiter=s,
+                                                plane_z=c.zhi)
                 recv_dt = time.perf_counter() - t0
             return slab, halo_lo, halo_hi, load_dt, recv_dt
 
@@ -216,22 +244,27 @@ def sharded_stream_front(source: FieldSource, n_shards: int, *,
                     fut = pool.submit(load, chunks[i + 1])
 
                 t0 = time.perf_counter()
-                vids = np.arange(c.glo * plane, c.ghi * plane,
-                                 dtype=np.int64)
-                kslab = pack_value_keys(slab, vids)
-                ext = _ext_volume(kslab, c, grid.dims,
-                                  halo_lo=halo_lo, halo_hi=halo_hi)
-                rows = [np.asarray(r) for r in
-                        ops.lower_star_rows_halo(ext, backend=kernel)]
+                with maybe_span(tr, "chunk_compute", shard=s, zlo=c.zlo,
+                                zhi=c.zhi):
+                    vids = np.arange(c.glo * plane, c.ghi * plane,
+                                     dtype=np.int64)
+                    kslab = pack_value_keys(slab, vids)
+                    ext = _ext_volume(kslab, c, grid.dims,
+                                      halo_lo=halo_lo, halo_hi=halo_hi)
+                    rows = [np.asarray(r) for r in
+                            ops.lower_star_rows_halo(ext, backend=kernel)]
                 st["compute_s"] += time.perf_counter() - t0
 
                 t0 = time.perf_counter()
-                v0 = c.vid0(grid.dims)
-                GR.scatter_rows_chunk(grid, gf, rows[0], rows[1], rows[2],
-                                      rows[3], v0, offsets=offsets)
-                keys[v0: v0 + c.nz * plane] = \
-                    kslab[(c.zlo - c.glo) * plane:
-                          (c.zlo - c.glo) * plane + c.nz * plane]
+                with maybe_span(tr, "chunk_scatter", shard=s, zlo=c.zlo,
+                                zhi=c.zhi):
+                    v0 = c.vid0(grid.dims)
+                    GR.scatter_rows_chunk(grid, gf, rows[0], rows[1],
+                                          rows[2], rows[3], v0,
+                                          offsets=offsets)
+                    keys[v0: v0 + c.nz * plane] = \
+                        kslab[(c.zlo - c.glo) * plane:
+                              (c.zlo - c.glo) * plane + c.nz * plane]
                 st["scatter_s"] += time.perf_counter() - t0
                 for r in (res, shard_res):
                     r.release(c.load_bytes(grid.dims))
@@ -269,6 +302,11 @@ def sharded_stream_front(source: FieldSource, n_shards: int, *,
     rep.overlap_s = max(0.0, serial - rep.wall_s)
     if rep.comm_s > 0:
         rep.overlap_fraction = rep.comm_hidden_s / rep.comm_s
+    mx = global_metrics()
+    mx.counter("stream.chunks").inc(rep.n_chunks)
+    mx.counter("stream.loaded_bytes").inc(rep.total_loaded_bytes)
+    mx.counter("halo.planes").inc(
+        sum(st["halo_planes"] for st in shard_stats))
 
     if stage_report is not None:
         for name in ("load", "compute", "scatter"):

@@ -1,7 +1,8 @@
 """API-surface snapshot: the public names + signatures of
-``repro.pipeline`` and ``repro.serve`` are pinned to
-``tests/data/api_surface.json`` so accidental breakage (a renamed
-argument, a dropped export) fails tier-1 instead of shipping.
+``repro.pipeline``, ``repro.serve``, ``repro.approx`` and
+``repro.obs`` are pinned to ``tests/data/api_surface.json`` so
+accidental breakage (a renamed argument, a dropped export) fails
+tier-1 instead of shipping.
 
 Intentional changes regenerate the snapshot:
 
@@ -16,7 +17,8 @@ import types
 from pathlib import Path
 
 SNAPSHOT = Path(__file__).parent / "data" / "api_surface.json"
-MODULES = ("repro.pipeline", "repro.serve", "repro.approx")
+MODULES = ("repro.pipeline", "repro.serve", "repro.approx",
+           "repro.obs")
 
 
 def _sig(obj) -> str:

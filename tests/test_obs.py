@@ -1,0 +1,420 @@
+"""Tests for the observability layer (repro.obs) and its integrations.
+
+The contract under test: spans record nested, thread-aware intervals
+exported as valid Chrome/Perfetto ``trace_event`` JSON; metrics are
+cheap streaming instruments whose snapshots are copies, never views;
+``TopoRequest(trace=True)`` produces a timeline AND a diagram
+bit-identical to the untraced run (tracing observes, never perturbs);
+StageReport — now a thin view over spans — keeps its public shape
+(``flat()``, ``to_dict()``, front/back/comm attribution)."""
+
+import json
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.diagram import diff_report, same_offdiagonal
+from repro.core.grid import Grid
+from repro.fields import make_field
+from repro.obs import (Counter, Gauge, Histogram, MetricsRegistry, Span,
+                       Trace, current_trace, global_metrics, maybe_span,
+                       set_enabled, spans_overlap, thread_names,
+                       trace_active, validate_trace_events)
+from repro.pipeline import PersistencePipeline, TopoRequest
+from repro.pipeline.stages import StageReport
+from repro.stream import ArraySource, HaloExchange, HaloExchangeTimeout
+
+
+# --------------------------------------------------------------------------
+# Trace / Span
+# --------------------------------------------------------------------------
+
+class TestTrace:
+    def test_span_nesting_and_attrs(self):
+        tr = Trace()
+        with tr.span("outer", depth=0) as sp:
+            sp.args["extra"] = 1
+            with tr.span("inner"):
+                time.sleep(0.001)
+        evs = tr.events()
+        assert [e.name for e in evs] == ["outer", "inner"]
+        outer, inner = evs
+        assert outer.args == {"depth": 0, "extra": 1}
+        # exact time containment: inner nests inside outer
+        assert outer.ts <= inner.ts
+        assert inner.ts + inner.dur <= outer.ts + outer.dur
+        assert inner.dur >= 0.001
+
+    def test_complete_records_measured_interval(self):
+        tr = Trace()
+        t0 = time.perf_counter()
+        time.sleep(0.002)
+        sp = tr.complete("round", t0, round=3)
+        assert sp.dur >= 0.002
+        assert sp.args == {"round": 3}
+        assert tr.events() == [sp]
+
+    def test_instant_marker(self):
+        tr = Trace()
+        sp = tr.instant("mark", k=1)
+        assert sp.dur == 0.0
+        assert tr.events() == [sp]
+
+    def test_threads_get_own_tids_and_names(self):
+        tr = Trace()
+
+        def work():
+            with tr.span("worker_span"):
+                pass
+
+        t = threading.Thread(target=work, name="my-worker")
+        with tr.span("main_span"):
+            t.start()
+            t.join()
+        names = tr.thread_names()
+        assert len(names) == 2
+        assert "my-worker" in names.values()
+        tids = {e.tid for e in tr.events()}
+        assert len(tids) == 2
+
+    def test_to_dict_is_valid_perfetto(self, tmp_path):
+        tr = Trace()
+        with tr.span("a", n=np.int64(3)):
+            with tr.span("b"):
+                pass
+        doc = tr.to_dict()
+        xs = validate_trace_events(doc)
+        assert [e["name"] for e in xs] == ["a", "b"]
+        # numpy attrs must land as plain JSON scalars
+        assert doc["traceEvents"][1]["args"]["n"] == 3
+        path = tmp_path / "t.trace.json"
+        tr.to_perfetto(path)
+        reread = json.loads(path.read_text())
+        validate_trace_events(reread)
+        assert thread_names(reread) == tr.thread_names()
+
+    def test_validator_rejects_partial_overlap(self):
+        bad = {"traceEvents": [
+            {"name": "a", "ph": "X", "pid": 1, "tid": 1, "ts": 0.0,
+             "dur": 100.0},
+            {"name": "b", "ph": "X", "pid": 1, "tid": 1, "ts": 50.0,
+             "dur": 100.0}]}
+        with pytest.raises(ValueError, match="overlap"):
+            validate_trace_events(bad)
+
+    def test_validator_rejects_missing_fields(self):
+        with pytest.raises(ValueError, match="traceEvents"):
+            validate_trace_events({"nope": []})
+        with pytest.raises(ValueError, match="missing"):
+            validate_trace_events(
+                {"traceEvents": [{"name": "a", "ph": "X", "pid": 1}]})
+
+    def test_spans_overlap_query(self):
+        evs = [{"name": "a", "ph": "X", "pid": 1, "tid": 1,
+                "ts": 0.0, "dur": 10.0},
+               {"name": "b", "ph": "X", "pid": 1, "tid": 2,
+                "ts": 5.0, "dur": 10.0},
+               {"name": "c", "ph": "X", "pid": 1, "tid": 3,
+                "ts": 20.0, "dur": 5.0}]
+        assert spans_overlap(evs, "a", "b")
+        assert not spans_overlap(evs, "a", "c")
+        assert not spans_overlap(evs, "a", "missing")
+
+
+class TestActivation:
+    def test_trace_active_is_thread_local(self):
+        tr = Trace()
+        seen = {}
+
+        def other():
+            seen["other"] = current_trace()
+
+        with trace_active(tr):
+            assert current_trace() is tr
+            t = threading.Thread(target=other)
+            t.start()
+            t.join()
+        assert current_trace() is None
+        assert seen["other"] is None       # never leaks across threads
+
+    def test_set_enabled_kill_switch(self):
+        tr = Trace()
+        try:
+            with trace_active(tr):
+                set_enabled(False)
+                assert current_trace() is None
+                set_enabled(True)
+                assert current_trace() is tr
+        finally:
+            set_enabled(True)
+
+    def test_maybe_span_none_is_noop(self):
+        with maybe_span(None, "x") as sp:
+            assert sp is None
+        tr = Trace()
+        with maybe_span(tr, "y", k=1) as sp:
+            assert sp.name == "y"
+        assert [e.name for e in tr.events()] == ["y"]
+
+
+# --------------------------------------------------------------------------
+# metrics
+# --------------------------------------------------------------------------
+
+class TestMetrics:
+    def test_counter_gauge(self):
+        c = Counter("n")
+        c.inc()
+        c.inc(4)
+        assert c.value == 5
+        g = Gauge("depth")
+        g.set(3)
+        g.set(1.5)
+        assert g.value == 1.5
+
+    def test_histogram_percentiles_bounded_error(self):
+        h = Histogram("lat")
+        vals = np.linspace(1e-3, 1.0, 1000)
+        for v in vals:
+            h.observe(float(v))
+        snap = h.snapshot()
+        assert snap["count"] == 1000
+        assert snap["min"] == pytest.approx(1e-3)
+        assert snap["max"] == pytest.approx(1.0)
+        # log-bucket estimate: relative error bounded by the growth
+        # factor (1.6 default)
+        for q, ref in (("p50", 0.5), ("p95", 0.95), ("p99", 0.99)):
+            assert snap[q] == pytest.approx(ref, rel=0.6)
+        assert snap["p50"] <= snap["p95"] <= snap["p99"]
+
+    def test_histogram_empty_and_extremes(self):
+        h = Histogram("x")
+        assert h.snapshot()["count"] == 0
+        assert h.snapshot()["p50"] is None
+        h.observe(0.0)          # underflow bucket
+        h.observe(1e9)          # overflow bucket
+        snap = h.snapshot()
+        assert snap["count"] == 2
+        assert snap["min"] == 0.0 and snap["max"] == 1e9
+
+    def test_registry_get_or_create_and_kind_check(self):
+        reg = MetricsRegistry()
+        c = reg.counter("a")
+        assert reg.counter("a") is c
+        with pytest.raises(TypeError):
+            reg.gauge("a")
+        snap = reg.snapshot()
+        assert snap == {"a": 0}
+        snap["a"] = 99          # snapshots are copies, not views
+        assert reg.counter("a").value == 0
+        reg.reset()
+        assert reg.snapshot() == {}
+
+    def test_global_registry_is_shared(self):
+        a = global_metrics().counter("test_obs.shared")
+        b = global_metrics().counter("test_obs.shared")
+        assert a is b
+
+
+# --------------------------------------------------------------------------
+# StageReport (span-backed view; public shape preserved)
+# --------------------------------------------------------------------------
+
+class TestStageReport:
+    def test_nesting_and_counter_accumulation(self):
+        rep = StageReport("run")
+        with rep.stage("gradient") as r:
+            r.count(n_critical=5)
+            r.count(n_critical=2, planes=1)
+            with r.stage("comm") as c:
+                c.count(comm_total_s=1.0, comm_hidden_s=0.75)
+        assert rep.children[0].name == "gradient"
+        assert rep.children[0].counters == {"n_critical": 7, "planes": 1}
+        assert rep.children[0].children[0].name == "comm"
+        assert rep.children[0].seconds > 0
+
+    def test_front_back_comm_split_and_overlap_fraction(self):
+        rep = StageReport("run")
+        for name in ("order", "gradient", "extract_sort", "d0"):
+            with rep.stage(name) as r:
+                if name == "gradient":
+                    with r.stage("comm") as c:
+                        c.count(comm_total_s=2.0, comm_hidden_s=1.0)
+                time.sleep(0.001)
+        assert rep.front_seconds > 0
+        assert rep.back_seconds > 0
+        assert rep.comm_seconds > 0
+        assert rep.overlap_fraction == pytest.approx(0.5)
+        # no comm counters -> None, not a division error
+        assert StageReport("empty").overlap_fraction is None
+
+    def test_flat_and_to_dict_round_trip(self):
+        rep = StageReport("run")
+        with rep.stage("gradient") as r:
+            r.count(n_critical=3)
+            with r.stage("comm"):
+                pass
+        flat = rep.flat()
+        assert "gradient" in flat and "gradient.comm" in flat
+        assert flat["n_critical"] == 3
+        d = rep.to_dict()
+        # JSON round-trip stable (BENCH_pipeline.json consumers)
+        assert json.loads(json.dumps(d)) == d
+        assert d["children"][0]["counters"] == {"n_critical": 3}
+
+    def test_traced_report_emits_matching_spans(self):
+        tr = Trace()
+        with trace_active(tr):
+            rep = StageReport("run")       # binds the active trace
+        with rep.stage("gradient") as r:
+            r.count(n_critical=4)
+        evs = tr.events()
+        assert [e.name for e in evs] == ["gradient"]
+        assert evs[0].args["n_critical"] == 4
+        assert evs[0].dur == pytest.approx(rep.children[0].seconds,
+                                           rel=0.5, abs=5e-3)
+
+    def test_untraced_report_records_no_spans(self):
+        rep = StageReport("run")
+        assert rep.trace is None
+        with rep.stage("gradient"):
+            pass
+        assert rep.children[0].seconds >= 0
+
+
+# --------------------------------------------------------------------------
+# pipeline integration: TopoRequest(trace=True)
+# --------------------------------------------------------------------------
+
+class TestTracedPipeline:
+    def test_in_memory_traced_run_bit_identical(self):
+        dims = (6, 6, 6)
+        g = Grid.of(*dims)
+        f = make_field("random", dims, seed=3)
+        pipe = PersistencePipeline(backend="np")
+        ref = pipe.run(TopoRequest(field=f, grid=g))
+        res = pipe.run(TopoRequest(field=f, grid=g, trace=True))
+        assert ref.trace is None
+        assert res.trace is not None
+        assert same_offdiagonal(res.diagram, ref.diagram), \
+            diff_report(res.diagram, ref.diagram)
+        for p in range(g.dim + 1):
+            assert np.array_equal(res.diagram.essential_orders(p),
+                                  ref.diagram.essential_orders(p))
+        doc = res.trace.to_dict()
+        validate_trace_events(doc)
+        names = {e["name"] for e in doc["traceEvents"]
+                 if e.get("ph") == "X"}
+        for stage in ("order", "gradient", "extract_sort", "d0",
+                      "d_top", "d1"):
+            assert stage in names, f"missing {stage} span: {names}"
+
+    def test_traced_run_does_not_leak_activation(self):
+        dims = (4, 4, 4)
+        g = Grid.of(*dims)
+        pipe = PersistencePipeline(backend="np")
+        pipe.run(TopoRequest(field=make_field("random", dims, seed=0),
+                             grid=g, trace=True))
+        assert current_trace() is None
+
+    def test_sharded_stream_traced_run(self):
+        dims = (8, 8, 16)
+        g = Grid.of(*dims)
+        f = make_field("wavelet", dims, seed=0)
+        src = ArraySource(f.reshape(dims[::-1]))
+        pipe = PersistencePipeline(backend="jax")
+        ref = pipe.run(TopoRequest(field=f, grid=g))
+        res = pipe.run(TopoRequest(field=src, stream=True, chunk_z=4,
+                                   n_blocks=2, trace=True))
+        assert same_offdiagonal(res.diagram, ref.diagram), \
+            diff_report(res.diagram, ref.diagram)
+        doc = res.trace.to_dict()
+        validate_trace_events(doc)
+        tnames = set(thread_names(doc).values())
+        assert any(n.startswith("shard_") for n in tnames), tnames
+        span_names = {e["name"] for e in doc["traceEvents"]
+                      if e.get("ph") == "X"}
+        for required in ("chunk_load", "chunk_compute", "halo_publish",
+                         "halo_recv"):
+            assert required in span_names, span_names
+
+
+# --------------------------------------------------------------------------
+# halo timeout diagnostics (satellite: name waiter/neighbor/plane)
+# --------------------------------------------------------------------------
+
+class TestHaloTimeoutDiagnostics:
+    def test_timeout_names_waiter_neighbor_and_plane(self):
+        ex = HaloExchange(n_shards=3)
+        with pytest.raises(HaloExchangeTimeout) as ei:
+            ex.recv(2, "first", timeout=0.01, waiter=1, plane_z=7)
+        msg = str(ei.value)
+        assert "shard 1 waiting" in msg
+        assert "from shard 2" in msg
+        assert "'first'" in msg
+        assert "z=7" in msg
+
+    def test_timeout_without_diagnostics_still_names_neighbor(self):
+        ex = HaloExchange(n_shards=2)
+        with pytest.raises(HaloExchangeTimeout, match="from shard 0"):
+            ex.recv(0, "last", timeout=0.01)
+
+
+# --------------------------------------------------------------------------
+# service + cache telemetry
+# --------------------------------------------------------------------------
+
+class TestServiceTelemetry:
+    def test_plan_cache_global_counters_move(self):
+        from repro.pipeline import PlanCache
+        before = global_metrics().snapshot()
+        cache = PlanCache()
+        pipe = PersistencePipeline(backend="np", plan_cache=cache)
+        dims = (4, 4, 4)
+        g = Grid.of(*dims)
+        req = TopoRequest(field=make_field("random", dims, seed=0), grid=g)
+        pipe.run(req)
+        pipe.run(req)
+        after = global_metrics().snapshot()
+        assert after["plan_cache.misses"] >= before.get(
+            "plan_cache.misses", 0) + 1
+        assert after["plan_cache.hits"] >= before.get(
+            "plan_cache.hits", 0) + 1
+
+    def test_topo_service_stats_snapshot_isolated(self):
+        from repro.serve import TopoService, stats_payload
+        dims = (4, 4, 4)
+        g = Grid.of(*dims)
+        with TopoService(backend="np", max_batch=2) as svc:
+            futs = [svc.submit(TopoRequest(
+                field=make_field("random", dims, seed=s), grid=g))
+                for s in range(3)]
+            for fu in futs:
+                fu.result(timeout=60)
+            snap = svc.stats()
+            blob = stats_payload(svc)
+        assert snap["requests"] == 3
+        assert snap["metrics"]["request_latency_s"]["count"] == 3
+        assert snap["metrics"]["queue_depth"] == 0
+        # the snapshot is a copy: mutating it never touches live state
+        snap["requests"] = 10**6
+        snap["metrics"]["queue_depth"] = -1
+        assert svc.stats()["requests"] == 3
+        # attribute access on the live stats object still works
+        assert svc.stats.errors == 0
+        wire = json.loads(blob.decode("utf-8"))
+        assert wire["requests"] == 3
+        assert "request_latency_s" in wire["metrics"]
+
+    def test_traced_request_counted_by_service(self):
+        from repro.serve import TopoService
+        dims = (4, 4, 4)
+        g = Grid.of(*dims)
+        f = make_field("random", dims, seed=0)
+        with TopoService(backend="np", max_batch=2) as svc:
+            res = svc.submit(TopoRequest(field=f, grid=g,
+                                         trace=True)).result(timeout=60)
+            assert res.trace is not None
+            assert svc.stats()["traced_requests"] == 1
