@@ -15,6 +15,8 @@ BENCH_gradient.json).
         [--quick] [--out BENCH_approx.json]
     PYTHONPATH=src python -m benchmarks.report --section scale \
         [--quick] [--out BENCH_scale.json]
+    PYTHONPATH=src python -m benchmarks.report --section serve \
+        [--quick] [--out BENCH_serve.json]
 
 The pipeline section runs ``PersistencePipeline`` over a fixed field set
 and dumps every ``StageReport`` (nested per-stage wall times + algorithm
@@ -29,7 +31,14 @@ strong, one forced-host-device subprocess per point) with
 slots-normalized efficiency and the halo overlap fraction, cross-checks
 bit-identity against the in-memory diagram, and in full mode records a
 256^3 memmap-streamed sharded run and gates weak-scaling efficiency at
-4 shards >= 60%.
+4 shards >= 60%.  The serve section is the cached-serving traffic-storm
+harness (``repro.cache`` + ``TopoService``): cold-miss vs warm-hit
+latency distributions, epsilon-aware reuse (an exact or tighter-bound
+entry answering a looser epsilon request), progressive refinement
+upgrading its cache entry in place, a burst storm under an admission
+policy (degraded count > 0, zero unhandled errors), and a shed probe —
+with every served-from-cache result either bit-identical to (exact) or
+bound-checked against (approximate) a fresh in-benchmark computation.
 """
 
 import argparse
@@ -940,13 +949,254 @@ def obs_bench(out_path, quick=False, trace_out=None):
     return doc
 
 
+def _serve_bench_fields(dims, n, seed=7):
+    """``n`` distinct smooth fields of one shape: the approx-bench
+    two-blob base plus a per-field low-frequency perturbation, so every
+    field has its own cache key while staying coarse-level-friendly
+    (degraded requests can actually be answered from a coarse level)."""
+    import numpy as np
+    base = _approx_bench_field(dims)
+    nz, ny, nx = dims[::-1]
+    z, y, x = np.meshgrid(np.linspace(0, 1, nz), np.linspace(0, 1, ny),
+                          np.linspace(0, 1, nx), indexing="ij")
+    out = []
+    for i in range(n):
+        ph = 0.37 * (i + seed)
+        f = base + 0.05 * np.sin(2 * np.pi * (x + ph)) \
+            * np.cos(2 * np.pi * (y - ph))
+        out.append(np.ascontiguousarray(f, dtype=np.float32))
+    return out
+
+
+def _pctl(xs, q):
+    xs = sorted(xs)
+    return xs[min(len(xs) - 1, int(q * len(xs)))]
+
+
+def serve_bench(out_path, quick=False):
+    """Cached-serving traffic storm (repro.cache); BENCH_serve.json.
+
+    Phases, each feeding the artifact *and* an in-benchmark gate:
+
+    1. **miss vs hit latency** — closed-loop single requests against a
+       cache-enabled ``TopoService``; cold misses compute + store, warm
+       repeats decode the stored wire payload.  Full mode gates hit
+       p50 at >= 10x faster than miss p50.
+    2. **epsilon-aware reuse** — an epsilon request served by the
+       *exact* entry stored in phase 1 (bound 0 serves any budget), and
+       a looser-epsilon request served by a previously stored
+       tighter-bound *approximate* entry.  Gate: both are cache hits.
+    3. **progressive upgrade** — a progressive submit refines
+       coarse-to-fine and each refinement tightens the cache entry in
+       place; a later exact request hits the upgraded entry.
+    4. **storm** — a burst of mixed requests (exact / epsilon /
+       repeats) against a small ``degrade_depth`` with shedding
+       disabled: under pressure deadline-less requests degrade to
+       bounded-error answers.  Gates: degraded > 0, unhandled errors
+       == 0, hits > 0.
+    5. **shed probe** — a zero-threshold policy rejects with
+       ``ServiceOverloadedError`` + retry hint (typed, not a crash).
+
+    Every result served from the cache is validated against a fresh
+    computation: exact payloads byte-identical, approximate diagrams
+    within their stamped bound (``bottleneck_feasible``)."""
+    import numpy as np
+
+    from repro.approx import bottleneck_feasible
+    from repro.cache import AdmissionPolicy, DiagramCache, \
+        ServiceOverloadedError
+    from repro.pipeline import PersistencePipeline, TopoRequest
+    from repro.serve import TopoService
+
+    dims = (16, 16, 16) if quick else (48, 48, 48)
+    n_fields = 4 if quick else 8
+    hit_reps = 5 if quick else 20
+    storm_unique = 6 if quick else 12
+    storm_total = 30 if quick else 96
+
+    fields = _serve_bench_fields(dims, max(n_fields, storm_unique))
+    pipe = PersistencePipeline(backend="jax")
+    cache = DiagramCache(max_bytes=256 << 20)
+
+    # -- phase 1: miss vs hit latency (max_wait_s=0: no batching pad) --
+    miss_s, hit_s = [], []
+    with TopoService(pipe, cache=cache, max_wait_s=0.0) as svc:
+        svc.diagram(fields[0])                    # warm: compile
+        cache.clear()
+        for f in fields[:n_fields]:
+            t0 = time.perf_counter()
+            svc.diagram(f)
+            miss_s.append(time.perf_counter() - t0)
+        for _ in range(hit_reps):
+            for f in fields[:n_fields]:
+                t0 = time.perf_counter()
+                svc.diagram(f)
+                hit_s.append(time.perf_counter() - t0)
+        phase1 = dict(svc.stats.as_dict())
+    assert phase1["cache_hits"] == n_fields * hit_reps, phase1
+    # exact-hit validation: the stored payload is byte-identical to a
+    # fresh computation of the same request
+    key0 = TopoRequest(field=fields[0]).cache_key()
+    fresh = pipe.run(TopoRequest(field=fields[0]))
+    assert cache.peek(key0).payload == fresh.to_bytes(), \
+        "cached exact payload differs from a fresh computation"
+
+    # -- phase 2: epsilon-aware reuse ----------------------------------
+    frange = float(np.ptp(fields[0]))
+    # 10% of range engages the coarse hierarchy at the full-mode 48^3
+    # (the coarsest level's provable bound is ~7% of range there), so
+    # the 20% request is answered by a stored *approximate* entry
+    eps_small, eps_big = 0.10 * frange, 0.20 * frange
+    reuse = {}
+    with TopoService(pipe, cache=cache, max_wait_s=0.0) as svc:
+        # (a) the exact phase-1 entry answers an epsilon request
+        res_a = svc.diagram(TopoRequest(field=fields[0], epsilon=eps_big))
+        reuse["exact_serves_epsilon"] = svc.stats.cache_hits == 1
+        assert reuse["exact_serves_epsilon"], svc.stats.as_dict()
+        assert res_a.error_bound in (None, 0.0)   # got the exact answer
+        # (b) a tighter approximate entry answers a looser request:
+        # compute+store at eps_small on an uncached field, re-ask at
+        # eps_big — served from the stored entry iff its stamped bound
+        # fits the looser budget
+        f_new = fields[n_fields]    # never touched by phase 1
+        r1 = svc.diagram(TopoRequest(field=f_new, epsilon=eps_small))
+        hits_before = svc.stats.cache_hits
+        r2 = svc.diagram(TopoRequest(field=f_new, epsilon=eps_big))
+        reuse["tighter_bound_serves_looser"] = \
+            svc.stats.cache_hits == hits_before + 1
+        assert reuse["tighter_bound_serves_looser"], svc.stats.as_dict()
+        reuse["stored_bound"] = r1.error_bound
+        # approximate-hit validation: within the stamped bound of a
+        # fresh exact computation
+        exact_new = pipe.run(TopoRequest(field=f_new))
+        bound = (r2.error_bound or 0.0) + 1e-9
+        ok = all(bottleneck_feasible(
+            r2.pairs(p, min_persistence=0),
+            exact_new.pairs(p, min_persistence=0), bound)
+            for p in range(3))
+        assert ok, "cached approximate result violates its bound"
+        reuse["bound_checked"] = ok
+
+    # -- phase 3: progressive refinement upgrades the entry in place ---
+    f_prog = _serve_bench_fields(dims, 1, seed=101)[0]
+    with TopoService(pipe, cache=cache, max_wait_s=0.0) as svc:
+        ups_before = cache.stats()["upgrades"]
+        svc.submit(TopoRequest(field=f_prog, progressive=True)).result()
+        upgrades = cache.stats()["upgrades"] - ups_before
+        hits_before = svc.stats.cache_hits
+        svc.diagram(f_prog)      # exact request hits the refined entry
+        prog_hit = svc.stats.cache_hits == hits_before + 1
+    assert upgrades > 0, "progressive refinement never tightened its entry"
+    assert prog_hit, "exact request missed the fully-refined entry"
+
+    # -- phase 4: the storm --------------------------------------------
+    storm_fields = fields[:storm_unique]
+    policy = AdmissionPolicy(degrade_depth=2, shed_depth=None,
+                             degrade_frac=0.10)
+    storm_cache = DiagramCache(max_bytes=256 << 20)
+    rng = np.random.default_rng(3)
+    kinds = rng.integers(0, 3, size=storm_total)      # 0 exact, 1 eps, 2 rep
+    prog = set(range(0, storm_total, 16))             # sprinkle progressive
+    t0 = time.perf_counter()
+    with TopoService(pipe, cache=storm_cache, admission=policy) as svc:
+        futs = []
+        for i in range(storm_total):
+            f = storm_fields[i % storm_unique]
+            if i in prog:    # preview-then-refine client in the mix
+                futs.append(svc.submit(
+                    TopoRequest(field=f, progressive=True)))
+            elif kinds[i] == 1:
+                futs.append(svc.submit(
+                    TopoRequest(field=f, epsilon=eps_big)))
+            else:   # exact (and its repeats: the cache-hit population)
+                futs.append(svc.submit(f))
+        results = [ft.result() for ft in futs]    # no exception may escape
+        storm_stats = dict(svc.stats.as_dict())
+    storm_s = time.perf_counter() - t0
+    assert storm_stats["errors"] == 0, storm_stats
+    assert storm_stats["degraded"] > 0, \
+        f"storm never triggered degradation: {storm_stats}"
+    assert storm_stats["cache_hits"] > 0, storm_stats
+    # storm validation: every result is exact-identical or within its
+    # stamped bound vs a fresh exact computation of its field
+    exact_by_id = {id(f): pipe.run(TopoRequest(field=f))
+                   for f in storm_fields}
+    checked = dict(exact=0, bounded=0)
+    for i, res in enumerate(results):
+        ex = exact_by_id[id(storm_fields[i % storm_unique])]
+        b = res.error_bound or 0.0
+        if b == 0.0:
+            same = all(np.array_equal(res.pairs(p, min_persistence=0),
+                                      ex.pairs(p, min_persistence=0))
+                       for p in range(3))
+            assert same, f"storm result {i}: exact answer differs"
+            checked["exact"] += 1
+        else:
+            ok = all(bottleneck_feasible(res.pairs(p, min_persistence=0),
+                                         ex.pairs(p, min_persistence=0),
+                                         b + 1e-9)
+                     for p in range(3))
+            assert ok, f"storm result {i}: bound {b} violated"
+            checked["bounded"] += 1
+
+    # -- phase 5: shed probe -------------------------------------------
+    shed_policy = AdmissionPolicy(degrade_depth=0, shed_depth=0)
+    with TopoService(pipe, admission=shed_policy) as svc:
+        try:
+            svc.diagram(fields[0])
+            raise AssertionError("zero-threshold policy failed to shed")
+        except ServiceOverloadedError as e:
+            shed = {"queue_depth": e.queue_depth,
+                    "retry_after_s": e.retry_after_s,
+                    "shed_count": svc.stats.shed}
+    assert shed["shed_count"] == 1
+
+    miss_p50, hit_p50 = _pctl(miss_s, 0.5), _pctl(hit_s, 0.5)
+    doc = bench_doc(
+        "ddms-serve-bench/v1", quick=quick,
+        dims=list(dims),
+        latency={"miss": {"n": len(miss_s), "p50_s": miss_p50,
+                          "p99_s": _pctl(miss_s, 0.99)},
+                 "hit": {"n": len(hit_s), "p50_s": hit_p50,
+                         "p99_s": _pctl(hit_s, 0.99)},
+                 "hit_speedup_p50": miss_p50 / hit_p50},
+        epsilon_reuse=reuse,
+        progressive={"upgrades": upgrades, "exact_hit_after": prog_hit},
+        storm={"requests": storm_total, "unique_fields": storm_unique,
+               "progressive_requests": len(prog),
+               "seconds": storm_s, "stats": storm_stats,
+               "hit_rate": storm_stats["cache_hits"] / storm_total,
+               "validated": checked},
+        shed=shed,
+        cache=cache.stats())
+    write_bench(out_path, doc)
+    print(f"wrote {out_path}: miss p50={miss_p50*1e3:.1f}ms "
+          f"hit p50={hit_p50*1e3:.2f}ms "
+          f"({miss_p50/hit_p50:.0f}x); storm {storm_total} reqs in "
+          f"{storm_s:.2f}s: hits={storm_stats['cache_hits']} "
+          f"degraded={storm_stats['degraded']} errors=0; "
+          f"validated exact={checked['exact']} bounded={checked['bounded']}")
+    if not quick:
+        assert miss_p50 >= 10.0 * hit_p50, \
+            (f"cache hits not >= 10x faster: miss p50 {miss_p50*1e3:.2f}ms "
+             f"vs hit p50 {hit_p50*1e3:.2f}ms")
+        # full mode must demonstrate *approximate*-entry reuse, not just
+        # exact-serves-everything (quick's tiny grid may lack a coarse
+        # level that qualifies)
+        assert reuse["stored_bound"], \
+            "phase 2 never stored a genuinely approximate entry"
+        assert checked["bounded"] > 0, \
+            "storm produced no bound-checked approximate answers"
+    return doc
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--dir", default="results/dryrun")
     ap.add_argument("--section", default="all",
                     choices=["all", "roofline", "dryrun", "pipeline",
                              "gradient", "stream", "api", "approx",
-                             "backend", "scale", "obs"])
+                             "backend", "scale", "obs", "serve"])
     ap.add_argument("--out", default=None,
                     help="output path for --section "
                          "pipeline/gradient/stream/api/approx/backend")
@@ -981,6 +1231,9 @@ def main():
     if args.section == "obs":
         obs_bench(args.out or "BENCH_obs.json", quick=args.quick,
                   trace_out=args.trace_out)
+        return
+    if args.section == "serve":
+        serve_bench(args.out or "BENCH_serve.json", quick=args.quick)
         return
     recs = load(args.dir)
     if args.section in ("all", "dryrun"):

@@ -15,8 +15,9 @@ sys.path.insert(0, "src")
 import jax  # noqa: E402
 import numpy as np  # noqa: E402
 
+from repro.cache import DiagramCache  # noqa: E402
 from repro.core.grid import Grid  # noqa: E402
-from repro.pipeline import PersistencePipeline  # noqa: E402
+from repro.serve import TopoService  # noqa: E402
 from repro.data.pipeline import DataConfig, batch_at  # noqa: E402
 from repro.launch.train import RunConfig, run  # noqa: E402
 from repro.models import transformer as T  # noqa: E402
@@ -25,9 +26,13 @@ from repro.train.optimizer import OptConfig, init_opt_state  # noqa: E402
 from repro.train.train_step import StepConfig, make_train_step  # noqa: E402
 
 
-def loss_landscape_pd(cfg, params, batch, step_cfg, n=12, radius=0.05,
+def loss_landscape_pd(cfg, params, batch, step_cfg, svc, n=12, radius=0.05,
                       seed=0):
-    """2-D random-plane loss-landscape slice -> persistence diagram D0/D1."""
+    """2-D random-plane loss-landscape slice -> persistence diagram D0/D1.
+
+    The diagram is answered by the shared cache-enabled ``TopoService``:
+    a repeated check of an unchanged landscape (same sampled values) is
+    a cache hit — the monitor then costs one decode, not a recompute."""
     from repro.train.train_step import loss_fn
     k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
     d1 = jax.tree_util.tree_map(
@@ -46,9 +51,8 @@ def loss_landscape_pd(cfg, params, batch, step_cfg, n=12, radius=0.05,
         for j, b in enumerate(np.linspace(-1, 1, n)):
             grid_vals[i, j] = float(at(a, b))
     g = Grid.of(n, n)
-    res = PersistencePipeline(backend="np").diagram(
-        grid_vals.reshape(-1), grid=g)
-    d0 = res.diagram.points_value(0, grid_vals.reshape(-1))
+    res = svc.diagram(grid_vals.reshape(-1), grid=g)
+    d0 = res.pairs(0, min_persistence=0)
     d0 = d0[d0[:, 0] != d0[:, 1]]
     return grid_vals, d0
 
@@ -74,18 +78,36 @@ def main():
     opt = init_opt_state(params)
     step_fn = jax.jit(make_train_step(cfg, opt_cfg, step_cfg))
 
-    for step in range(args.steps):
-        batch = batch_at(dc, step)
-        params, opt, m = step_fn(params, opt, batch)
-        if step % 10 == 0:
-            print(f"step {step}: loss {float(m['loss']):.4f}")
-        if (step + 1) % args.monitor_every == 0:
-            vals, d0 = loss_landscape_pd(cfg, params, batch, step_cfg,
-                                         n=args.landscape_n)
-            pers = (d0[:, 1] - d0[:, 0]) if len(d0) else np.zeros(1)
-            print(f"  [topo] loss-landscape slice: {len(d0)} D0 pairs, "
-                  f"max persistence {pers.max():.4f} "
-                  f"(roughness of the local landscape)")
+    # one cache-enabled service answers every topology check: distinct
+    # landscapes compute + store, a repeated check is a decode-only hit
+    with TopoService(backend="np", cache=DiagramCache(max_bytes=32 << 20),
+                     max_wait_s=0.0) as svc:
+        vals = d0 = None
+        for step in range(args.steps):
+            batch = batch_at(dc, step)
+            params, opt, m = step_fn(params, opt, batch)
+            if step % 10 == 0:
+                print(f"step {step}: loss {float(m['loss']):.4f}")
+            if (step + 1) % args.monitor_every == 0:
+                vals, d0 = loss_landscape_pd(cfg, params, batch, step_cfg,
+                                             svc, n=args.landscape_n)
+                pers = (d0[:, 1] - d0[:, 0]) if len(d0) else np.zeros(1)
+                print(f"  [topo] loss-landscape slice: {len(d0)} D0 pairs, "
+                      f"max persistence {pers.max():.4f} "
+                      f"(roughness of the local landscape)")
+        if vals is not None:
+            # re-check the final landscape: same sampled values, same
+            # cache key — answered from the stored payload
+            g = Grid.of(args.landscape_n, args.landscape_n)
+            again = svc.diagram(vals.reshape(-1), grid=g)
+            p2 = again.pairs(0, min_persistence=0)
+            p2 = p2[p2[:, 0] != p2[:, 1]]
+            assert np.array_equal(p2, d0)
+            s = svc.stats.as_dict()
+            print(f"  [topo] re-check of the final landscape: cache "
+                  f"{s['cache_hits']} hit(s) / {s['cache_misses']} "
+                  f"miss(es) — repeated monitors are decode-only")
+            assert s["cache_hits"] >= 1
     print("done")
 
 

@@ -1,0 +1,41 @@
+"""Epsilon-aware diagram cache + admission control (the serving layer).
+
+The production-serving counterpart of the compute engine: TopoService
+recomputed every request from scratch; this package turns the PR 5
+approximation guarantee into a *cache-reuse predicate* and queue
+pressure into *graceful degradation*:
+
+- :mod:`fingerprint` — stable content-addressed keys: field
+  fingerprints (ndarray byte digests, ``FieldSource.fingerprint()``)
+  composed with the result-affecting request knobs.  Execution knobs
+  (backend, sharding, streaming) are excluded — diagrams are
+  bit-identical across them, so cross-backend hits are free.
+- :mod:`store` — :class:`DiagramCache`, a thread-safe byte-budgeted
+  LRU over ``DiagramResult`` wire payloads with epsilon-aware lookup
+  (``get(key, epsilon)`` serves any entry whose ``error_bound <=
+  epsilon``; exact entries serve everything) and monotone in-place
+  upgrades (progressive refinement tightens entries, never loosens).
+- :mod:`admission` — :class:`AdmissionPolicy`: under queue pressure,
+  deadline-less exact requests degrade to bounded-error answers
+  instead of queueing; past a hard threshold new work is rejected with
+  a typed :class:`ServiceOverloadedError` carrying a retry hint.
+
+Front door: ``TopoService(cache=..., admission=...)`` (``repro.serve``)
+probes the cache before grouping, stores after delivery, and applies
+the policy at submit time; ``TopoRequest(cache=False)`` opts a single
+request out.  The pieces are also independently usable::
+
+    from repro.cache import DiagramCache, request_key
+
+    cache = DiagramCache(max_bytes=256 << 20)
+    key = request_key(TopoRequest(field=f))
+    cache.put(key, result.to_bytes())
+    hit = cache.get(key, epsilon=0.1)    # exact entry serves any eps
+"""
+
+from .admission import (ACCEPT, DEGRADE, SHED,  # noqa: F401
+                        AdmissionPolicy, ServiceOverloadedError,
+                        degrade_request)
+from .fingerprint import (KEY_SCHEMA, CacheKeyError,  # noqa: F401
+                          fingerprint_array, fingerprint_field, request_key)
+from .store import CacheEntry, DiagramCache  # noqa: F401

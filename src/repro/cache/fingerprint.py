@@ -1,0 +1,97 @@
+"""Content-addressed cache keys for fields and diagram requests.
+
+The diagram cache serves a request from a stored result only when the
+two are guaranteed to describe the *same answer*.  That guarantee has
+two halves:
+
+- :func:`fingerprint_field` — a stable content identity for the field
+  payload.  ndarrays digest their bytes (sha256 over dtype + shape +
+  data); :class:`~repro.stream.chunks.FieldSource`s answer through
+  their own ``fingerprint()`` method (array digest, generator
+  name+dims+seed, file path+size+mtime, decimated delegation — see
+  ``repro.stream.chunks``).  Sources that cannot identify their content
+  raise :class:`CacheKeyError`, the explicit opt-out: such requests
+  compute normally and are never cached.
+- :func:`request_key` — the field fingerprint composed with every
+  *result-affecting* request knob: grid dims, (defaulted) homology
+  dims, and the query defaults (``min_persistence`` / ``top_k``) that
+  ride in the serialized payload.  Execution knobs are deliberately
+  **excluded**: backend, sandwich backend, n_blocks/distributed,
+  streaming and chunking produce bit-identical diagrams (the repo-wide
+  parity contract), so a result computed on any of them answers the
+  same request on all of them — cross-backend cache hits are free.
+  ``epsilon`` is also excluded: it is a *lookup-time predicate*
+  (``DiagramCache.get(key, epsilon)``), not part of the identity — one
+  key indexes the best-known answer for the field, and any entry whose
+  stamped ``error_bound <= epsilon`` serves the request.
+"""
+
+from __future__ import annotations
+
+import hashlib
+
+import numpy as np
+
+# the one CacheKeyError, defined next to the sources that raise it and
+# re-exported here as the cache-facing name
+from repro.stream.chunks import CacheKeyError  # noqa: F401
+
+#: bump when the key schema changes so stale persisted keys never alias
+KEY_SCHEMA = 1
+
+
+def fingerprint_array(a: np.ndarray) -> str:
+    """sha256 content digest of an ndarray (dtype + shape + bytes)."""
+    a = np.ascontiguousarray(a)
+    h = hashlib.sha256()
+    h.update(a.dtype.str.encode("ascii"))
+    h.update(repr(a.shape).encode("ascii"))
+    h.update(a.tobytes())
+    return f"array:{h.hexdigest()}"
+
+
+def fingerprint_field(field) -> str:
+    """Stable content identity of a request's field payload.
+
+    ndarrays (and anything :func:`np.asarray` can take) digest their
+    bytes; sources answer through ``fingerprint()``.  Raises
+    :class:`CacheKeyError` for stripped requests (``field=None``) and
+    sources without a ``fingerprint`` method."""
+    if field is None:
+        raise CacheKeyError(
+            "request carries no field payload (stripped record?)")
+    if isinstance(field, np.ndarray):
+        return fingerprint_array(field)
+    fp = getattr(field, "fingerprint", None)
+    if fp is not None:
+        out = fp()   # may itself raise CacheKeyError (anonymous fn, ...)
+        if not isinstance(out, str) or not out:
+            raise CacheKeyError(
+                f"{type(field).__name__}.fingerprint() returned "
+                f"{out!r}, want a non-empty str")
+        return out
+    if hasattr(field, "read_slab") and hasattr(field, "dims"):
+        raise CacheKeyError(
+            f"source {type(field).__name__} has no fingerprint() "
+            f"method; implement one (see repro.stream.FieldSource) or "
+            f"submit with cache=False")
+    return fingerprint_array(np.asarray(field))
+
+
+def request_key(request) -> tuple:
+    """THE canonical cache key of a :class:`TopoRequest`.
+
+    ``(schema, field fingerprint, grid dims, homology dims,
+    min_persistence, top_k)`` — resolved first, so grid inference and
+    the homology-dims default (all dims) are canonical: two requests
+    that decode to the same answer get the same key however they were
+    spelled.  Raises :class:`CacheKeyError` when the field cannot be
+    fingerprinted."""
+    req = request.resolve()
+    grid = req.grid
+    hdims = req.homology_dims if req.homology_dims is not None \
+        else tuple(range(grid.dim + 1))
+    mp = None if req.min_persistence is None else float(req.min_persistence)
+    tk = None if req.top_k is None else int(req.top_k)
+    return (KEY_SCHEMA, fingerprint_field(req.field), tuple(grid.dims),
+            tuple(hdims), mp, tk)

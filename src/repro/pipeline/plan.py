@@ -205,6 +205,20 @@ class Plan:
         return (self.dims, self.backend, self.n_blocks)
 
     @property
+    def result_key(self) -> tuple:
+        """The plan facets that determine result *content*: grid dims +
+        homology dims.  Backend, sandwich engine, sharding, streaming
+        and chunking are excluded — their diagrams are bit-identical
+        (the repo-wide parity contract), which is why the diagram cache
+        (``repro.cache``) serves across all of them from one entry;
+        approximation knobs are excluded too, because epsilon is a
+        lookup-time predicate on the stored entry's ``error_bound``,
+        not part of the identity.  The request-level analogue (adding
+        the field fingerprint and query defaults) is
+        ``TopoRequest.cache_key()``."""
+        return (self.dims, self.homology_dims)
+
+    @property
     def grid(self) -> Grid:
         return Grid.of(*self.dims)
 

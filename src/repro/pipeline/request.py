@@ -106,6 +106,14 @@ class TopoRequest:
         ``run`` returns the final (tightest) result, ``TopoService``
         resolves a preview future first, and ``repro.approx.refine``
         yields every intermediate.
+    cache : diagram-cache participation (``repro.cache``) when served
+        through a cache-enabled ``TopoService``: ``None`` (default)
+        participates when the service has a cache, ``False`` opts this
+        request out (no probe, no store), ``True`` *requires* a cache
+        key — a non-fingerprintable field then fails the request with
+        :class:`~repro.cache.CacheKeyError` instead of silently
+        recomputing.  Never part of the :class:`Plan` (it cannot change
+        the result, only where it comes from).
     trace : record a span timeline for this run (``repro.obs``): stage
         spans, per-chunk loader/compute/scatter spans, halo
         publishes/receives, and D0/D1 pairing rounds, across every
@@ -135,6 +143,7 @@ class TopoRequest:
     epsilon: Optional[float] = None
     deadline_s: Optional[float] = None
     progressive: bool = False
+    cache: Optional[bool] = None
     trace: bool = False
     include_report: bool = True
 
@@ -235,6 +244,15 @@ class TopoRequest:
     def replace(self, **kw) -> "TopoRequest":
         """``dataclasses.replace`` convenience (requests are frozen)."""
         return dataclasses.replace(self, **kw)
+
+    def cache_key(self) -> tuple:
+        """The canonical content-addressed cache key of this request
+        (``repro.cache.request_key``): field fingerprint + grid dims +
+        homology dims + query defaults.  Raises
+        :class:`~repro.cache.CacheKeyError` when the field cannot be
+        fingerprinted."""
+        from repro.cache.fingerprint import request_key
+        return request_key(self)
 
     @property
     def field_shape(self) -> tuple:

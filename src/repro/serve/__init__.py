@@ -1,3 +1,6 @@
+from repro.cache import (AdmissionPolicy, DiagramCache,  # noqa: F401
+                         ServiceOverloadedError)
+
 from .engine import (generate, serve_topo, stats_payload,  # noqa: F401
                      topo_payload)
 from .topo_service import (ProgressiveFuture, ServiceStats,  # noqa: F401

@@ -21,6 +21,18 @@ With ``wire=True`` futures resolve to *serialized payloads* (the
 versioned ``DiagramResult`` wire format via ``repro.serve.engine``)
 instead of live objects — the RPC-boundary mode.
 
+With ``cache=`` the service fronts the epsilon-aware diagram cache
+(``repro.cache``): every cacheable request is probed *before* batching
+— an exact entry serves any request on its key, an approximate entry
+serves any request whose epsilon budget covers its stamped
+``error_bound`` — and every computed result is stored after delivery
+(progressive refinements upgrade their entry in place, so the cache
+monotonically tightens).  With ``admission=`` the service applies
+load-shedding at submit time: under queue pressure deadline-less exact
+requests degrade to bounded-error answers instead of queueing, and
+past the hard threshold new work is rejected with a typed
+:class:`~repro.cache.ServiceOverloadedError` carrying a retry hint.
+
 Failure isolation: a request that blows up only fails its *own* future.
 A failed batch is re-served request-by-request (so a poisoned field
 cannot take its batch siblings down), results land through
@@ -28,8 +40,7 @@ cancellation-tolerant setters, and the worker thread survives any
 exception.
 
 This is deliberately dependency-free (queue + thread): the seam where a
-real RPC front (async collectives, multi-host dispatch, result caching)
-plugs in later.
+real RPC front (async collectives, multi-host dispatch) plugs in later.
 """
 
 from __future__ import annotations
@@ -43,6 +54,9 @@ from typing import Dict, List, Optional, Sequence, Union
 
 import numpy as np
 
+from repro.cache import (AdmissionPolicy, CacheKeyError, DiagramCache,
+                         ServiceOverloadedError, degrade_request)
+from repro.cache.admission import DEGRADE, SHED
 from repro.core.grid import Grid
 from repro.obs.metrics import MetricsRegistry
 from repro.pipeline import (DiagramResult, PersistencePipeline,
@@ -68,7 +82,13 @@ class ServiceStats:
     stream_requests: int = 0         # FieldSource requests (out-of-core)
     progressive_requests: int = 0    # preview-then-refine submits
     traced_requests: int = 0         # requests that carried trace=True
+    cache_hits: int = 0              # answered from the diagram cache
+    cache_misses: int = 0            # probed the cache, had to compute
+    degraded: int = 0                # rewritten to bounded-error on submit
+    shed: int = 0                    # rejected with ServiceOverloadedError
     metrics: Optional[MetricsRegistry] = field(
+        default=None, repr=False, compare=False)
+    cache: Optional[DiagramCache] = field(
         default=None, repr=False, compare=False)
 
     def as_dict(self) -> Dict[str, int]:
@@ -78,13 +98,18 @@ class ServiceStats:
                     retried=self.retried,
                     stream_requests=self.stream_requests,
                     progressive_requests=self.progressive_requests,
-                    traced_requests=self.traced_requests)
+                    traced_requests=self.traced_requests,
+                    cache_hits=self.cache_hits,
+                    cache_misses=self.cache_misses,
+                    degraded=self.degraded, shed=self.shed)
 
     def snapshot(self) -> Dict[str, object]:
         """Counters + metric summaries, as freshly-built plain dicts."""
         out: Dict[str, object] = dict(self.as_dict())
         if self.metrics is not None:
             out["metrics"] = self.metrics.snapshot()
+        if self.cache is not None:
+            out["cache"] = self.cache.stats()
         return out
 
     def __call__(self) -> Dict[str, object]:
@@ -124,6 +149,8 @@ class _Request:
     plain: bool                      # bare ndarray, default options
     future: Future = field(default_factory=Future)
     submitted: float = field(default_factory=time.perf_counter)
+    degraded: bool = False           # admission rewrote it to bounded-error
+    key: Optional[tuple] = None      # cache key (set by the worker probe)
 
     def __post_init__(self):
         if self.progressive and not isinstance(self.future,
@@ -169,25 +196,52 @@ class TopoService:
         at least one request (latency/throughput knob).
     wire : resolve futures to serialized wire payloads (bytes) instead
         of live :class:`DiagramResult` objects.
+    cache : the epsilon-aware diagram cache (``repro.cache``): a
+        :class:`DiagramCache` instance, ``True`` for a default-budget
+        one, or None (default) to serve uncached.  Cache hits resolve
+        to *decoded wire payloads* (bit-exact arrays/queries, no live
+        ``Diagram`` object and no ``report``) — or to the raw payload
+        bytes under ``wire=True``.
+    admission : an :class:`~repro.cache.AdmissionPolicy` applied at
+        submit time (degrade deadline-less requests under pressure,
+        shed past the hard threshold), or None (default) to admit
+        everything.
     """
 
     def __init__(self, pipeline: Optional[PersistencePipeline] = None, *,
                  max_batch: int = 8, max_wait_s: float = 0.002,
-                 wire: bool = False, **pipeline_kw):
+                 wire: bool = False,
+                 cache: Union[DiagramCache, bool, None] = None,
+                 admission: Optional[AdmissionPolicy] = None,
+                 **pipeline_kw):
         if max_batch < 1:
             raise ValueError(f"max_batch must be >= 1, got {max_batch}")
         self.pipeline = pipeline or PersistencePipeline(**pipeline_kw)
         self.max_batch = max_batch
         self.max_wait_s = max_wait_s
         self.wire = wire
+        if cache is True:
+            cache = DiagramCache()
+        elif cache is False:
+            cache = None
+        self.cache: Optional[DiagramCache] = cache
+        self.admission = admission
         # a private registry, not the process-global one: the service's
         # queue/batch/latency telemetry lives and dies with it
         self._metrics = MetricsRegistry()
+        # queue_depth counts submitted-not-yet-collected requests via
+        # inc/dec under the submit lock + in the worker: a set(qsize())
+        # outside the lock could run after the worker drained and leave
+        # the gauge stale/backwards
         self._m_depth = self._metrics.gauge("queue_depth")
         self._m_batch = self._metrics.histogram("batch_size", lo=1.0,
                                                 hi=4096.0, factor=2.0)
         self._m_latency = self._metrics.histogram("request_latency_s")
-        self.stats = ServiceStats(metrics=self._metrics)
+        self._m_hits = self._metrics.counter("cache.hits")
+        self._m_misses = self._metrics.counter("cache.misses")
+        self._m_degraded = self._metrics.counter("admission.degraded")
+        self._m_shed = self._metrics.counter("admission.shed")
+        self.stats = ServiceStats(metrics=self._metrics, cache=cache)
         self._queue: "queue.Queue[Optional[_Request]]" = queue.Queue()
         self._closed = False
         self._lock = threading.Lock()  # orders submits vs the close sentinel
@@ -206,15 +260,44 @@ class TopoService:
         :class:`TopoRequest` carrying its own options.  Progressive
         requests (``progressive=True`` / ``deadline_s=``) get a
         :class:`ProgressiveFuture`: its ``preview`` resolves to the
-        coarse first answer while refinement continues."""
+        coarse first answer while refinement continues.
+
+        With an admission policy, a submit under queue pressure may be
+        *degraded* (rewritten to a bounded-error request — the result
+        carries its ``error_bound``) or *shed*: raises
+        :class:`~repro.cache.ServiceOverloadedError` with a
+        ``retry_after_s`` hint instead of queueing unserviceable
+        work."""
         req, plain = _as_request(f, grid)
         r = _Request(req, plain)
         with self._lock:
             if self._closed:
                 raise RuntimeError("TopoService is closed")
+            if self.admission is not None:
+                r = self._admit(r)      # may raise ServiceOverloadedError
             self._queue.put(r)
-        self._m_depth.set(self._queue.qsize())
+            self._m_depth.inc()
         return r.future
+
+    def _admit(self, r: _Request) -> _Request:
+        """Apply the admission policy to one submit (under the lock)."""
+        depth = int(self._m_depth.value)
+        decision = self.admission.decide(
+            depth, p99_latency_s=self._m_latency.percentile(0.99))
+        if decision == SHED:
+            self.stats.shed += 1
+            self._m_shed.inc()
+            raise self.admission.overload_error(depth)
+        if decision == DEGRADE:
+            req, did = degrade_request(r.req, self.admission)
+            if did:
+                # the rewritten request carries epsilon: it must group
+                # as an option-carrying request, never as a plain field
+                self.stats.degraded += 1
+                self._m_degraded.inc()
+                return _Request(req, plain=False, future=r.future,
+                                submitted=r.submitted, degraded=True)
+        return r
 
     def diagram(self, f, grid: Optional[Grid] = None) -> DiagramResult:
         """Synchronous single request."""
@@ -258,11 +341,19 @@ class TopoService:
 
     def _collect(self) -> List[Optional[_Request]]:
         """Block for one request, then grow the batch until ``max_wait_s``
-        has elapsed since the first arrival (or the batch is full)."""
+        has elapsed since the first arrival (or the batch is full).
+
+        The depth gauge is decremented here per collected request (the
+        close sentinel is never counted), pairing the increment done
+        under the submit lock — the gauge tracks submitted-not-yet-
+        collected requests exactly, instead of sampling ``qsize()``
+        after the fact (which could observe a queue the worker already
+        drained and go stale/backwards)."""
         first = self._queue.get()
         batch = [first]
         if first is None:
             return batch
+        self._m_depth.dec()
         deadline = time.monotonic() + self.max_wait_s
         while len(batch) < self.max_batch:
             remaining = deadline - time.monotonic()
@@ -275,7 +366,7 @@ class TopoService:
             batch.append(nxt)
             if nxt is None:
                 break
-        self._m_depth.set(self._queue.qsize())
+            self._m_depth.dec()
         return batch
 
     def _run(self) -> None:
@@ -305,6 +396,74 @@ class TopoService:
         self._m_latency.observe(time.perf_counter() - r.submitted)
         _resolve(r.future, self._payload(res))
 
+    # -- cache plumbing ----------------------------------------------------
+
+    def _probe_key(self, r: _Request) -> Optional[tuple]:
+        """The cache key of a request, or None when it is uncacheable
+        (no cache, opted out, traced, progressive, or the field has no
+        fingerprint).  ``cache=True`` requests *require* a key: a
+        :class:`CacheKeyError` fails their future instead of silently
+        recomputing every time."""
+        if self.cache is None or r.req.cache is False:
+            return None
+        if r.req.trace:
+            return None   # a trace wants this run's timeline
+        try:
+            return r.req.cache_key()
+        except CacheKeyError:
+            if r.req.cache is True:
+                raise
+            return None
+
+    def _try_cache(self, r: _Request) -> bool:
+        """Probe the cache for one request; True when it was served.
+
+        Sets ``r.key`` either way so the compute path stores the result
+        under the same canonical key it was probed with.  An exact
+        request (no epsilon) is served only by exact entries; an
+        epsilon request by any entry at least that tight."""
+        try:
+            r.key = self._probe_key(r)
+        except CacheKeyError as e:
+            self.stats.errors += 1
+            self._fail_request(r, e)
+            return True                  # consumed (failed), not computed
+        if r.key is None:
+            return False
+        if r.progressive:
+            # progressive submits are the refinement path that
+            # *populates* the cache: never served from it, but the key
+            # stays set so every refinement stores/upgrades its entry
+            return False
+        eps = r.req.epsilon if r.req.epsilon is not None else 0.0
+        ent = self.cache.get(r.key, epsilon=eps)
+        if ent is None:
+            self.stats.cache_misses += 1
+            self._m_misses.inc()
+            return False
+        self.stats.cache_hits += 1
+        self._m_hits.inc()
+        self._m_latency.observe(time.perf_counter() - r.submitted)
+        payload = ent.payload if self.wire \
+            else DiagramResult.from_bytes(ent.payload)
+        _resolve(r.future, payload)
+        return True
+
+    def _store(self, r: _Request, res: DiagramResult) -> None:
+        """Admit a freshly computed result (after delivery, so storing
+        never adds to the client-visible latency).  Exact results store
+        with bound 0.0; approximate ones with their stamped guarantee —
+        a tighter payload upgrades the entry in place."""
+        if r.key is None or self.cache is None:
+            return
+        try:
+            bound = res.error_bound
+            self.cache.put(r.key, res.to_bytes(),
+                           error_bound=0.0 if bound is None else bound,
+                           level=res.approx_level or 0)
+        except Exception:
+            pass   # a cache-admission failure must never fail serving
+
     @staticmethod
     def _fail_request(r: _Request, e: BaseException) -> bool:
         failed = _fail(r.future, e)
@@ -321,12 +480,15 @@ class TopoService:
             self._fail_request(r, e)
         else:
             self._deliver(r, res)
+            self._store(r, res)
 
     def _serve_progressive(self, r: _Request) -> None:
         """Preview-then-refine: walk the refinement driver, resolving
         the preview future on the first (coarsest) result, collecting
         intermediates, and resolving the main future with the final
-        one.  One failed refinement fails only this request."""
+        one.  One failed refinement fails only this request.  Each
+        refinement is stored as it lands, so a cache entry under this
+        key monotonically tightens while the client watches."""
         from repro.approx import refine
         try:
             last = None
@@ -334,6 +496,7 @@ class TopoService:
                 last = self._payload(res)
                 r.future.partials.append(last)
                 _resolve(r.future.preview, last)
+                self._store(r, res)
             if last is None:
                 raise RuntimeError("refinement produced no result")
         except Exception as e:
@@ -354,6 +517,12 @@ class TopoService:
     def _serve(self, reqs: List[_Request]) -> None:
         self.stats.requests += len(reqs)
         self.stats.traced_requests += sum(1 for r in reqs if r.req.trace)
+        if self.cache is not None:
+            # probe before grouping: a hit never occupies a batch slot,
+            # and a mixed batch is never split by cacheability
+            reqs = [r for r in reqs if not self._try_cache(r)]
+            if not reqs:
+                return
         # group compatible runs so one dispatch sees one plan + shape
         groups: Dict[object, List[_Request]] = {}
         for r in reqs:
@@ -387,6 +556,7 @@ class TopoService:
                 continue
             for r, res in zip(group, results):
                 self._deliver(r, res)
+                self._store(r, res)
 
 
 def _resolve(future: Future, result) -> None:

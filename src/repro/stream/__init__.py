@@ -8,10 +8,10 @@ exchange hides behind chunk compute (``sharded``), and the
 ``PersistencePipeline.diagram_stream`` front door in ``repro.pipeline``.
 """
 
-from .chunks import (ArraySource, Chunk, DecimatedSource,  # noqa: F401
-                     FieldSource, FunctionSource, MemmapSource, as_source,
-                     pack_value_keys, plan_chunks, plan_shards, sortable32,
-                     unpack_value_keys)
+from .chunks import (ArraySource, CacheKeyError, Chunk,  # noqa: F401
+                     DecimatedSource, FieldSource, FunctionSource,
+                     MemmapSource, as_source, pack_value_keys, plan_chunks,
+                     plan_shards, sortable32, unpack_value_keys)
 from .scheduler import (SparseOrder, StreamReport,  # noqa: F401
                         StreamResult, diagram_vertices, ranks_for_vids,
                         stream_front)

@@ -44,6 +44,16 @@ from repro.core.grid import Grid
 MAX_STREAM_NV = 2 ** 31  # vid must fit 31 bits of the packed key
 
 
+class CacheKeyError(ValueError):
+    """A field source cannot be given a stable content fingerprint.
+
+    Raised by :meth:`FieldSource.fingerprint` implementations that have
+    no way to identify their content without reading all of it (e.g. a
+    :class:`FunctionSource` wrapping an arbitrary closure).  The diagram
+    cache (``repro.cache``) treats this as an explicit opt-out: such
+    requests compute normally and are never cached."""
+
+
 # --------------------------------------------------------------------------
 # rank-free packed keys
 # --------------------------------------------------------------------------
@@ -92,12 +102,22 @@ class FieldSource(Protocol):
     ny*z), i.e. numpy plane layout ``[z, y, x]``).  ``read_slab(zlo,
     zhi)`` returns a fresh float32 array of shape ``(zhi - zlo, ny, nx)``
     — the only access path the streaming engine uses, so any storage
-    (array, file, object store, generator) plugs in here."""
+    (array, file, object store, generator) plugs in here.
+
+    ``fingerprint()`` returns a stable content-identity string — equal
+    fingerprints must imply bit-identical ``read_slab`` output — or
+    raises :class:`CacheKeyError` for sources that cannot identify their
+    content cheaply.  It is independently usable (provenance stamps,
+    dedup) and is what the diagram cache (``repro.cache``) keys on.
+    Duck-typed sources without it still stream fine (``as_source`` only
+    requires ``dims``/``read_slab``); they are simply uncacheable."""
 
     @property
     def dims(self) -> Tuple[int, int, int]: ...
 
     def read_slab(self, zlo: int, zhi: int) -> np.ndarray: ...
+
+    def fingerprint(self) -> str: ...
 
 
 def _check_dims(dims) -> Tuple[int, int, int]:
@@ -145,6 +165,13 @@ class ArraySource:
         _check_slab(self._dims, zlo, zhi)
         return np.array(self._f3[zlo:zhi], dtype=np.float32)
 
+    def fingerprint(self) -> str:
+        """Content digest of the (float32) array bytes + dims."""
+        import hashlib
+        h = hashlib.sha256(np.ascontiguousarray(self._f3).tobytes())
+        return f"array:{self._dims[0]}x{self._dims[1]}x{self._dims[2]}:" \
+               f"{h.hexdigest()}"
+
 
 class MemmapSource:
     """A raw float32 field file read through ``np.memmap``.
@@ -175,6 +202,23 @@ class MemmapSource:
         _check_slab(self._dims, zlo, zhi)
         return np.array(self._map()[zlo:zhi], dtype=np.float32)
 
+    def fingerprint(self) -> str:
+        """Identity of the backing file: path + size + mtime (+ offset).
+
+        Cheap (one ``stat``, no data read); a rewritten file changes
+        size or mtime, invalidating stale cache entries.  Raises
+        :class:`CacheKeyError` when the file cannot be stat'ed."""
+        import os
+        try:
+            st = os.stat(self.path)
+        except OSError as e:
+            raise CacheKeyError(
+                f"cannot stat {self.path!r} for a memmap fingerprint: "
+                f"{e}") from e
+        nx, ny, nz = self._dims
+        return (f"memmap:{os.fspath(self.path)}:{st.st_size}:"
+                f"{st.st_mtime_ns}:{self.offset}:{nx}x{ny}x{nz}")
+
     @staticmethod
     def write(path, f: np.ndarray, dims=None) -> "MemmapSource":
         """Dump a field to a raw float32 file and return a source on it."""
@@ -192,9 +236,17 @@ class FunctionSource:
     chunk-seekable benchmark generators (``repro.fields
     .make_field_chunk``), which reproduce ``make_field`` slices exactly."""
 
-    def __init__(self, fn: Callable[[int, int], np.ndarray], dims):
+    def __init__(self, fn: Callable[[int, int], np.ndarray], dims, *,
+                 name: Optional[str] = None):
+        """``name`` is an optional *content identity* for the function:
+        callers who can promise that equal names generate bit-identical
+        fields (e.g. a registry of deterministic generators) pass one to
+        make the source fingerprintable; anonymous closures stay
+        unfingerprintable (``fingerprint()`` raises
+        :class:`CacheKeyError`)."""
         self._dims = _check_dims(dims)
         self._fn = fn
+        self._name = name
 
     @property
     def dims(self) -> Tuple[int, int, int]:
@@ -210,13 +262,26 @@ class FunctionSource:
                 f"chunk function returned shape {out.shape}, want {want}")
         return out
 
+    def fingerprint(self) -> str:
+        """Generator identity (name + dims + construction) for named
+        sources; :class:`CacheKeyError` for anonymous closures — an
+        arbitrary function's content cannot be identified without
+        evaluating the whole field."""
+        if self._name is None:
+            raise CacheKeyError(
+                "FunctionSource wraps an anonymous function; pass "
+                "name= at construction (equal names must generate "
+                "bit-identical fields) or use FunctionSource.synthetic")
+        nx, ny, nz = self._dims
+        return f"fn:{self._name}:{nx}x{ny}x{nz}"
+
     @staticmethod
     def synthetic(name: str, dims, seed: int = 0) -> "FunctionSource":
         from repro.fields import make_field_chunk
         g = Grid.of(*dims)
         return FunctionSource(
             lambda zlo, zhi: make_field_chunk(name, g.dims, seed, zlo, zhi),
-            g.dims)
+            g.dims, name=f"synthetic:{name}:seed{seed}")
 
 
 class DecimatedSource:
@@ -252,6 +317,17 @@ class DecimatedSource:
                   for cz in range(zlo, zhi)]
         return np.ascontiguousarray(np.stack(planes), dtype=np.float32)
 
+    def fingerprint(self) -> str:
+        """Delegates to the base source: a decimated view is identified
+        by (stride, base content).  Propagates the base's
+        :class:`CacheKeyError` unchanged."""
+        base = getattr(self._src, "fingerprint", None)
+        if base is None:
+            raise CacheKeyError(
+                f"base source {type(self._src).__name__} has no "
+                f"fingerprint()")
+        return f"decimated:{self._stride}:{base()}"
+
 
 def as_source(f, dims=None) -> FieldSource:
     """Coerce ndarray inputs to an :class:`ArraySource`; pass sources through."""
@@ -260,7 +336,10 @@ def as_source(f, dims=None) -> FieldSource:
         return f
     if isinstance(f, np.ndarray):
         return ArraySource(f, dims)
-    if isinstance(f, FieldSource):   # structural: any read_slab/dims object
+    # structural: any read_slab/dims object is a source (fingerprint()
+    # is optional — duck-typed sources without it stream fine, they are
+    # just not cacheable)
+    if hasattr(f, "read_slab") and hasattr(f, "dims"):
         return f
     raise TypeError(
         f"expected a FieldSource or ndarray, got {type(f).__name__}")

@@ -18,7 +18,7 @@ from pathlib import Path
 
 SNAPSHOT = Path(__file__).parent / "data" / "api_surface.json"
 MODULES = ("repro.pipeline", "repro.serve", "repro.approx",
-           "repro.obs")
+           "repro.obs", "repro.cache")
 
 
 def _sig(obj) -> str:

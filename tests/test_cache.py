@@ -1,0 +1,475 @@
+"""repro.cache — fingerprints, the epsilon-aware store, admission
+control, and the cached ``TopoService`` round trip.
+
+Covers the contracts the serving layer leans on: stable
+content-addressed keys (and the explicit ``CacheKeyError`` opt-outs),
+the monotone byte-budgeted LRU with its bound-aware lookup rule,
+pure-function admission decisions + the graceful-degradation rewrite,
+end-to-end service behavior (warm hits, epsilon reuse, progressive
+upgrade-in-place, forced degrade/shed, per-request opt-out), and the
+approx round trip: ``approx_meta`` surviving to_bytes → store → evict
+pressure → from_bytes with the bottleneck guarantee machine-checked.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.cache import (ACCEPT, DEGRADE, SHED, AdmissionPolicy,
+                         CacheKeyError, DiagramCache, KEY_SCHEMA,
+                         ServiceOverloadedError, degrade_request,
+                         fingerprint_array, fingerprint_field, request_key)
+from repro.core.grid import Grid
+from repro.fields import make_field
+from repro.pipeline import DiagramResult, PersistencePipeline, TopoRequest
+from repro.serve import TopoService
+from repro.stream import (ArraySource, DecimatedSource, FunctionSource,
+                          MemmapSource)
+
+DIMS = (8, 8, 8)
+
+
+def _field(name="wavelet", dims=DIMS, seed=0):
+    return make_field(name, dims, seed=seed).reshape(dims[::-1])
+
+
+def _smooth(dims=(16, 16, 16)):
+    """A smooth blob: coarse hierarchy levels carry small bounds, so
+    epsilon requests genuinely engage the approximation engine."""
+    nz, ny, nx = dims[::-1]
+    z, y, x = np.meshgrid(np.linspace(0, 1, nz), np.linspace(0, 1, ny),
+                          np.linspace(0, 1, nx), indexing="ij")
+    f = np.exp(-2.0 * ((x - .45) ** 2 + (y - .55) ** 2 + (z - .5) ** 2))
+    return f.astype(np.float32)
+
+
+# ---------------------------------------------------------------------------
+# fingerprints
+# ---------------------------------------------------------------------------
+
+class TestFingerprints:
+    def test_array_deterministic_and_content_sensitive(self):
+        f = _field()
+        assert fingerprint_array(f) == fingerprint_array(f.copy())
+        g = f.copy()
+        g.flat[0] += 1.0
+        assert fingerprint_array(f) != fingerprint_array(g)
+
+    def test_array_dtype_and_shape_distinguish(self):
+        f = np.zeros((2, 3), np.float32)
+        assert fingerprint_array(f) != fingerprint_array(
+            f.astype(np.float64))
+        assert fingerprint_array(f) != fingerprint_array(f.reshape(3, 2))
+
+    def test_noncontiguous_view_matches_its_contiguous_copy(self):
+        big = np.arange(4 * 6 * 8, dtype=np.float32).reshape(4, 6, 8)
+        view = big[::2, ::3, ::2]
+        assert not view.flags.c_contiguous
+        assert fingerprint_array(view) == \
+            fingerprint_array(np.ascontiguousarray(view))
+
+    def test_field_none_raises(self):
+        with pytest.raises(CacheKeyError):
+            fingerprint_field(None)
+
+    def test_array_source_matches_nothing_else(self):
+        f = _field()
+        s = ArraySource(f)
+        fp = s.fingerprint()
+        assert fp.startswith("array:") and fp == ArraySource(f).fingerprint()
+        assert fp != ArraySource(f + 1.0).fingerprint()
+
+    def test_function_source_named_vs_anonymous(self):
+        s = FunctionSource.synthetic("wavelet", DIMS, seed=3)
+        fp = s.fingerprint()
+        assert "wavelet" in fp and "seed3" in fp
+        assert fp != FunctionSource.synthetic("wavelet", DIMS,
+                                              seed=4).fingerprint()
+        anon = FunctionSource(lambda lo, hi: np.zeros(hi - lo, np.float32),
+                              DIMS)
+        with pytest.raises(CacheKeyError):
+            anon.fingerprint()
+
+    def test_memmap_source_stats_identity(self, tmp_path):
+        f = _field().astype(np.float32)
+        p = tmp_path / "f.raw"
+        p.write_bytes(f.tobytes())
+        s = MemmapSource(str(p), DIMS)
+        fp = s.fingerprint()
+        assert str(p) in fp and fp == MemmapSource(str(p), DIMS).fingerprint()
+        missing = MemmapSource(str(p), DIMS)
+        p.unlink()
+        with pytest.raises(CacheKeyError):
+            missing.fingerprint()
+
+    def test_decimated_source_delegates(self):
+        base = ArraySource(_field())
+        d = DecimatedSource(base, 2)
+        assert d.fingerprint() == f"decimated:2:{base.fingerprint()}"
+        anon = FunctionSource(lambda lo, hi: np.zeros(hi - lo, np.float32),
+                              DIMS)
+        with pytest.raises(CacheKeyError):
+            DecimatedSource(anon, 2).fingerprint()
+
+    def test_request_key_canonical(self):
+        f = _field()
+        k1 = request_key(TopoRequest(field=f))
+        # same content, different spellings: explicit grid, explicit
+        # all-dims homology → identical key
+        k2 = request_key(TopoRequest(field=f.copy(), grid=Grid.of(*DIMS),
+                                     homology_dims=(0, 1, 2, 3)))
+        assert k1 == k2 and k1[0] == KEY_SCHEMA
+        assert request_key(TopoRequest(field=f, top_k=5)) != k1
+        assert request_key(TopoRequest(field=f, min_persistence=.1)) != k1
+        assert request_key(TopoRequest(field=f, homology_dims=(0,))) != k1
+
+    def test_request_key_ignores_execution_knobs(self):
+        f = _field()
+        base = request_key(TopoRequest(field=f))
+        assert request_key(TopoRequest(field=f, backend="np")) == base
+        assert request_key(TopoRequest(field=f, sandwich_backend="np")) \
+            == base
+        assert request_key(TopoRequest(field=f, n_blocks=2,
+                                       distributed=True)) == base
+        assert request_key(TopoRequest(field=f, stream=True,
+                                       chunk_z=4)) == base
+        # epsilon is a lookup-time predicate, never part of the key
+        assert request_key(TopoRequest(field=f, epsilon=0.25)) == base
+
+    def test_request_key_source_spelling_is_stable(self):
+        # a source-backed request keys on the source's own fingerprint:
+        # stable across equal-content sources, distinct from the raw
+        # ndarray spelling (float32 sources and arbitrary-dtype arrays
+        # cannot alias safely)
+        f = _field().astype(np.float32)
+        ks = request_key(TopoRequest(field=ArraySource(f)))
+        assert ks == request_key(TopoRequest(field=ArraySource(f.copy())))
+        assert ks != request_key(TopoRequest(field=f))
+
+    def test_request_key_unfingerprintable_source_raises(self):
+        anon = FunctionSource(lambda lo, hi: np.zeros(hi - lo, np.float32),
+                              DIMS)
+        with pytest.raises(CacheKeyError):
+            request_key(TopoRequest(field=anon))
+
+
+# ---------------------------------------------------------------------------
+# the store
+# ---------------------------------------------------------------------------
+
+class TestDiagramCache:
+    def test_exact_entry_serves_every_epsilon(self):
+        c = DiagramCache()
+        c.put(("k",), b"payload")
+        assert c.get(("k",)) is not None
+        assert c.get(("k",), epsilon=1e9).payload == b"payload"
+
+    def test_bound_miss_vs_qualifying_budget(self):
+        c = DiagramCache()
+        c.put(("k",), b"approx", error_bound=0.5, level=2)
+        assert c.get(("k",), epsilon=0.1) is None     # too loose an entry
+        assert c.stats()["bound_misses"] == 1
+        ent = c.get(("k",), epsilon=0.5)              # bound == budget: ok
+        assert ent is not None and ent.level == 2
+
+    def test_put_only_tightens(self):
+        c = DiagramCache()
+        assert c.put(("k",), b"coarse", error_bound=0.5)
+        assert not c.put(("k",), b"same", error_bound=0.5)    # not tighter
+        assert not c.put(("k",), b"looser", error_bound=0.9)
+        assert c.peek(("k",)).payload == b"coarse"
+        assert c.put(("k",), b"tighter", error_bound=0.1)     # upgrade
+        ent = c.peek(("k",))
+        assert ent.payload == b"tighter" and ent.upgrades == 1
+        assert c.put(("k",), b"exact", error_bound=0.0)
+        assert c.peek(("k",)).exact
+        s = c.stats()
+        assert s["insertions"] == 1 and s["upgrades"] == 2 \
+            and s["rejected"] == 2
+
+    def test_byte_budget_evicts_lru(self):
+        c = DiagramCache(max_bytes=100)
+        c.put(("a",), b"x" * 40)
+        c.put(("b",), b"y" * 40)
+        c.get(("a",))                      # touch: "b" is now LRU
+        c.put(("c",), b"z" * 40)           # over budget → evict "b"
+        assert ("a",) in c and ("c",) in c and ("b",) not in c
+        assert c.bytes == 80 and c.stats()["evictions"] == 1
+
+    def test_oversized_payload_rejected_outright(self):
+        c = DiagramCache(max_bytes=10)
+        c.put(("keep",), b"ok")
+        assert not c.put(("big",), b"x" * 11)
+        assert ("keep",) in c and ("big",) not in c
+
+    def test_upgrade_adjusts_byte_accounting(self):
+        c = DiagramCache(max_bytes=100)
+        c.put(("k",), b"x" * 60, error_bound=0.5)
+        c.put(("k",), b"y" * 30, error_bound=0.1)
+        assert c.bytes == 30
+        c.put(("k",), b"z" * 90, error_bound=0.0)
+        assert c.bytes == 90 and len(c) == 1
+
+    def test_negative_epsilon_and_bad_payload_raise(self):
+        c = DiagramCache()
+        with pytest.raises(ValueError):
+            c.get(("k",), epsilon=-1.0)
+        with pytest.raises(TypeError):
+            c.put(("k",), "not-bytes")
+        with pytest.raises(ValueError):
+            DiagramCache(max_bytes=0)
+
+    def test_clear_resets_residency(self):
+        c = DiagramCache()
+        c.put(("k",), b"x")
+        c.clear()
+        assert len(c) == 0 and c.bytes == 0
+
+
+# ---------------------------------------------------------------------------
+# admission
+# ---------------------------------------------------------------------------
+
+class TestAdmission:
+    def test_decide_thresholds(self):
+        p = AdmissionPolicy(degrade_depth=4, shed_depth=8)
+        assert p.decide(0) == ACCEPT
+        assert p.decide(3) == ACCEPT
+        assert p.decide(4) == DEGRADE
+        assert p.decide(8) == SHED
+
+    def test_decide_latency_trigger(self):
+        p = AdmissionPolicy(degrade_depth=None, shed_depth=None,
+                            degrade_latency_s=0.5)
+        assert p.decide(100) == ACCEPT                 # depth disabled
+        assert p.decide(0, p99_latency_s=0.6) == DEGRADE
+        assert p.decide(0, p99_latency_s=0.4) == ACCEPT
+
+    def test_invalid_policies(self):
+        with pytest.raises(ValueError):
+            AdmissionPolicy(degrade_depth=8, shed_depth=4)
+        with pytest.raises(ValueError):
+            AdmissionPolicy(degrade_frac=0.0)
+        with pytest.raises(ValueError):
+            AdmissionPolicy(retry_after_s=0.0)
+
+    def test_overload_error_scales_retry_hint(self):
+        p = AdmissionPolicy(shed_depth=10, retry_after_s=0.1)
+        e = p.overload_error(30)
+        assert isinstance(e, ServiceOverloadedError)
+        assert e.queue_depth == 30
+        assert e.retry_after_s == pytest.approx(0.3)
+
+    def test_degrade_rewrites_only_exact_deadline_less(self):
+        p = AdmissionPolicy(degrade_frac=0.1)
+        f = _field()
+        rng = float(f.max() - f.min())
+        req, did = degrade_request(TopoRequest(field=f), p)
+        assert did and req.epsilon == pytest.approx(0.1 * rng)
+        for spared in (TopoRequest(field=f, epsilon=0.2),
+                       TopoRequest(field=f, deadline_s=1.0),
+                       TopoRequest(field=f, progressive=True)):
+            out, did = degrade_request(spared, p)
+            assert not did and out is spared
+
+    def test_degrade_passes_sources_and_flat_fields_through(self):
+        p = AdmissionPolicy()
+        src = FunctionSource.synthetic("wavelet", DIMS)
+        _, did = degrade_request(TopoRequest(field=src), p)
+        assert not did
+        const = TopoRequest(field=np.zeros((4, 4, 4)))   # zero range
+        _, did = degrade_request(const, p)
+        assert not did
+
+
+# ---------------------------------------------------------------------------
+# the cached service
+# ---------------------------------------------------------------------------
+
+class TestCachedService:
+    def test_warm_hit_is_bit_identical(self):
+        f = _field()
+        cache = DiagramCache()
+        with TopoService(backend="np", cache=cache) as svc:
+            r1 = svc.diagram(f)
+            r2 = svc.diagram(f)
+            assert svc.stats.cache_misses == 1
+            assert svc.stats.cache_hits == 1
+            for d in range(3):
+                assert np.array_equal(r1.pairs(d, min_persistence=0),
+                                      r2.pairs(d, min_persistence=0))
+        # the snapshot exposes the cache's own counters
+        snap = svc.stats()
+        assert snap["cache"]["size"] == 1
+        assert snap["metrics"]["cache.hits"] == 1
+
+    def test_hit_serves_across_backends(self):
+        # the key excludes execution knobs: a result computed by one
+        # backend answers the same field on another
+        f = _field()
+        with TopoService(backend="np", cache=True) as svc:
+            svc.diagram(TopoRequest(field=f, backend="np"))
+            svc.diagram(TopoRequest(field=f, backend="jax"))
+            assert svc.stats.cache_hits == 1
+
+    def test_exact_entry_serves_epsilon_request(self):
+        f = _field()
+        with TopoService(backend="np", cache=True) as svc:
+            svc.diagram(f)
+            res = svc.diagram(TopoRequest(field=f, epsilon=0.5))
+            assert svc.stats.cache_hits == 1
+            assert res.error_bound in (None, 0.0)
+
+    def test_wire_mode_hits_return_stored_bytes(self):
+        f = _field()
+        cache = DiagramCache()
+        with TopoService(backend="np", cache=cache, wire=True) as svc:
+            p1 = svc.diagram(f)
+            p2 = svc.diagram(f)
+            assert isinstance(p2, bytes) and p1 == p2
+            assert svc.stats.cache_hits == 1
+        dec = DiagramResult.from_bytes(p2)
+        assert dec.pairs(0) is not None
+
+    def test_cache_false_opts_out(self):
+        f = _field()
+        with TopoService(backend="np", cache=True) as svc:
+            svc.diagram(TopoRequest(field=f, cache=False))
+            svc.diagram(TopoRequest(field=f, cache=False))
+            assert svc.stats.cache_hits == 0
+            assert svc.stats.cache_misses == 0
+
+    @staticmethod
+    def _anon_source():
+        """A working but anonymous FunctionSource (no fingerprint)."""
+        nx, ny, nz = DIMS
+        f3 = make_field("wavelet", DIMS, seed=5).reshape(nz, ny, nx) \
+            .astype(np.float32)
+        return FunctionSource(lambda lo, hi: f3[lo:hi], DIMS)
+
+    def test_cache_true_requires_fingerprintable_field(self):
+        with TopoService(backend="jax", cache=True) as svc:
+            fut = svc.submit(TopoRequest(field=self._anon_source(),
+                                         cache=True))
+            with pytest.raises(CacheKeyError):
+                fut.result()
+            # cache=None (default) computes instead of failing
+            res = svc.submit(TopoRequest(field=self._anon_source())).result()
+            assert res.pairs(0) is not None
+
+    def test_unfingerprintable_default_never_probes(self):
+        with TopoService(backend="jax", cache=True) as svc:
+            svc.diagram(TopoRequest(field=self._anon_source()))
+            assert svc.stats.cache_hits == 0 \
+                and svc.stats.cache_misses == 0
+
+    def test_traced_requests_bypass_the_cache(self):
+        f = _field()
+        with TopoService(backend="np", cache=True) as svc:
+            svc.diagram(f)
+            res = svc.diagram(TopoRequest(field=f, trace=True))
+            assert svc.stats.cache_hits == 0
+            assert res.trace is not None
+
+    def test_progressive_populates_and_upgrades(self):
+        f = _smooth()
+        cache = DiagramCache()
+        with TopoService(backend="jax", cache=cache) as svc:
+            svc.submit(TopoRequest(field=f, progressive=True)).result()
+            s = cache.stats()
+            assert s["insertions"] == 1 and s["upgrades"] >= 1
+            assert cache.peek(request_key(TopoRequest(field=f))).exact
+            # a later exact request hits the fully-refined entry
+            svc.diagram(f)
+            assert svc.stats.cache_hits == 1
+
+    def test_forced_degrade_serves_bounded_answer(self):
+        f = _smooth()
+        pol = AdmissionPolicy(degrade_depth=0, shed_depth=None,
+                              degrade_frac=0.25)
+        with TopoService(backend="jax", admission=pol) as svc:
+            res = svc.diagram(f)
+            assert svc.stats.degraded == 1
+            assert svc.stats()["metrics"]["admission.degraded"] == 1
+            assert res.error_bound is not None \
+                and res.error_bound <= 0.25 * float(np.ptp(f)) + 1e-6
+
+    def test_shed_raises_typed_error(self):
+        pol = AdmissionPolicy(degrade_depth=0, shed_depth=0)
+        with TopoService(backend="np", admission=pol) as svc:
+            with pytest.raises(ServiceOverloadedError) as ei:
+                svc.diagram(_field())
+            assert ei.value.retry_after_s > 0
+            assert svc.stats.shed == 1
+            assert svc.stats()["metrics"]["admission.shed"] == 1
+
+    def test_queue_depth_gauge_settles_to_zero(self):
+        fields = [_field(seed=s) for s in range(6)]
+        with TopoService(backend="np", cache=True) as svc:
+            svc.map(fields + fields)
+            assert svc.stats()["metrics"]["queue_depth"] == 0
+
+
+# ---------------------------------------------------------------------------
+# approx round trip through the cache (wire format fidelity)
+# ---------------------------------------------------------------------------
+
+class TestApproxRoundTrip:
+    def test_approx_meta_survives_store_and_evict_pressure(self):
+        from repro.approx import bottleneck_feasible
+        # the elevation zoo field is coarse-level friendly: a 20%-of-
+        # range budget is provably met from hierarchy level >= 1
+        f = make_field("elevation", (16, 16, 16), seed=1) \
+            .reshape(16, 16, 16)
+        eps = 0.2 * float(np.ptp(f))
+        pipe = PersistencePipeline(backend="jax")
+        res = pipe.run(TopoRequest(field=f, epsilon=eps))
+        assert res.error_bound is not None and res.approx_level >= 1, \
+            "precondition: epsilon must engage a coarse level"
+        key = request_key(TopoRequest(field=f))
+        payload = res.to_bytes()
+        # a budget that fits ~2 payloads: churn forces LRU eviction
+        cache = DiagramCache(max_bytes=2 * len(payload) + 16)
+        cache.put(key, payload, error_bound=res.error_bound,
+                  level=res.approx_level)
+        for i in range(4):                      # evict-pressure churn
+            cache.put(("churn", i), b"x" * len(payload))
+        if key not in cache:                    # evicted: re-admit
+            cache.put(key, payload, error_bound=res.error_bound,
+                      level=res.approx_level)
+        ent = cache.get(key, epsilon=eps)
+        assert ent is not None and ent.error_bound == res.error_bound
+        dec = DiagramResult.from_bytes(ent.payload)
+        # the approximation provenance survived the round trip
+        assert dec.error_bound == res.error_bound
+        assert dec.approx_level == res.approx_level
+        assert dec.approx_stride == res.approx_stride
+        for d in range(3):
+            assert np.array_equal(dec.pairs(d, min_persistence=0),
+                                  res.pairs(d, min_persistence=0))
+        # and the machine-checked guarantee still holds for the decoded
+        # diagram against a fresh exact computation
+        exact = pipe.run(TopoRequest(field=f))
+        for d in range(3):
+            assert bottleneck_feasible(
+                dec.pairs(d, min_persistence=0),
+                exact.pairs(d, min_persistence=0),
+                dec.error_bound + 1e-9)
+
+    def test_served_cached_approx_result_meets_bound(self):
+        from repro.approx import bottleneck_feasible
+        f = _smooth()
+        eps = 0.25 * float(np.ptp(f))
+        pipe = PersistencePipeline(backend="jax")
+        with TopoService(pipe, cache=True) as svc:
+            first = svc.diagram(TopoRequest(field=f, epsilon=eps))
+            served = svc.diagram(TopoRequest(field=f, epsilon=eps))
+            assert svc.stats.cache_hits == 1
+        assert served.error_bound == first.error_bound
+        exact = pipe.run(TopoRequest(field=f))
+        bound = (served.error_bound or 0.0) + 1e-9
+        for d in range(3):
+            assert bottleneck_feasible(
+                served.pairs(d, min_persistence=0),
+                exact.pairs(d, min_persistence=0), bound)
