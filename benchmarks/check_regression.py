@@ -1,0 +1,169 @@
+"""Ratio-gated regression check of a fresh BENCH_*.json against the
+committed baseline.
+
+    PYTHONPATH=src python -m benchmarks.check_regression \
+        --section obs --baseline BENCH_obs.json --candidate /tmp/new.json
+
+The committed BENCH files are measurements from *some* machine; CI and
+dev boxes are other machines.  So this check is deliberately modest:
+
+- **env-matched**: timings are only *gated* when the baseline and the
+  candidate agree on the environment axes that dominate wall time
+  (platform, cpu count, jax version, device set).  On any mismatch the
+  comparison still prints — but informationally, exit 0 — because a
+  ratio across different machines is noise, not signal.
+- **ratio-gated with generous slack**: a metric regresses only when
+  ``candidate > baseline * slack`` (default 1.75x) — wide enough for
+  scheduler jitter and thermal variance on matched hardware, narrow
+  enough to catch an accidentally quadratic hot path or an obs hook
+  that started allocating.
+- **floor-filtered**: sub-millisecond timings are compared but never
+  gated; at that scale the ratio measures the OS, not the code.
+
+Sections know their own metrics (``_EXTRACTORS``): the obs section
+gates the enabled-vs-killed pipeline minima and the stall-detection
+latency; the pipeline section gates per-run stage totals."""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+DEFAULT_SLACK = 1.75
+GATE_FLOOR_S = 1e-3          # timings below this are reported, not gated
+
+# env keys that must agree for a cross-file timing ratio to mean anything
+ENV_KEYS = ("platform", "cpu_count", "jax", "devices")
+
+
+def _env_delta(base: dict, cand: dict) -> dict:
+    b, c = base.get("env", {}), cand.get("env", {})
+    out = {k: (b.get(k), c.get(k)) for k in ENV_KEYS
+           if b.get(k) != c.get(k)}
+    # quick-mode runs use smaller problems: never gate quick vs full
+    for k in ("quick", "dims"):
+        if base.get(k) != cand.get(k):
+            out[k] = (base.get(k), cand.get(k))
+    return out
+
+
+# --------------------------------------------------------------------------
+# per-section metric extractors: doc -> {metric_name: seconds}
+# --------------------------------------------------------------------------
+
+def _obs_metrics(doc: dict) -> dict:
+    out = {}
+    ov = doc.get("disabled_overhead", {})
+    if "killed_min_s" in ov:
+        out["pipeline_killed_min_s"] = ov["killed_min_s"]
+    if "normal_min_s" in ov:
+        out["pipeline_enabled_min_s"] = ov["normal_min_s"]
+    st = doc.get("stall_injection", {})
+    if "detect_s" in st:
+        out["stall_detect_s"] = st["detect_s"]
+    return out
+
+
+def _pipeline_metrics(doc: dict) -> dict:
+    out = {}
+    for run in doc.get("runs", []):
+        tag = f"b{run['batched']}" if "batched" in run \
+            else f"nb{run.get('n_blocks', 1)}"
+        key = f"{run.get('field')}/{run.get('backend')}/{tag}"
+        rep = run.get("report", {})
+        total = rep.get("seconds") or sum(
+            c.get("seconds", 0.0) for c in rep.get("children", []))
+        out[f"run:{key}:total_s"] = total
+    return out
+
+
+_EXTRACTORS = {"obs": _obs_metrics, "pipeline": _pipeline_metrics}
+
+
+# --------------------------------------------------------------------------
+# comparison
+# --------------------------------------------------------------------------
+
+def compare(section: str, base: dict, cand: dict,
+            slack: float = DEFAULT_SLACK) -> dict:
+    """Compare extracted metrics; returns a result dict with per-metric
+    rows and the regressed subset (empty when envs mismatch can still
+    gate — gating policy is the caller's, see :func:`main`)."""
+    extract = _EXTRACTORS[section]
+    b, c = extract(base), extract(cand)
+    rows, regressed = [], []
+    for name in sorted(set(b) & set(c)):
+        bv, cv = float(b[name]), float(c[name])
+        ratio = cv / bv if bv > 0 else float("inf")
+        gateable = bv >= GATE_FLOOR_S and cv >= GATE_FLOOR_S
+        bad = gateable and cv > bv * slack
+        rows.append({"metric": name, "baseline_s": bv, "candidate_s": cv,
+                     "ratio": ratio, "gateable": gateable,
+                     "regressed": bad})
+        if bad:
+            regressed.append(name)
+    missing = sorted(set(b) - set(c))
+    return {"rows": rows, "regressed": regressed, "missing": missing,
+            "only_candidate": sorted(set(c) - set(b))}
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="ratio-gated BENCH regression check")
+    ap.add_argument("--section", required=True, choices=sorted(_EXTRACTORS))
+    ap.add_argument("--baseline", required=True,
+                    help="committed BENCH_*.json")
+    ap.add_argument("--candidate", required=True,
+                    help="freshly generated BENCH_*.json")
+    ap.add_argument("--slack", type=float, default=DEFAULT_SLACK,
+                    help=f"allowed candidate/baseline ratio "
+                         f"(default {DEFAULT_SLACK})")
+    ap.add_argument("--strict-env", action="store_true",
+                    help="fail (instead of downgrading to informational) "
+                         "on an environment mismatch")
+    args = ap.parse_args(argv)
+
+    base = json.loads(Path(args.baseline).read_text())
+    cand = json.loads(Path(args.candidate).read_text())
+    delta = _env_delta(base, cand)
+    res = compare(args.section, base, cand, slack=args.slack)
+
+    matched = not delta
+    mode = "GATED" if matched else "informational (env mismatch)"
+    print(f"[check_regression] section={args.section} slack={args.slack}x "
+          f"mode={mode}")
+    if delta:
+        for k, (bv, cv) in delta.items():
+            print(f"  env mismatch: {k}: baseline={bv!r} candidate={cv!r}")
+    for row in res["rows"]:
+        mark = "REGRESSED" if row["regressed"] else \
+            ("ok" if row["gateable"] else "below floor, not gated")
+        print(f"  {row['metric']}: {row['baseline_s']*1e3:.2f}ms -> "
+              f"{row['candidate_s']*1e3:.2f}ms "
+              f"(x{row['ratio']:.2f}) [{mark}]")
+    for name in res["missing"]:
+        print(f"  MISSING in candidate: {name}")
+    if res["only_candidate"]:
+        print(f"  new metrics (no baseline): "
+              f"{', '.join(res['only_candidate'])}")
+
+    if res["missing"]:
+        print("[check_regression] FAIL: candidate lost metrics the "
+              "baseline had")
+        return 1
+    if res["regressed"] and (matched or args.strict_env):
+        print(f"[check_regression] FAIL: {len(res['regressed'])} "
+              f"regressed metric(s): {', '.join(res['regressed'])}")
+        return 1
+    if res["regressed"]:
+        print("[check_regression] regressions observed but not gated "
+              "(environment mismatch)")
+    else:
+        print("[check_regression] OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -815,16 +815,17 @@ def scale_bench(out_path, quick=False):
 
 
 def obs_bench(out_path, quick=False, trace_out=None):
-    """Observability layer: overhead gate + traced timeline;
-    BENCH_obs.json.
+    """Observability layer: overhead gate + traced timeline + stall
+    fault injection + exposition schema; BENCH_obs.json.
 
-    Two machine-checked properties:
+    Machine-checked properties:
 
     - **disabled overhead < 3%** (gated in full mode): interleaved A/B
       of the warmed in-memory pipeline with the obs layer hard-killed
-      (``set_enabled(False)``) against the shipping default (enabled
-      but untraced).  The untraced hot path is ``current_trace() is
-      None`` checks and no-op context managers, so min-of-N must stay
+      (``set_enabled(False)``) against the shipping default — enabled,
+      untraced, with the **always-on flight recorder** receiving every
+      stage/span event.  The enabled hot path is ``current_trace() is
+      None`` checks plus ring-slot stores, so min-of-N must stay
       within 3%.
     - **the traced sharded-stream timeline**: ``TopoRequest(stream=
       True, n_blocks=4, trace=True)`` on a 32^3 field must export
@@ -833,18 +834,35 @@ def obs_bench(out_path, quick=False, trace_out=None):
       ``chunk_compute`` span (the receives hide behind compute — the
       point of the eager-publish design), and produce a diagram
       bit-identical to the untraced run.
+    - **stall fault injection**: the same sharded-stream run with two
+      shards' slab reads wedged behind an event; a
+      :class:`ProgressWatchdog` must emit a stall report naming a
+      shard/halo lane *and* a flight-recorder dump within a few poll
+      intervals of the deadline (gated in full mode), and the run must
+      complete bit-identically once the wedge is released.
+    - **exposition schema**: a ``TopoService(metrics_port=0)`` scrape
+      must parse under ``parse_prometheus_text`` (cumulative
+      histogram buckets closed by ``+Inf == _count``) and expose the
+      dotted ``service.*`` families.
 
     Also snapshots the global metrics registry (plan-cache and pairing
     round counters, stream byte counters) and a live ``TopoService``
     stats sample (queue-depth gauge, batch-size / request-latency
     histogram percentiles)."""
+    import tempfile
+    import threading
+    import urllib.request
+
     import numpy as np
 
     from repro.core.diagram import diff_report, same_offdiagonal
     from repro.core.grid import Grid
     from repro.fields import make_field
-    from repro.obs import (global_metrics, set_enabled, spans_overlap,
-                           thread_names, validate_trace_events)
+    from repro.obs import (ProgressWatchdog, global_metrics,
+                           parse_prometheus_text, set_dump_dir,
+                           set_enabled, spans_overlap, thread_names,
+                           validate_trace_events)
+    from repro.obs import flight as flight_mod
     from repro.pipeline import PersistencePipeline, TopoRequest
     from repro.serve import TopoService
     from repro.stream import ArraySource
@@ -909,18 +927,77 @@ def obs_bench(out_path, quick=False, trace_out=None):
           f"{trace_path} (halo_recv x chunk_compute overlap: OK, "
           f"bit-identical: OK)")
 
-    # ---- metrics + service sample -----------------------------------
+    # ---- fault injection: stalled shard -> watchdog + flight dump ---
+    release = threading.Event()
+    stall_z0 = sdims[2] // 2             # wedge the upper two shards
+
+    class StallSource(ArraySource):
+        def read_slab(self, z0, z1):
+            if z0 >= stall_z0:
+                release.wait()
+            return super().read_slab(z0, z1)
+
+    wd_deadline = 0.25
+    dump_dir = tempfile.mkdtemp(prefix="obs_bench_flight_")
+    set_dump_dir(dump_dir)
+    flight_mod._LAST_DUMP.clear()
+    wd = ProgressWatchdog(deadline_s=wd_deadline, poll_s=0.05)
+    stall_res = {}
+
+    def stalled_run():
+        stall_res["res"] = pipe.run(
+            sreq.replace(field=StallSource(sf.reshape(sdims[::-1])),
+                         trace=False))
+    t0 = time.perf_counter()
+    try:
+        with wd:
+            runner = threading.Thread(target=stalled_run,
+                                      name="stalled-run")
+            runner.start()
+            while not wd.reports and time.perf_counter() - t0 < 30.0:
+                time.sleep(0.01)
+            detect_s = time.perf_counter() - t0
+            release.set()
+            runner.join(timeout=120)
+    finally:
+        release.set()
+        set_dump_dir(None)
+    assert wd.reports, "watchdog never reported the wedged shard"
+    rpt = wd.reports[0]
+    assert rpt["lane"].startswith(("stream.", "halo.")), rpt["lane"]
+    assert rpt.get("flight_dump"), "stall fired no flight dump"
+    assert all(os.path.exists(p) for p in rpt["flight_dump"])
+    assert same_offdiagonal(stall_res["res"].diagram, ref.diagram), \
+        "released run diverged from the clean reference"
+    print(f"  stall-injection: lane {rpt['lane']!r} reported in "
+          f"{detect_s*1e3:.0f}ms (deadline {wd_deadline*1e3:.0f}ms), "
+          f"flight dump: {os.path.basename(rpt['flight_dump'][1])}")
+    if not quick:
+        assert detect_s < wd_deadline * 6 + 1.0, \
+            (f"stall detected in {detect_s:.2f}s — too slow for a "
+             f"{wd_deadline:.2f}s deadline")
+
+    # ---- metrics + service sample + exposition scrape ---------------
     gm = global_metrics().snapshot()
-    with TopoService(pipeline=pipe, max_batch=4, max_wait_s=0.05) as svc:
+    with TopoService(pipeline=pipe, max_batch=4, max_wait_s=0.05,
+                     metrics_port=0) as svc:
         futs = [svc.submit(TopoRequest(field=make_field("wavelet", dims,
                                                         seed=s), grid=g))
                 for s in range(4)]
         for fu in futs:
             fu.result(timeout=120)
         service_stats = svc.stats()
+        body = urllib.request.urlopen(svc.metrics_server.url,
+                                      timeout=10).read().decode()
+    families = parse_prometheus_text(body)   # raises on schema breakage
+    assert "service_request_latency_s" in families, sorted(families)
+    lat = families["service_request_latency_s"]["samples"]
+    assert lat["service_request_latency_s_count"] >= 4
+    print(f"  exposition: {len(families)} families scraped + "
+          f"schema-validated")
 
     doc = bench_doc(
-        "ddms-obs-bench/v1", quick=quick,
+        "ddms-obs-bench/v2", quick=quick,
         dims=list(dims), reps=reps,
         disabled_overhead={
             "killed_min_s": min(t_killed), "normal_min_s": min(t_normal),
@@ -935,12 +1012,27 @@ def obs_bench(out_path, quick=False, trace_out=None):
             "halo_recv_overlaps_chunk_compute": overlapped,
             "bit_identical": True,
             "trace_path": str(trace_path)},
+        stall_injection={
+            "deadline_s": wd_deadline, "detect_s": detect_s,
+            "lane": rpt["lane"],
+            "flight_dump": [os.path.basename(p)
+                            for p in rpt["flight_dump"]],
+            "released_run_bit_identical": True,
+            "gated": not quick},
+        exposition={
+            "families": len(families),
+            "service_families": sorted(f for f in families
+                                       if f.startswith("service_")),
+            "latency_count":
+                lat["service_request_latency_s_count"]},
+        flight={"event_count": flight_mod.default_recorder().event_count(),
+                "capacity": flight_mod.DEFAULT_CAPACITY},
         global_metrics=gm,
         service_stats=service_stats)
     write_bench(out_path, doc)
     print(f"wrote {out_path}: overhead={overhead*100:.2f}% "
           f"(gate 3%{'' if not quick else ', not gated in quick mode'}), "
-          f"{len(names)} threads, "
+          f"{len(names)} threads, stall detect={detect_s*1e3:.0f}ms, "
           f"service p50 latency="
           f"{service_stats['metrics']['request_latency_s']['p50']*1e3:.1f}ms")
     if not quick:

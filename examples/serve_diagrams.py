@@ -5,10 +5,13 @@ out-of-core ``FunctionSource``, and ``TopoRequest``s carrying
 persistence-simplification options — then repeats the burst in *wire*
 mode, where every future resolves to a serialized ``DiagramResult``
 payload (the versioned DDMS format) instead of a live object, exactly
-what an RPC front would ship.  The final act is the cached serving
-layer (``repro.cache``): a warm-cache hit answered from a stored wire
+what an RPC front would ship.  Next, the cached serving layer
+(``repro.cache``): a warm-cache hit answered from a stored wire
 payload, and a traffic storm against an admission policy where excess
-requests degrade to bounded-error answers instead of erroring.
+requests degrade to bounded-error answers instead of erroring.  The
+final act is live observability: the storm service exposes an embedded
+Prometheus ``/metrics`` endpoint (``metrics_port=0``) which the demo
+scrapes over HTTP once and summarizes.
 
     PYTHONPATH=src python examples/serve_diagrams.py [--dims 8 8 16] \
         [--requests 12]
@@ -16,6 +19,7 @@ requests degrade to bounded-error answers instead of erroring.
 import argparse
 import sys
 import time
+import urllib.request
 
 sys.path.insert(0, "src")
 
@@ -23,6 +27,7 @@ import numpy as np  # noqa: E402
 
 from repro.cache import AdmissionPolicy, DiagramCache  # noqa: E402
 from repro.core.grid import Grid  # noqa: E402
+from repro.obs import parse_prometheus_text  # noqa: E402
 from repro.fields import make_field  # noqa: E402
 from repro.pipeline import DiagramResult, TopoRequest  # noqa: E402
 from repro.serve import TopoService  # noqa: E402
@@ -92,10 +97,24 @@ def main():
     policy = AdmissionPolicy(degrade_depth=2, shed_depth=None,
                              degrade_frac=0.10)
     with TopoService(backend="jax", cache=True, admission=policy,
-                     max_wait_s=0.0) as svc:
+                     max_wait_s=0.0, metrics_port=0) as svc:
         futs = [svc.submit(smooth + 1e-3 * s) for s in range(12)]
         storm = [ft.result() for ft in futs]
         stats = svc.stats.as_dict()
+
+        # live observability: the service embeds a Prometheus /metrics
+        # endpoint; scrape it once and validate the document shape
+        url = svc.metrics_server.url
+        body = urllib.request.urlopen(url).read().decode()
+        doc = parse_prometheus_text(body)
+        lat = doc["service_request_latency_s"]["samples"]
+        depth = doc["service_queue_depth"]["samples"]["service_queue_depth"]
+        print(f"scraped {url}: {len(doc)} metric families, "
+              f"request_latency count={lat['service_request_latency_s_count']:.0f} "
+              f"sum={lat['service_request_latency_s_sum'] * 1e3:.1f}ms, "
+              f"queue_depth={depth:.0f}")
+        assert lat["service_request_latency_s_count"] == stats["requests"]
+        assert depth == 0
     bounds = sorted({r.error_bound or 0.0 for r in storm})
     print(f"storm: {stats['requests']} served, {stats['degraded']} degraded "
           f"to bounded-error, {stats['errors']} errors; "

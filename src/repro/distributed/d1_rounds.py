@@ -41,6 +41,7 @@ from repro.core.critical import CriticalInfo
 from repro.core.gradient import GradientField
 from repro.core.grid import Grid
 from repro.core.saddle_saddle import SaddleSaddlePairs, _tri_boundary
+from repro.obs import watchdog as _watchdog
 from repro.obs.metrics import global_metrics
 from repro.obs.trace import current_trace, maybe_span
 
@@ -224,6 +225,7 @@ def d1_distributed(grid: Grid, gf: GradientField, ci: CriticalInfo,
     tr = current_trace()   # grabbed once: the loop runs on one thread
     while True:
         stats.rounds += 1
+        _watchdog.progress("pairing.d1")    # round heartbeat
         with maybe_span(tr, "d1_round", round=stats.rounds):
             # ---- apply messages (deterministic order), refresh gmax ----
             for blk in blocks:

@@ -46,6 +46,7 @@ import numpy as np
 from repro.core.extremum_graph import ExtremumGraph
 from repro.core.pairing import ExtremaPairs
 from repro.core.tracing import OMEGA
+from repro.obs import watchdog as _watchdog
 from repro.obs.metrics import global_metrics
 from repro.obs.trace import current_trace, maybe_span
 
@@ -100,6 +101,7 @@ def pairing_fixpoint(g: ExtremumGraph,
     tr = current_trace()   # grabbed once: the loop runs on one thread
     while True:
         stats.rounds += 1
+        _watchdog.progress("pairing.d0")    # round heartbeat
         with maybe_span(tr, "d0_round", round=stats.rounds):
             # --- age-filtered find, all triplets in parallel ------------
             cur = np.stack([c0, c1], axis=1)  # (n,2)

@@ -40,6 +40,7 @@ from repro.core import grid as G
 from repro.kernels import ref as REF
 from repro.kernels.lower_star import (fused_rows_from_halo_volume,
                                       lower_star_gradient_pallas)
+from repro.obs import flight as _flight
 from .order import rankfree_keys, sample_sort_ranks
 
 OMEGA = -2
@@ -638,7 +639,9 @@ def run_front(dims, f, n_blocks: int, mesh=None, **cfg_kw):
     out = {k: np.asarray(v) for k, v in out.items()}
     peak = int(out["crit_peak"])
     if peak > cfg.crit_capacity:
-        raise CritCapacityError(peak, cfg.crit_capacity, cfg.dims, n_blocks)
+        err = CritCapacityError(peak, cfg.crit_capacity, cfg.dims, n_blocks)
+        _flight.crash_dump("crit_capacity", exc=err)
+        raise err
     return cfg, out
 
 

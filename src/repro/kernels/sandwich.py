@@ -63,6 +63,7 @@ from repro.core.pairing import ExtremaPairs
 from repro.core.saddle_saddle import SaddleSaddlePairs
 from repro.core.tracing import OMEGA, resolve_chase, resolve_doubling, \
     tet_successors
+from repro.obs import flight as _flight
 from repro.obs.metrics import global_metrics
 from repro.obs.trace import current_trace, maybe_span
 
@@ -486,11 +487,13 @@ def _pair_d1_burst(grid: Grid, pair_up1: np.ndarray, is_c1: np.ndarray,
                         heapq.heappush(h, (-int(erank[f]), f))
                 continue
             if not is_c1[e]:
-                raise GradientInvariantError(
+                err = GradientInvariantError(
                     f"D1 propagation reached edge sid {e}, which is "
                     f"neither gradient-paired upward nor an unpaired "
                     f"critical edge: a 1-cycle's highest edge must be "
                     f"positive — the gradient field is inconsistent")
+                _flight.crash_dump("gradient_invariant", exc=err)
+                raise err
             holder = claim.get(e)
             if holder is None:
                 claim[e] = g
@@ -611,11 +614,13 @@ def pair_saddle_saddle_wavefront(grid: Grid, gf: GradientField,
                 bad = ~is_c1[piv[crit]]
                 if bad.any():
                     e = int(piv[crit][bad][0])
-                    raise GradientInvariantError(
+                    err = GradientInvariantError(
                         f"D1 propagation reached edge sid {e}, which is "
                         f"neither gradient-paired upward nor an unpaired "
                         f"critical edge: a 1-cycle's highest edge must be "
                         f"positive — the gradient field is inconsistent")
+                    _flight.crash_dump("gradient_invariant", exc=err)
+                    raise err
                 # -- critical pivots: merge / contest ------------------
                 crit_rows = idx[crit]
                 cpiv = piv[crit]

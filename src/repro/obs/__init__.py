@@ -1,4 +1,5 @@
-"""Process-wide observability: span tracing + metrics registry.
+"""Process-wide observability: tracing, metrics, flight recorder,
+stall watchdog, and metrics exposition.
 
 - :mod:`repro.obs.trace`   — nested, thread-aware spans recorded into
   per-thread buffers and exported as Chrome/Perfetto ``trace_event``
@@ -7,17 +8,43 @@
   rounds all land on one timeline.  ``TopoRequest(trace=True)``
   activates it for one pipeline run.
 - :mod:`repro.obs.metrics` — named counters, gauges, and streaming
-  log-bucket histograms (p50/p95/p99 without per-sample storage):
-  bytes moved, chunks prefetched, pairing rounds, plan-cache
-  hits/evictions, and the ``TopoService`` queue/batch/latency stats
-  surfaced by ``TopoService.stats()``.
+  log-bucket histograms (p50/p95/p99 without per-sample storage, plus
+  cumulative Prometheus-style buckets): bytes moved, chunks
+  prefetched, pairing rounds, plan-cache hits/evictions, and the
+  ``TopoService`` queue/batch/latency stats surfaced by
+  ``TopoService.stats()``.
+- :mod:`repro.obs.flight`  — the always-on post-mortem layer: every
+  span/instant also lands in per-thread fixed-capacity ring buffers
+  (no trace needed), dumped as a Perfetto JSON tail + text post-mortem
+  on halo timeouts, gradient/capacity invariant errors, unhandled
+  worker exceptions, watchdog stalls, and ``SIGUSR1``.
+- :mod:`repro.obs.watchdog` — progress lanes fed by cheap
+  ``progress(name)`` heartbeats from the chunk/halo/pairing loops; an
+  armed lane quiet past its deadline produces a structured stall
+  report (lane, beat counters, queue depths, thread stacks) and fires
+  a flight dump.
+- :mod:`repro.obs.exposition` — Prometheus text rendering of any
+  registry, the ``serve_metrics``/``MetricsServer`` scrape endpoint
+  (embedded in ``TopoService(metrics_port=...)``), and the periodic
+  ``SnapshotLogger``.
+
+``set_enabled(False)`` is the one kill switch: it silences tracing,
+the flight recorder, *and* watchdog heartbeats.
 
 See docs/observability.md for the span model, the metric-name table,
-and the Perfetto how-to.
+the post-mortem walkthrough, and the Perfetto/Prometheus how-tos.
 """
 
 from .metrics import (Counter, Gauge, Histogram,  # noqa: F401
                       MetricsRegistry, global_metrics)
 from .trace import (Span, Trace, current_trace,  # noqa: F401
-                    maybe_span, set_enabled, spans_overlap,
+                    is_enabled, maybe_span, set_enabled, spans_overlap,
                     thread_names, trace_active, validate_trace_events)
+from .flight import (FlightRecorder, crash_dump,  # noqa: F401
+                     default_recorder, dump_on_error, install_signal_dump,
+                     record_event, set_dump_dir, thread_stacks)
+from .watchdog import (ProgressWatchdog, active_watchdog,  # noqa: F401
+                       format_stall_report, lane, progress)
+from .exposition import (MetricsServer, SnapshotLogger,  # noqa: F401
+                         parse_prometheus_text, prometheus_name,
+                         render_prometheus, serve_metrics)

@@ -177,6 +177,24 @@ class Histogram:
             cum += c
         return vmax
 
+    def buckets(self) -> list:
+        """Cumulative ``(upper_edge, count)`` pairs — Prometheus ``le``
+        semantics: entry ``i`` counts every observation that landed at
+        or below bucket ``i``'s upper edge, and the final entry is
+        ``(inf, total)``.  The exposition layer
+        (:mod:`repro.obs.exposition`) renders these as the
+        ``_bucket{le=...}`` series."""
+        with self._lock:
+            counts = list(self._counts)
+            total = self._count
+        out = []
+        cum = 0
+        for i, c in enumerate(counts[:-1]):
+            cum += c
+            out.append((self._edges(i)[1], cum))
+        out.append((math.inf, total))
+        return out
+
     def snapshot(self) -> dict:
         with self._lock:
             count, s = self._count, self._sum
@@ -196,13 +214,20 @@ class MetricsRegistry:
     ``counter(name)`` / ``gauge(name)`` / ``histogram(name)`` return
     the live instrument (get-or-create, kind-checked); ``snapshot()``
     returns a plain nested dict — a *copy*, never a view of registry
-    state."""
+    state.
+
+    ``alias=`` is the one naming-compatibility helper: it registers
+    the **same instrument** under a second (legacy) name, so a metric
+    renamed into the canonical dotted scheme (``service.queue_depth``)
+    keeps answering under its historical key (``queue_depth``) in
+    snapshots and exposition — one value, two names, updated through
+    one instrument."""
 
     def __init__(self):
         self._metrics: Dict[str, object] = {}
         self._lock = threading.Lock()
 
-    def _get(self, name: str, cls, **kw):
+    def _get(self, name: str, cls, alias: Optional[str] = None, **kw):
         m = self._metrics.get(name)
         if m is None:
             with self._lock:
@@ -210,28 +235,40 @@ class MetricsRegistry:
                 if m is None:
                     m = cls(name, **kw)
                     self._metrics[name] = m
+                    if alias and alias not in self._metrics:
+                        self._metrics[alias] = m
         if not isinstance(m, cls):
             raise TypeError(
                 f"metric {name!r} already registered as "
                 f"{type(m).__name__}, not {cls.__name__}")
         return m
 
-    def counter(self, name: str) -> Counter:
-        return self._get(name, Counter)
+    def counter(self, name: str, *, alias: Optional[str] = None) -> Counter:
+        return self._get(name, Counter, alias=alias)
 
-    def gauge(self, name: str) -> Gauge:
-        return self._get(name, Gauge)
+    def gauge(self, name: str, *, alias: Optional[str] = None) -> Gauge:
+        return self._get(name, Gauge, alias=alias)
 
     def histogram(self, name: str, *, lo: float = 1e-6, hi: float = 1e4,
-                  factor: float = 1.6) -> Histogram:
-        return self._get(name, Histogram, lo=lo, hi=hi, factor=factor)
+                  factor: float = 1.6,
+                  alias: Optional[str] = None) -> Histogram:
+        return self._get(name, Histogram, alias=alias, lo=lo, hi=hi,
+                         factor=factor)
+
+    def instruments(self) -> Dict[str, object]:
+        """name -> live instrument, aliases included (a fresh dict; the
+        instruments themselves are the live objects — this is the
+        exposition layer's typed access path)."""
+        with self._lock:
+            return dict(self._metrics)
 
     def snapshot(self) -> Dict[str, object]:
         """Fresh name -> value/summary dict (counters and gauges as
-        scalars, histograms as their summary dicts)."""
+        scalars, histograms as their summary dicts); aliased names each
+        carry the shared instrument's current value."""
         with self._lock:
-            metrics = list(self._metrics.values())
-        return {m.name: m.snapshot() for m in metrics}
+            metrics = list(self._metrics.items())
+        return {name: m.snapshot() for name, m in metrics}
 
     def reset(self) -> None:
         """Drop every instrument (tests / per-run isolation)."""

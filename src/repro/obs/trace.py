@@ -50,10 +50,26 @@ from contextlib import contextmanager
 from typing import Any, Dict, List, Optional
 
 __all__ = ["Span", "Trace", "current_trace", "trace_active",
-           "maybe_span", "set_enabled", "validate_trace_events",
-           "spans_overlap", "thread_names"]
+           "maybe_span", "set_enabled", "is_enabled",
+           "validate_trace_events", "spans_overlap", "thread_names"]
 
 _PID = 1          # single-process runs: one constant pid lane
+
+# Trace(sink=DEFAULT_SINK): resolve to the process flight recorder at
+# record time (respecting the kill switch); None disables the feed
+DEFAULT_SINK = object()
+
+_FLIGHT = None    # lazily imported repro.obs.flight (avoids the cycle)
+
+
+def _flight_active():
+    """The active flight recorder, or None (kill switch off).  Lazy
+    import: ``repro.obs.flight`` imports this module at top level, so
+    the reverse edge resolves at first use."""
+    global _FLIGHT
+    if _FLIGHT is None:
+        from . import flight as _FLIGHT  # noqa: F811 - module cache
+    return _FLIGHT.active_recorder()
 
 
 class Span:
@@ -101,11 +117,20 @@ class Trace:
     meant for after the run — concurrent readers see a consistent
     prefix of each thread's spans."""
 
-    def __init__(self):
+    def __init__(self, sink=DEFAULT_SINK):
         self.epoch = time.perf_counter()
         self._local = threading.local()
         self._bufs: List[_ThreadBuf] = []
         self._lock = threading.Lock()
+        # every closed span/instant is also fed to ``sink`` — by
+        # default the process flight recorder (resolved per record so
+        # the kill switch applies live); an explicit FlightRecorder
+        # pins one, None opts out
+        self.sink = sink
+
+    def _sink(self):
+        s = self.sink
+        return _flight_active() if s is DEFAULT_SINK else s
 
     # -- recording ---------------------------------------------------------
 
@@ -134,6 +159,9 @@ class Trace:
             yield sp
         finally:
             sp.dur = time.perf_counter() - t0
+            rec = self._sink()
+            if rec is not None:
+                rec.record(name, t0, sp.dur, sp.args or None)
 
     def complete(self, name: str, t0: float, **attrs) -> Span:
         """Record an already-measured interval: started at
@@ -144,13 +172,20 @@ class Trace:
         sp = Span(name, t0 - self.epoch, buf.tid, attrs)
         sp.dur = time.perf_counter() - t0
         buf.spans.append(sp)
+        rec = self._sink()
+        if rec is not None:
+            rec.record(name, t0, sp.dur, sp.args or None)
         return sp
 
     def instant(self, name: str, **attrs) -> Span:
         """Record a zero-duration marker on the calling thread."""
         buf = self._buf()
-        sp = Span(name, time.perf_counter() - self.epoch, buf.tid, attrs)
+        t0 = time.perf_counter()
+        sp = Span(name, t0 - self.epoch, buf.tid, attrs)
         buf.spans.append(sp)
+        rec = self._sink()
+        if rec is not None:
+            rec.record(name, t0, 0.0, sp.args or None)
         return sp
 
     # -- reading / export --------------------------------------------------
@@ -169,12 +204,18 @@ class Trace:
         return out
 
     def to_dict(self) -> dict:
-        """Chrome/Perfetto ``trace_event`` JSON object format."""
+        """Chrome/Perfetto ``trace_event`` JSON object format.
+
+        Spans are snapshotted *before* thread metadata: a thread that
+        registers its buffer mid-export can add a name the span list
+        does not reference yet (harmless), but never a span whose tid
+        lacks a ``thread_name`` metadata event."""
+        spans = self.events()
         ev: List[dict] = []
         for tid, name in sorted(self.thread_names().items()):
             ev.append({"name": "thread_name", "ph": "M", "pid": _PID,
                        "tid": tid, "args": {"name": name}})
-        for sp in self.events():
+        for sp in spans:
             ev.append({"name": sp.name, "ph": "X", "pid": _PID,
                        "tid": sp.tid, "ts": sp.ts * 1e6,
                        "dur": sp.dur * 1e6, "cat": "repro",
@@ -208,11 +249,19 @@ _ENABLED = True
 
 
 def set_enabled(flag: bool) -> None:
-    """Process-wide kill switch: with ``False``, :func:`current_trace`
-    reports no active trace even inside an activation window (the
-    baseline the disabled-overhead benchmark measures against)."""
+    """Process-wide kill switch for the whole obs layer: with
+    ``False``, :func:`current_trace` reports no active trace even
+    inside an activation window, the flight recorder stops receiving
+    events (``flight.active_recorder()`` is None), and watchdog
+    heartbeats (``watchdog.progress``/``lane``) become pure no-ops —
+    the baseline the disabled-overhead benchmark measures against."""
     global _ENABLED
     _ENABLED = bool(flag)
+
+
+def is_enabled() -> bool:
+    """Current state of the obs kill switch."""
+    return _ENABLED
 
 
 def current_trace() -> Optional[Trace]:
@@ -229,14 +278,24 @@ def current_trace() -> Optional[Trace]:
 
 @contextmanager
 def maybe_span(trace: Optional[Trace], name: str, **attrs):
-    """``trace.span(...)`` when ``trace`` is a Trace, a no-op context
-    (yielding None) otherwise — the one-liner instrumented loops use so
-    the untraced path stays branch-cheap."""
-    if trace is None:
+    """``trace.span(...)`` when ``trace`` is a Trace; otherwise the
+    interval is still timed into the process **flight recorder** (the
+    always-on last-N-events tail — see :mod:`repro.obs.flight`) unless
+    the kill switch is off, in which case this is a no-op yielding
+    None — the one-liner instrumented loops use on every path."""
+    if trace is not None:
+        with trace.span(name, **attrs) as sp:
+            yield sp
+        return
+    rec = _flight_active()
+    if rec is None:
         yield None
         return
-    with trace.span(name, **attrs) as sp:
-        yield sp
+    t0 = time.perf_counter()
+    try:
+        yield None
+    finally:
+        rec.record(name, t0, time.perf_counter() - t0, attrs or None)
 
 
 @contextmanager

@@ -38,6 +38,7 @@ from typing import Dict, List, Optional
 
 import numpy as np
 
+from repro.obs import flight as _flight
 from repro.obs.trace import Trace, current_trace
 
 from repro.core.critical import CriticalInfo
@@ -93,11 +94,15 @@ class StageReport:
         r = self.child(name)
         tr = self.trace
         if tr is None:
+            # untraced runs still feed the always-on flight recorder so a
+            # post-mortem dump shows which stage the process died in
             t0 = time.perf_counter()
             try:
                 yield r
             finally:
-                r.seconds += time.perf_counter() - t0
+                dt = time.perf_counter() - t0
+                r.seconds += dt
+                _flight.record_event(name, t0, dt, r.counters or None)
             return
         with tr.span(name) as sp:
             t0 = time.perf_counter()

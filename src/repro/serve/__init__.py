@@ -1,6 +1,9 @@
 from repro.cache import (AdmissionPolicy, DiagramCache,  # noqa: F401
                          ServiceOverloadedError)
 
+from repro.obs.exposition import (MetricsServer,  # noqa: F401
+                                  serve_metrics)
+
 from .engine import (generate, serve_topo, stats_payload,  # noqa: F401
                      topo_payload)
 from .topo_service import (ProgressiveFuture, ServiceStats,  # noqa: F401

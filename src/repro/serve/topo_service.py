@@ -58,7 +58,10 @@ from repro.cache import (AdmissionPolicy, CacheKeyError, DiagramCache,
                          ServiceOverloadedError, degrade_request)
 from repro.cache.admission import DEGRADE, SHED
 from repro.core.grid import Grid
-from repro.obs.metrics import MetricsRegistry
+from repro.obs import flight as _flight
+from repro.obs import watchdog as _watchdog
+from repro.obs.exposition import serve_metrics
+from repro.obs.metrics import MetricsRegistry, global_metrics
 from repro.pipeline import (DiagramResult, PersistencePipeline,
                             PipelineResult, TopoRequest)  # noqa: F401
 
@@ -206,6 +209,11 @@ class TopoService:
         submit time (degrade deadline-less requests under pressure,
         shed past the hard threshold), or None (default) to admit
         everything.
+    metrics_port : when not None, start an embedded Prometheus scrape
+        endpoint (``repro.obs.exposition``) exposing the service's
+        private registry plus the process-global one; ``0`` binds a
+        free port — read ``svc.metrics_server.url``.  Closed with the
+        service.
     """
 
     def __init__(self, pipeline: Optional[PersistencePipeline] = None, *,
@@ -213,6 +221,7 @@ class TopoService:
                  wire: bool = False,
                  cache: Union[DiagramCache, bool, None] = None,
                  admission: Optional[AdmissionPolicy] = None,
+                 metrics_port: Optional[int] = None,
                  **pipeline_kw):
         if max_batch < 1:
             raise ValueError(f"max_batch must be >= 1, got {max_batch}")
@@ -233,15 +242,28 @@ class TopoService:
         # inc/dec under the submit lock + in the worker: a set(qsize())
         # outside the lock could run after the worker drained and leave
         # the gauge stale/backwards
-        self._m_depth = self._metrics.gauge("queue_depth")
-        self._m_batch = self._metrics.histogram("batch_size", lo=1.0,
+        # canonical dotted names, with the pre-exposition flat names as
+        # aliases of the SAME instruments (snapshot()/stats() show both)
+        self._m_depth = self._metrics.gauge("service.queue_depth",
+                                            alias="queue_depth")
+        self._m_batch = self._metrics.histogram("service.batch_size",
+                                                alias="batch_size", lo=1.0,
                                                 hi=4096.0, factor=2.0)
-        self._m_latency = self._metrics.histogram("request_latency_s")
-        self._m_hits = self._metrics.counter("cache.hits")
-        self._m_misses = self._metrics.counter("cache.misses")
-        self._m_degraded = self._metrics.counter("admission.degraded")
-        self._m_shed = self._metrics.counter("admission.shed")
+        self._m_latency = self._metrics.histogram(
+            "service.request_latency_s", alias="request_latency_s")
+        self._m_hits = self._metrics.counter("service.cache.hits",
+                                             alias="cache.hits")
+        self._m_misses = self._metrics.counter("service.cache.misses",
+                                               alias="cache.misses")
+        self._m_degraded = self._metrics.counter(
+            "service.admission.degraded", alias="admission.degraded")
+        self._m_shed = self._metrics.counter("service.admission.shed",
+                                             alias="admission.shed")
         self.stats = ServiceStats(metrics=self._metrics, cache=cache)
+        self.metrics_server = None
+        if metrics_port is not None:
+            self.metrics_server = serve_metrics(
+                [self._metrics, global_metrics()], port=metrics_port)
         self._queue: "queue.Queue[Optional[_Request]]" = queue.Queue()
         self._closed = False
         self._lock = threading.Lock()  # orders submits vs the close sentinel
@@ -330,6 +352,8 @@ class TopoService:
             self._closed = True
             self._queue.put(None)  # under the lock: nothing lands after it
         self._worker.join()
+        if self.metrics_server is not None:
+            self.metrics_server.close()
 
     def __enter__(self) -> "TopoService":
         return self
@@ -376,10 +400,16 @@ class TopoService:
             reqs = [r for r in batch if r is not None]
             if reqs:
                 try:
-                    self._serve(reqs)
+                    # armed only while a batch is actually being served:
+                    # an idle service is quiet by design, not stalled
+                    with _watchdog.lane("service.worker",
+                                        metrics=self._metrics):
+                        self._serve(reqs)
                 except BaseException as e:  # the worker must outlive ANY
                     # request failure: fail whatever is still unresolved
                     # and keep draining the queue
+                    _flight.crash_dump(
+                        f"service.worker:{type(e).__name__}", exc=e)
                     for r in reqs:
                         if self._fail_request(r, e):
                             self.stats.errors += 1
@@ -473,6 +503,7 @@ class TopoService:
 
     def _serve_one(self, r: _Request) -> None:
         """Answer a single request through the one resolver."""
+        _watchdog.progress("service.worker")
         try:
             res = self.pipeline.run(r.req)
         except Exception as e:
@@ -493,6 +524,7 @@ class TopoService:
         try:
             last = None
             for res in refine(self.pipeline, r.req):
+                _watchdog.progress("service.worker")
                 last = self._payload(res)
                 r.future.partials.append(last)
                 _resolve(r.future.preview, last)
@@ -528,6 +560,7 @@ class TopoService:
         for r in reqs:
             groups.setdefault(r.group_key, []).append(r)
         for group in groups.values():
+            _watchdog.progress("service.worker")
             self.stats.batches += 1
             if group[0].progressive:
                 self.stats.progressive_requests += len(group)

@@ -42,6 +42,8 @@ import numpy as np
 
 from repro.core import gradient as GR
 from repro.core.grid import Grid
+from repro.obs import flight as _flight
+from repro.obs import watchdog as _watchdog
 from repro.obs.metrics import global_metrics
 from repro.obs.trace import maybe_span
 
@@ -198,11 +200,17 @@ def stream_front(source: FieldSource, *, kernel: str = "jax",
         return slab, time.perf_counter() - t0
 
     t_wall = time.perf_counter()
-    with ThreadPoolExecutor(max_workers=1,
-                            thread_name_prefix="stream-loader") as pool:
+    # a loader-thread failure surfaces at fut.result(): any escaping
+    # exception leaves a flight dump, and the chunk loop beats a
+    # watchdog lane so a silent wedge (a blocking source) gets named
+    with _flight.dump_on_error("stream.scheduler"), \
+            _watchdog.lane("stream.chunks"), \
+            ThreadPoolExecutor(max_workers=1,
+                               thread_name_prefix="stream-loader") as pool:
         res.add(chunks[0].load_bytes(grid.dims))
         fut = pool.submit(load, chunks[0])
         for i, c in enumerate(chunks):
+            _watchdog.progress("stream.chunks")
             slab, dt = fut.result()
             rep.load_s += dt
             rep.total_loaded_bytes += slab.nbytes

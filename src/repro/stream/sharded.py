@@ -49,6 +49,8 @@ import numpy as np
 
 from repro.core import gradient as GR
 from repro.core.grid import Grid
+from repro.obs import flight as _flight
+from repro.obs import watchdog as _watchdog
 from repro.obs.metrics import global_metrics
 from repro.obs.trace import maybe_span
 
@@ -83,6 +85,7 @@ class HaloExchange:
         ev, _ = slot = self._slots[(shard, side)]
         slot[1] = np.asarray(plane_keys, np.int64)
         ev.set()
+        _watchdog.progress("halo.publish")
 
     def recv(self, shard: int, side: str,
              timeout: float = _HALO_TIMEOUT_S, *,
@@ -92,15 +95,24 @@ class HaloExchange:
 
         ``waiter``/``plane_z`` are diagnostics only: on timeout the
         error names who was waiting, which neighbor never published,
-        and which ghost plane the wait was for."""
+        and which ghost plane the wait was for.  The wait itself runs
+        under an armed watchdog lane (``halo.recv.shard<s>.<side>``)
+        when a watchdog is live, so a delayed plane is *named* before
+        the much longer hard timeout fires; the hard timeout also
+        triggers a flight-recorder dump."""
         ev, _ = self._slots[(shard, side)]
-        if not ev.wait(timeout):
+        with _watchdog.lane(f"halo.recv.shard{shard}.{side}"):
+            ok = ev.wait(timeout)
+        _watchdog.progress("halo.recv")
+        if not ok:
             who = "" if waiter is None else f"shard {waiter} waiting: "
             where = "" if plane_z is None else f" (ghost plane z={plane_z})"
-            raise HaloExchangeTimeout(
+            err = HaloExchangeTimeout(
                 f"{who}no {side!r} boundary plane from shard {shard}"
                 f"{where} after {timeout:.0f}s — did the neighbor worker "
                 f"die?")
+            _flight.crash_dump("halo_exchange_timeout", exc=err)
+            raise err
         return self._slots[(shard, side)][1]
 
 
@@ -160,6 +172,14 @@ def sharded_stream_front(source: FieldSource, n_shards: int, *,
     tr = getattr(stage_report, "trace", None)
 
     def worker(s: int) -> dict:
+        # any escaping worker exception (a loader-thread failure
+        # surfaces here through fut.result()) leaves a flight dump; the
+        # watchdog lane names this shard if its chunk loop goes quiet
+        with _flight.dump_on_error(f"stream.sharded.shard{s}"), \
+                _watchdog.lane(f"stream.shard{s}"):
+            return run_shard(s)
+
+    def run_shard(s: int) -> dict:
         z0, z1 = shards[s]
         chunks = shard_chunks[s]
         st = dict(shard=s, z0=z0, z1=z1, n_chunks=len(chunks),
@@ -231,6 +251,7 @@ def sharded_stream_front(source: FieldSource, n_shards: int, *,
                 r.add(chunks[0].load_bytes(grid.dims))
             fut = pool.submit(load, chunks[0])
             for i, c in enumerate(chunks):
+                _watchdog.progress(f"stream.shard{s}")
                 t0 = time.perf_counter()
                 slab, halo_lo, halo_hi, load_dt, recv_dt = fut.result()
                 block_dt = time.perf_counter() - t0

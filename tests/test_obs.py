@@ -95,6 +95,45 @@ class TestTrace:
         validate_trace_events(reread)
         assert thread_names(reread) == tr.thread_names()
 
+    def test_export_under_concurrent_late_thread_registration(self):
+        """Exporting while new threads register their first span must
+        never emit a span whose tid lacks a ``thread_name`` metadata
+        event (spans are snapshotted before thread metadata)."""
+        tr = Trace()
+        stop = threading.Event()
+        started = threading.Event()
+
+        def late_joiners():
+            # a stream of short-lived threads, each registering a fresh
+            # buffer mid-export
+            k = 0
+            while not stop.is_set():
+                def one(k=k):
+                    with tr.span(f"late{k}"):
+                        pass
+                t = threading.Thread(target=one, name=f"late-{k}")
+                t.start()
+                t.join()
+                started.set()
+                k += 1
+
+        spawner = threading.Thread(target=late_joiners)
+        spawner.start()
+        try:
+            assert started.wait(5.0)
+            for _ in range(50):         # race the exporter against them
+                doc = tr.to_dict()
+                named = {e["tid"] for e in doc["traceEvents"]
+                         if e["ph"] == "M" and e["name"] == "thread_name"}
+                span_tids = {e["tid"] for e in doc["traceEvents"]
+                             if e["ph"] == "X"}
+                assert span_tids <= named, \
+                    f"spans on unnamed tids: {span_tids - named}"
+        finally:
+            stop.set()
+            spawner.join()
+        validate_trace_events(tr.to_dict())
+
     def test_validator_rejects_partial_overlap(self):
         bad = {"traceEvents": [
             {"name": "a", "ph": "X", "pid": 1, "tid": 1, "ts": 0.0,

@@ -1,0 +1,284 @@
+"""Tests for the stall watchdog (repro.obs.watchdog).
+
+The contract: armed lanes that go quiet past their deadline produce a
+structured stall report naming the lane (plus beat counters, metrics,
+flight tail, and thread stacks) and fire a flight dump; passive lanes
+(auto-created by stray beats) never alarm; recovered lanes re-arm for
+the next episode; a clean instrumented run raises no reports and the
+diagrams stay bit-identical."""
+
+import os
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.obs import (ProgressWatchdog, active_watchdog,
+                       format_stall_report, lane, progress, set_dump_dir,
+                       set_enabled)
+from repro.obs import flight as flight_mod
+from repro.stream import ArraySource, HaloExchange, HaloExchangeTimeout
+
+
+@pytest.fixture(autouse=True)
+def _watchdog_env(tmp_path):
+    set_dump_dir(tmp_path)
+    flight_mod._LAST_DUMP.clear()
+    yield tmp_path
+    set_dump_dir(None)
+    set_enabled(True)
+    assert active_watchdog() is None    # no test may leak a live watchdog
+
+
+def _wait_for(predicate, timeout_s=10.0):
+    deadline = time.monotonic() + timeout_s
+    while time.monotonic() < deadline:
+        if predicate():
+            return True
+        time.sleep(0.01)
+    return False
+
+
+def _dumped(tmp_path, tag):
+    return [p for p in os.listdir(tmp_path) if tag in p]
+
+
+# --------------------------------------------------------------------------
+# lane mechanics
+# --------------------------------------------------------------------------
+
+class TestLanes:
+    def test_armed_lane_quiet_past_deadline_fires_named_report(self):
+        wd = ProgressWatchdog(deadline_s=0.05, poll_s=10.0,
+                              flight_dump=False)
+        with wd:
+            wd.register("pairing.d0")
+            time.sleep(0.12)
+            fired = wd.check_now()
+        assert [r["lane"] for r in fired] == ["pairing.d0"]
+        rpt = fired[0]
+        assert rpt["quiet_s"] > rpt["deadline_s"] == 0.05
+        assert "pairing.d0" in rpt["lanes"]
+        assert "metrics" in rpt and "threads" in rpt
+        assert any("TestLanes" in s or "check_now" in s
+                   for s in rpt["threads"].values())
+
+    def test_beating_lane_never_fires(self):
+        wd = ProgressWatchdog(deadline_s=0.08, poll_s=0.02,
+                              flight_dump=False)
+        with wd:
+            with lane("busy"):
+                for _ in range(10):
+                    progress("busy")
+                    time.sleep(0.01)
+            assert wd.reports == []
+
+    def test_passive_lane_from_stray_beat_never_alarms(self):
+        wd = ProgressWatchdog(deadline_s=0.03, poll_s=10.0,
+                              flight_dump=False)
+        with wd:
+            progress("halo.publish")     # no lane registered: passive
+            time.sleep(0.08)
+            assert wd.check_now() == []
+            st = wd.lanes()["halo.publish"]
+            assert st["armed"] is False and st["beats"] == 1
+
+    def test_recovered_lane_rearms_one_report_per_episode(self):
+        wd = ProgressWatchdog(deadline_s=0.04, poll_s=10.0,
+                              flight_dump=False)
+        with wd:
+            wd.register("loop")
+            time.sleep(0.1)
+            assert len(wd.check_now()) == 1     # episode 1
+            assert wd.check_now() == []         # still quiet: no repeat
+            progress("loop")                    # recovery
+            assert wd.check_now() == []         # re-armed, not yet quiet
+            time.sleep(0.1)
+            assert len(wd.check_now()) == 1     # episode 2
+        assert len(wd.reports) == 2
+
+    def test_lane_context_unregisters_on_exit(self):
+        wd = ProgressWatchdog(deadline_s=0.02, poll_s=10.0,
+                              flight_dump=False)
+        with wd:
+            with lane("scoped") as ln:
+                assert ln is not None and "scoped" in wd.lanes()
+            assert "scoped" not in wd.lanes()
+            time.sleep(0.06)
+            assert wd.check_now() == []   # gone lanes cannot alarm
+
+    def test_stall_fires_flight_dump_and_on_stall(self, _watchdog_env):
+        seen = []
+        wd = ProgressWatchdog(deadline_s=0.03, poll_s=10.0,
+                              on_stall=seen.append)
+        with wd:
+            wd.register("wedged")
+            time.sleep(0.08)
+            (rpt,) = wd.check_now()
+        assert seen == [rpt]
+        assert rpt["flight_dump"] is not None
+        assert all(os.path.exists(p) for p in rpt["flight_dump"])
+        assert _dumped(_watchdog_env, "stall_wedged")
+
+    def test_poll_thread_detects_without_check_now(self):
+        wd = ProgressWatchdog(deadline_s=0.05, poll_s=0.02,
+                              flight_dump=False)
+        with wd:
+            wd.register("sleepy")
+            assert _wait_for(lambda: wd.reports, timeout_s=5.0)
+        assert wd.reports[0]["lane"] == "sleepy"
+
+    def test_kill_switch_makes_hooks_noops(self):
+        wd = ProgressWatchdog(deadline_s=0.05, poll_s=10.0,
+                              flight_dump=False)
+        with wd:
+            set_enabled(False)
+            try:
+                progress("ghost")
+                with lane("ghost2") as ln:
+                    assert ln is None
+                assert wd.lanes() == {}
+            finally:
+                set_enabled(True)
+
+    def test_nested_watchdogs_restore_previous(self):
+        a = ProgressWatchdog(deadline_s=1.0, poll_s=10.0)
+        b = ProgressWatchdog(deadline_s=1.0, poll_s=10.0)
+        with a:
+            assert active_watchdog() is a
+            with b:
+                assert active_watchdog() is b
+            assert active_watchdog() is a
+        assert active_watchdog() is None
+
+    def test_bad_deadline_rejected(self):
+        with pytest.raises(ValueError):
+            ProgressWatchdog(deadline_s=0.0)
+
+    def test_format_stall_report_renders(self):
+        wd = ProgressWatchdog(deadline_s=0.02, poll_s=10.0,
+                              flight_dump=False)
+        with wd:
+            wd.register("render.me")
+            progress("extra.lane")
+            time.sleep(0.06)
+            (rpt,) = wd.check_now()
+        txt = format_stall_report(rpt)
+        assert "watchdog stall report" in txt
+        assert "render.me" in txt and "STALLED" in txt
+        assert "extra.lane" in txt and "passive" in txt
+        assert "thread stacks" in txt
+
+
+# --------------------------------------------------------------------------
+# fault injection: halo planes
+# --------------------------------------------------------------------------
+
+class TestHaloFaults:
+    def test_delayed_halo_plane_is_named_then_recovers(self):
+        """A neighbor publishing late: the armed recv lane stalls and is
+        named; the recv still completes once the plane lands."""
+        ex = HaloExchange(2)
+        plane = np.arange(5, dtype=np.int64)
+        t = threading.Timer(0.5, ex.publish, args=(1, "first", plane))
+        wd = ProgressWatchdog(deadline_s=0.08, poll_s=0.02,
+                              flight_dump=False)
+        with wd:
+            t.start()
+            got = ex.recv(1, "first", timeout=10.0, waiter=0)
+        t.join()
+        assert np.array_equal(got, plane)
+        assert wd.reports                        # stall was seen mid-wait
+        assert wd.reports[0]["lane"] == "halo.recv.shard1.first"
+
+    def test_dropped_halo_plane_stall_then_timeout_dump(self,
+                                                        _watchdog_env):
+        """A neighbor that never publishes: the watchdog names the lane
+        well before the hard timeout, which then raises and leaves its
+        own flight dump."""
+        ex = HaloExchange(2)
+        wd = ProgressWatchdog(deadline_s=0.06, poll_s=0.02)
+        with wd:
+            with pytest.raises(HaloExchangeTimeout):
+                ex.recv(0, "last", timeout=0.4, waiter=1, plane_z=3)
+            assert _wait_for(lambda: wd.reports, timeout_s=5.0)
+        assert wd.reports[0]["lane"] == "halo.recv.shard0.last"
+        assert _dumped(_watchdog_env, "halo_exchange_timeout")
+
+
+# --------------------------------------------------------------------------
+# fault injection: wedged service worker
+# --------------------------------------------------------------------------
+
+class TestServiceFaults:
+    def test_wedged_service_worker_is_named_with_queue_metrics(self):
+        from repro.serve import TopoService
+        release = threading.Event()
+        svc = TopoService(backend="np", max_batch=1)
+        orig = svc.pipeline.diagrams
+
+        def wedged(*a, **kw):
+            release.wait(15.0)
+            return orig(*a, **kw)
+
+        svc.pipeline.diagrams = wedged
+        wd = ProgressWatchdog(deadline_s=0.1, poll_s=0.03,
+                              flight_dump=False)
+        try:
+            with wd:
+                fut = svc.submit(np.zeros((4, 4), np.float32))
+                assert _wait_for(lambda: wd.reports, timeout_s=10.0)
+                release.set()
+                fut.result(timeout=30)
+            rpt = wd.reports[0]
+            assert rpt["lane"] == "service.worker"
+            # the service's private registry rides on the lane: the
+            # report shows queue depth at stall time
+            assert "service.queue_depth" in rpt["lane_metrics"]
+        finally:
+            release.set()
+            svc.close()
+
+
+# --------------------------------------------------------------------------
+# clean runs: no false positives, results untouched
+# --------------------------------------------------------------------------
+
+class TestCleanRuns:
+    def test_clean_sharded_run_no_false_positives_bit_identical(self):
+        """A healthy 32**3 4-shard streamed run under a watchful (but
+        not hair-trigger) watchdog: zero stall reports, and the diagram
+        is bit-identical to the uninstrumented run."""
+        from repro.pipeline import PersistencePipeline, TopoRequest
+        rng = np.random.default_rng(7)
+        f = rng.standard_normal((32, 32, 32)).astype(np.float32)
+        pp = PersistencePipeline(backend="jax")
+        base = pp.run(TopoRequest(field=ArraySource(f), n_blocks=4))
+        wd = ProgressWatchdog(deadline_s=30.0, poll_s=0.05)
+        with wd:
+            inst = pp.run(TopoRequest(field=ArraySource(f), n_blocks=4,
+                                      trace=True))
+        assert wd.reports == []
+        for d in base.diagram.pairs:
+            assert np.array_equal(base.diagram.pairs[d],
+                                  inst.diagram.pairs[d])
+        for d in base.diagram.essential:
+            assert np.array_equal(base.diagram.essential[d],
+                                  inst.diagram.essential[d])
+        # the shard/halo lanes actually beat during the run
+        beats = {name for r in (wd.lanes(),) for name in r}
+        assert any(n.startswith("stream.shard") or n.startswith("halo.")
+                   for n in beats)
+
+    def test_clean_service_burst_no_false_positives(self):
+        from repro.serve import TopoService
+        rng = np.random.default_rng(3)
+        fields = [rng.standard_normal((6, 6)).astype(np.float32)
+                  for _ in range(6)]
+        wd = ProgressWatchdog(deadline_s=20.0, poll_s=0.05)
+        with wd:
+            with TopoService(backend="np", max_batch=4) as svc:
+                results = svc.map(fields)
+        assert len(results) == 6
+        assert wd.reports == []
